@@ -1,0 +1,41 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+def save_json(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def road_instance(side=100, seed=0):
+    from repro.graphs import generators as gen
+    g = gen.road_like(side, seed=seed)
+    return gen.flow_improve_instance(g, seed=seed + 1)
+
+
+def grid_instance(side=48, seed=0):
+    from repro.graphs import generators as gen
+    g = gen.grid_2d(side, side, seed=seed)
+    return gen.segmentation_instance(g, (side, side), seed=seed + 1)
+
+
+def grid3d_instance(side=12, seed=0):
+    from repro.graphs import generators as gen
+    g = gen.grid_3d(side, side, side, conn=26, seed=seed)
+    return gen.segmentation_instance(g, (side, side, side), seed=seed + 1)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,51 @@
+"""Paper Table 2: per-phase times (partition / IRLS / sweep / two-level)
+and the coarsening reduction ratio |V|/|V_c|."""
+from __future__ import annotations
+
+import time
+
+from repro.core import IRLSConfig, solve, sweep_cut, two_level
+from repro.graphs import partition as gp
+
+from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
+
+
+def _one(name, inst, n_blocks=8, n_irls=50):
+    rows = {}
+    with timer() as t:
+        labels = gp.partition_kway(inst.graph, n_blocks)
+    rows["t_partition"] = t.dt
+    cfg = IRLSConfig(eps=1e-6, n_irls=n_irls, pcg_max_iters=50,
+                     n_blocks=n_blocks)
+    with timer() as t:
+        v, diag = solve(inst, cfg, labels=labels)
+    rows["t_irls"] = t.dt
+    with timer() as t:
+        rs = sweep_cut(inst, v)
+    rows["t_sweep"] = t.dt
+    with timer() as t:
+        rt = two_level(inst, v)
+    rows["t_two_level"] = t.dt
+    rows["reduction"] = rt.meta["reduction"]
+    rows["cut_sweep"] = rs.cut_value
+    rows["cut_two_level"] = rt.cut_value
+    rows["n"] = inst.n
+    rows["m"] = inst.graph.m
+    return rows
+
+
+def run():
+    out = {}
+    with timer() as tt:
+        out["road"] = _one("road", road_instance(72))
+        out["grid2d"] = _one("grid2d", grid_instance(48))
+        out["grid3d_26conn"] = _one("grid3d", grid3d_instance(10))
+    save_json("table2_phases", out)
+    rg = out["grid2d"]
+    return {
+        "name": "table2_phases",
+        "us_per_call": tt.dt * 1e6 / 3,
+        "derived": f"grid2d: irls={rg['t_irls']:.1f}s "
+                   f"two_level={rg['t_two_level']:.2f}s "
+                   f"reduction={rg['reduction']:.1f}x",
+    }

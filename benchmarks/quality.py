@@ -1,0 +1,35 @@
+"""Paper Table 4: solution quality δ = (μ − μ*)/μ* of sweep cut vs the
+two-level rounding, against the exact solver."""
+from __future__ import annotations
+
+from repro.core import IRLSConfig, max_flow, solve, sweep_cut, two_level
+
+from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
+
+
+def _one(inst):
+    cfg = IRLSConfig(eps=1e-6, n_irls=50, pcg_max_iters=50, n_blocks=8)
+    v, _ = solve(inst, cfg)
+    exact = max_flow(inst).value
+    rs = sweep_cut(inst, v)
+    rt = two_level(inst, v)
+    return {"n": inst.n,
+            "delta_sweep": (rs.cut_value - exact) / exact,
+            "delta_two_level": (rt.cut_value - exact) / exact,
+            "reduction": rt.meta["reduction"]}
+
+
+def run():
+    out = {}
+    with timer() as tt:
+        out["road"] = _one(road_instance(72))
+        out["grid2d"] = _one(grid_instance(48))
+        out["grid3d_26conn"] = _one(grid3d_instance(10))
+    save_json("table4_quality", out)
+    return {
+        "name": "table4_quality",
+        "us_per_call": tt.dt * 1e6 / 3,
+        "derived": " ".join(
+            f"{k}: sweep={v['delta_sweep']:.1e} two={v['delta_two_level']:.1e}"
+            for k, v in out.items()),
+    }

@@ -1,0 +1,56 @@
+"""§Roofline table: aggregate the dry-run JSONs into the per-(arch × cell ×
+mesh) three-term roofline report (compute / memory / collective seconds,
+dominant term, MODEL_FLOPS / HLO_FLOPs useful ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import save_json, timer
+
+DRYRUN_DIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+
+def load_records(mesh="single"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("ok") and "roofline" in r:
+            recs.append(r)
+    return recs
+
+
+def table(mesh="single"):
+    rows = []
+    for r in load_records(mesh):
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        rows.append({
+            "arch": r["arch"], "cell": r["cell"],
+            "t_compute_s": rf["t_compute"], "t_memory_s": rf["t_memory"],
+            "t_collective_s": rf["t_collective"], "dominant": rf["dominant"],
+            "useful_ratio": rf.get("useful_ratio"),
+            "model_flops": rf.get("model_flops"),
+            "peak_gib": mem.get("peak_estimate_bytes", 0) / 2 ** 30,
+            "compile_s": r.get("t_compile_s"),
+        })
+    return rows
+
+
+def run():
+    with timer() as t:
+        out = {m: table(m) for m in ("single", "multi")}
+    n_single = len(out["single"])
+    n_multi = len(out["multi"])
+    dominants = {}
+    for row in out["single"]:
+        dominants[row["dominant"]] = dominants.get(row["dominant"], 0) + 1
+    save_json("roofline_table", out)
+    return {
+        "name": "roofline_table",
+        "us_per_call": t.dt * 1e6,
+        "derived": f"cells: single={n_single} multi={n_multi} "
+                   f"dominant={dominants}",
+    }

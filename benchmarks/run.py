@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run           # all
+  PYTHONPATH=src python -m benchmarks.run fig1 table3
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark) and writes
+full JSON payloads to experiments/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import phases, polarization, quality, roofline, scaling, speedup, warm_start
+
+BENCHES = {
+    "fig1": warm_start.run,
+    "fig2": polarization.run,
+    "fig3": scaling.run,
+    "table2": phases.run,
+    "table3": speedup.run,
+    "table4": quality.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = []
+    for n in names:
+        try:
+            row = BENCHES[n]()
+            print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"",
+                  flush=True)
+        except Exception as e:  # pragma: no cover
+            failed.append(n)
+            traceback.print_exc()
+            print(f"{n},NaN,\"FAILED: {e}\"", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 3: PIRMCut total time vs the exact serial solver.
+
+The serial baseline here is our Dinic oracle (host python/numpy — the same
+role the B-K solver plays in the paper: an exact combinatorial solver on
+one core).  PIRMCut = IRLS (vectorized/XLA) + two-level rounding."""
+from __future__ import annotations
+
+from repro.core import IRLSConfig, max_flow, solve, two_level
+
+from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
+
+
+def _one(inst, n_blocks=None):
+    # block size ~512 keeps the dense block factorization O(n·bs²) — with a
+    # fixed small block COUNT the 4k-node dense Cholesky blocks dominate
+    # (the paper's p also grows with the instance: 64–128 cores)
+    if n_blocks is None:
+        n_blocks = max(8, inst.n // 512)
+    cfg = IRLSConfig(eps=1e-6, n_irls=30, pcg_max_iters=50, n_blocks=n_blocks)
+    with timer() as t_cold:              # includes jit compiles + partition
+        v, _ = solve(inst, cfg)
+        res = two_level(inst, v)
+    with timer() as t_warm:              # steady-state solve (paper regime:
+        v, _ = solve(inst, cfg)          # a SEQUENCE of related problems)
+        res = two_level(inst, v)
+    with timer() as t_exact:
+        exact = max_flow(inst)
+    delta = (res.cut_value - exact.value) / exact.value
+    return {"n": inst.n, "m": inst.graph.m,
+            "t_pirmcut_cold": t_cold.dt, "t_pirmcut": t_warm.dt,
+            "t_exact_serial": t_exact.dt,
+            "speedup": t_exact.dt / t_warm.dt,
+            "speedup_cold": t_exact.dt / t_cold.dt, "delta": delta,
+            "cut": res.cut_value, "cut_exact": exact.value}
+
+
+def run():
+    out = {}
+    with timer() as tt:
+        out["road"] = _one(road_instance(120))
+        out["grid2d"] = _one(grid_instance(96))
+        out["grid3d_26conn"] = _one(grid3d_instance(14))
+    save_json("table3_speedup", out)
+    return {
+        "name": "table3_speedup",
+        "us_per_call": tt.dt * 1e6 / 3,
+        "derived": " ".join(f"{k}:{v['speedup']:.1f}x(d={v['delta']:.1e})"
+                            for k, v in out.items()),
+    }

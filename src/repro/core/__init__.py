@@ -1,0 +1,29 @@
+"""PIRMCut core: the paper's contribution as a composable JAX module.
+
+Public API:
+    IRLSConfig, solve            — the IRLS driver (Algorithm 1, steps 2-5)
+    sweep_cut, two_level         — rounding (step 7)
+    max_flow, min_cut_value      — exact serial oracle / B-K stand-in
+    pirmcut                      — Algorithm 1 end to end
+    cheeger_lambda2              — Thm 2.7 diagnostic
+"""
+from .incidence import DeviceGraph, device_graph_from_instance
+from .irls import IRLSConfig, IRLSDiagnostics, solve, solve_scanned
+from .maxflow import MaxFlowResult, max_flow, min_cut_indicator, min_cut_value
+from .rounding import RoundingResult, sweep_cut, two_level
+from .cheeger import CheegerEstimate, cheeger_lambda2, phi_of_cut
+
+
+def pirmcut(instance, cfg: IRLSConfig = IRLSConfig(), rounding: str = "two_level",
+            labels=None):
+    """Algorithm 1 (PIRMCut) end to end: IRLS voltages → rounding → cut.
+
+    Returns (RoundingResult, voltages, IRLSDiagnostics)."""
+    v, diag = solve(instance, cfg, labels=labels)
+    if rounding == "two_level":
+        res = two_level(instance, v)
+    elif rounding == "sweep":
+        res = sweep_cut(instance, v)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    return res, v, diag

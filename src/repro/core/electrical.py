@@ -1,0 +1,53 @@
+"""Electrical-flow view of the WLS solve (paper Prop. 2.3).
+
+Each IRLS WLS step computes an electrical flow ``z = C W⁻¹ C B x`` whose flow
+value is ``xᵀ L x``.  These helpers expose that view for diagnostics and for
+the property tests (flow conservation at non-terminal nodes, flow value).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .incidence import DeviceGraph, edge_residuals
+from .laplacian import Reweighted, matvec_coo
+
+
+class ElectricalFlow(NamedTuple):
+    flow_e: jax.Array   # flow along non-terminal edges (orientation src->dst)
+    flow_s: jax.Array   # flow along s->u terminal edges
+    flow_t: jax.Array   # flow along u->t terminal edges
+    value: jax.Array    # flow value μ(z) = xᵀ L x
+
+
+def electrical_flow(g: DeviceGraph, rw: Reweighted, v: jax.Array) -> ElectricalFlow:
+    """z = C W⁻¹ C B x expressed through the reweighted conductances:
+    per-edge flow = r_e · (potential difference)."""
+    flow_e = rw.r * (v[g.src] - v[g.dst])
+    flow_s = rw.r_s * (1.0 - v)       # s is at potential 1
+    flow_t = rw.r_t * (v - 0.0)       # t is at potential 0
+    value = jnp.vdot(v, matvec_coo(g, rw, v)) + jnp.sum(rw.r_s * (1.0 - 2.0 * v))
+    # value above expands xᵀLx over the full graph: the reduced quadratic form
+    # plus the terminal boundary terms; equivalently μ = Σ_u flow_s(u).
+    value = jnp.sum(flow_s)
+    return ElectricalFlow(flow_e=flow_e, flow_s=flow_s, flow_t=flow_t, value=value)
+
+
+def conservation_residual(g: DeviceGraph, fl: ElectricalFlow) -> jax.Array:
+    """Net flow into each non-terminal node (should be ~0 at the WLS solution:
+    Kirchhoff's current law, the `Bᵀ z = −Φᵀλ` identity of Prop 2.3)."""
+    net = jax.ops.segment_sum(fl.flow_e, g.dst, num_segments=g.n)
+    net = net - jax.ops.segment_sum(fl.flow_e, g.src, num_segments=g.n)
+    net = net + fl.flow_s - fl.flow_t
+    return net
+
+
+def flow_value_quadratic(g: DeviceGraph, rw: Reweighted, v: jax.Array) -> jax.Array:
+    """μ(z) = xᵀ L x over the FULL graph (Prop 2.3), computed from the
+    residual form: Σ_e r_e (Δx_e)² including terminal edges."""
+    de = v[g.src] - v[g.dst]
+    return (jnp.sum(rw.r * de * de)
+            + jnp.sum(rw.r_s * (1.0 - v) ** 2)
+            + jnp.sum(rw.r_t * v * v))

@@ -1,0 +1,248 @@
+"""PIRMCut IRLS driver (paper Algorithm 1, eqs. 4–5).
+
+The solver alternates
+
+  Step 1 (reweight):  w_e = sqrt((CBx)_e² + ε²);  conductances r = c²/w
+  Step 2 (WLS):       solve  L̃(r) v = b(r)  with PCG (warm-started)
+
+starting from x⁰ = solution with W⁰ = C, for T iterations; the voltage
+vector x^(T) then goes to a rounding procedure (core/rounding.py).
+
+Two drivers are provided:
+
+* ``solve`` — host-driven loop: each IRLS iteration is one jitted step, the
+  preconditioner is refactorized between iterations, residual/objective
+  diagnostics are collected.  This is the reference/production single-host
+  path, and is what the paper measures per-phase (Table 2).
+* ``solve_scanned`` — one jitted ``lax.scan`` over IRLS iterations with a
+  fixed PCG schedule — the form the distributed dry-run lowers and compiles.
+
+Beyond-paper options (each recorded separately in EXPERIMENTS.md §Perf):
+``eps_schedule`` (ε-continuation annealing) and ``precond="chebyshev"``
+(collective-free polynomial preconditioner).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import laplacian as lap
+from . import precond as pc
+from .incidence import DeviceGraph, device_graph_from_instance, l1_objective, smoothed_objective
+from .pcg import pcg, pcg_fixed_iters
+
+
+@dataclasses.dataclass(frozen=True)
+class IRLSConfig:
+    """All paper knobs (§5.4 defaults) + framework extensions."""
+
+    eps: float = 1e-6                 # smoothing parameter ε
+    n_irls: int = 50                  # T
+    pcg_tol: float = 1e-3             # relative-residual stop
+    pcg_max_iters: int = 50           # paper uses 50 at scale / 300 in §5.2
+    warm_start: bool = True
+    precond: str = "block_jacobi"     # jacobi | block_jacobi | chebyshev | none
+    n_blocks: int = 16                # block-Jacobi part count ("processes" p)
+    explicit_block_inverse: bool = False  # MXU GEMM apply path
+    cheby_degree: int = 4
+    eps_schedule: Optional[str] = None  # None | "anneal" (ε: 1e-2 → eps)
+    layout: str = "coo"               # coo | ell  (matvec layout)
+    dtype: str = "float32"
+    use_pallas: bool = False          # route matvec/reweight through kernels/
+
+
+@dataclasses.dataclass
+class IRLSDiagnostics:
+    pcg_iters: List[int]
+    pcg_residuals: List[float]
+    objective: List[float]            # smoothed S_ε(x^l)
+    l1_objective: List[float]         # exact ‖CBx‖₁ (fractional cut value)
+    voltages: Optional[List[np.ndarray]]  # per-iteration x (polarization study)
+    setup_time: float = 0.0
+    irls_time: float = 0.0
+
+
+def _eps_at(cfg: IRLSConfig, l: int) -> float:
+    if cfg.eps_schedule == "anneal":
+        # geometric continuation 1e-2 → eps over the first 60% of iterations
+        hot, cold = 1e-2, cfg.eps
+        frac = min(1.0, l / max(1, int(0.6 * cfg.n_irls)))
+        return float(hot * (cold / hot) ** frac)
+    return cfg.eps
+
+
+def _make_matvec(g: DeviceGraph, rw: lap.Reweighted, cfg: IRLSConfig,
+                 ell_plan: Optional[lap.EllPlan]):
+    if cfg.layout == "ell":
+        vals, diag = lap.fill_ell(ell_plan, rw)
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            return lambda v: kops.ell_spmv(ell_plan.cols, vals, diag, v)
+        return lambda v: lap.matvec_ell(ell_plan.cols, vals, diag, v)
+    return lambda v: lap.matvec_coo(g, rw, v)
+
+
+class _Stepper:
+    """Jitted single-IRLS-iteration step factory (host-driven driver)."""
+
+    def __init__(self, g: DeviceGraph, cfg: IRLSConfig,
+                 block_plan: Optional[pc.BlockPlan],
+                 ell_plan: Optional[lap.EllPlan]):
+        self.g = g
+        self.cfg = cfg
+        self.block_plan = block_plan
+        self.ell_plan = ell_plan
+        self._step = jax.jit(self._step_impl, static_argnames=("first",))
+
+    def _step_impl(self, v, eps, *, first: bool):
+        g, cfg = self.g, self.cfg
+        if first:
+            rw = lap.initial_weights(g)
+        else:
+            if cfg.use_pallas:
+                from repro.kernels import ops as kops
+                rw = kops.edge_reweight(g, v, eps)
+            else:
+                rw = lap.reweight(g, v, eps)
+        matvec = _make_matvec(g, rw, cfg, self.ell_plan)
+        b = lap.rhs(rw)
+
+        if cfg.precond == "block_jacobi":
+            M = pc.factorize_blocks(self.block_plan, rw,
+                                    cfg.explicit_block_inverse)
+            if cfg.use_pallas and M.inv is not None:
+                from repro.kernels import ops as kops
+                apply_M = lambda x: pc.scatter_blocks(
+                    M.plan, kops.block_diag_matvec(M.inv, pc.gather_blocks(M.plan, x)))
+            else:
+                apply_M = lambda x: pc.apply_block_jacobi(M, x)
+        elif cfg.precond == "jacobi":
+            apply_M = lambda x: pc.jacobi_apply(rw.diag, x)
+        elif cfg.precond == "chebyshev":
+            apply_M = pc.make_chebyshev_apply(matvec, rw.diag, cfg.cheby_degree)
+        elif cfg.precond == "none":
+            apply_M = None
+        else:
+            raise ValueError(f"unknown preconditioner {cfg.precond!r}")
+
+        x0 = v if (cfg.warm_start and not first) else jnp.zeros_like(v)
+        res = pcg(matvec, b, x0=x0, precond=apply_M, tol=cfg.pcg_tol,
+                  max_iters=cfg.pcg_max_iters, record_history=True)
+        s_eps = smoothed_objective(g, res.x, eps)
+        frac_cut = l1_objective(g, res.x)
+        return res.x, res.iters, res.rel_res, s_eps, frac_cut
+
+
+def solve(instance, cfg: IRLSConfig = IRLSConfig(),
+          labels: Optional[np.ndarray] = None,
+          collect_voltages: bool = False):
+    """Run PIRMCut IRLS on a host STInstance.
+
+    ``labels`` — optional precomputed partition labels over (reordered)
+    non-terminal nodes for the block-Jacobi preconditioner; computed with the
+    multilevel partitioner when absent.  Returns (v, diagnostics).
+    """
+    from repro.graphs import partition as gp
+    from repro.graphs.structures import permute_instance
+
+    t0 = time.perf_counter()
+    dtype = jnp.dtype(cfg.dtype)
+
+    perm = None
+    if cfg.precond == "block_jacobi":
+        if labels is None:
+            labels = gp.partition_kway(instance.graph, cfg.n_blocks)
+        perm = gp.partition_order(labels)
+        instance = permute_instance(instance, perm)
+        labels = np.sort(np.asarray(labels))
+
+    g = device_graph_from_instance(instance, dtype=dtype)
+
+    block_plan = None
+    if cfg.precond == "block_jacobi":
+        block_plan = pc.build_block_plan(instance.graph.src, instance.graph.dst,
+                                         labels, cfg.n_blocks)
+    ell_plan = None
+    if cfg.layout == "ell":
+        ell_plan = lap.build_ell_plan(instance.graph.src, instance.graph.dst, g.n)
+
+    stepper = _Stepper(g, cfg, block_plan, ell_plan)
+    setup_time = time.perf_counter() - t0
+
+    diag = IRLSDiagnostics(pcg_iters=[], pcg_residuals=[], objective=[],
+                           l1_objective=[], voltages=[] if collect_voltages else None,
+                           setup_time=setup_time)
+
+    t1 = time.perf_counter()
+    v = jnp.zeros((g.n,), dtype=dtype)
+    # x⁰: WLS with W⁰ = C (cold start by definition)
+    v, iters, rel, s_eps, frac = stepper._step(v, cfg.eps, first=True)
+    _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
+    for l in range(1, cfg.n_irls + 1):
+        eps_l = _eps_at(cfg, l)
+        v, iters, rel, s_eps, frac = stepper._step(v, eps_l, first=False)
+        _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
+    v.block_until_ready()
+    diag.irls_time = time.perf_counter() - t1
+
+    v_host = np.asarray(v)
+    if perm is not None:
+        # undo the block reordering so callers see original node ids
+        v_host = v_host[perm]
+    return v_host, diag
+
+
+def _record(diag, v, iters, rel, s_eps, frac, collect_voltages):
+    diag.pcg_iters.append(int(iters))
+    diag.pcg_residuals.append(float(rel))
+    diag.objective.append(float(s_eps))
+    diag.l1_objective.append(float(frac))
+    if collect_voltages and diag.voltages is not None:
+        diag.voltages.append(np.asarray(v).copy())
+
+
+# ---------------------------------------------------------------------------
+# Fully-scanned variant (fixed schedule; what the dry-run lowers)
+# ---------------------------------------------------------------------------
+
+def solve_scanned(g: DeviceGraph, cfg: IRLSConfig,
+                  block_plan: Optional[pc.BlockPlan] = None,
+                  ell_plan: Optional[lap.EllPlan] = None):
+    """One jit-able program: scan over T IRLS iterations, each running a
+    fixed-iteration PCG.  Static control flow end to end."""
+
+    def irls_step(v, _):
+        rw = lap.reweight(g, v, cfg.eps)
+        matvec = _make_matvec(g, rw, cfg, ell_plan)
+        b = lap.rhs(rw)
+        if cfg.precond == "block_jacobi" and block_plan is not None:
+            M = pc.factorize_blocks(block_plan, rw, cfg.explicit_block_inverse)
+            apply_M = lambda x: pc.apply_block_jacobi(M, x)
+        elif cfg.precond == "chebyshev":
+            apply_M = pc.make_chebyshev_apply(matvec, rw.diag, cfg.cheby_degree)
+        else:
+            apply_M = lambda x: pc.jacobi_apply(rw.diag, x)
+        x0 = v if cfg.warm_start else jnp.zeros_like(v)
+        res = pcg_fixed_iters(matvec, b, x0=x0, precond=apply_M,
+                              n_iters=cfg.pcg_max_iters)
+        return res.x, res.rel_res
+
+    rw0 = lap.initial_weights(g)
+    matvec0 = _make_matvec(g, rw0, cfg, ell_plan)
+    if cfg.precond == "block_jacobi" and block_plan is not None:
+        M0 = pc.factorize_blocks(block_plan, rw0, cfg.explicit_block_inverse)
+        apply_M0 = lambda x: pc.apply_block_jacobi(M0, x)
+    elif cfg.precond == "chebyshev":
+        apply_M0 = pc.make_chebyshev_apply(matvec0, rw0.diag, cfg.cheby_degree)
+    else:
+        apply_M0 = lambda x: pc.jacobi_apply(rw0.diag, x)
+    res0 = pcg_fixed_iters(matvec0, lap.rhs(rw0), precond=apply_M0,
+                           n_iters=cfg.pcg_max_iters)
+    v, rels = jax.lax.scan(irls_step, res0.x, None, length=cfg.n_irls)
+    return v, rels

@@ -1,0 +1,177 @@
+"""Reweighted reduced-Laplacian operators (paper eqs. 4–8).
+
+Each IRLS step needs the reduced Laplacian ``L̃ = Zᵀ Bᵀ C W⁻¹ C B Z`` and the
+right-hand side ``b = −Zᵀ L e_s``.  With the STInstance layout the reduced
+system is simply the Laplacian of the *non-terminal* graph under reweighted
+conductances ``r_e = c_e² / w_e`` plus diagonal terminal conductances::
+
+    (L̃ v)_u = (Σ_{e∋u} r_e + r_s(u) + r_t(u)) v_u − Σ_{e=(u,x)} r_e v_x
+    b_u     = r_s(u)                                 (source side pulls to 1)
+
+Two matvec layouts are provided:
+
+* **edge-scatter** (COO): gather v[src], v[dst] → per-edge flux → segment_sum.
+  This is the layout the distributed solver shards.
+* **ELLPACK**: padded fixed-degree gather — the TPU-native layout consumed by
+  the Pallas kernel (kernels/ell_spmv.py); used on the single-host fast path.
+
+Both operate on a `Reweighted` NamedTuple produced by `reweight(...)`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .incidence import DeviceGraph, edge_residuals
+
+
+class Reweighted(NamedTuple):
+    """Per-IRLS-iteration reweighted conductances (eq. 4 → eq. 8).
+
+    r    : f[m]  reweighted non-terminal conductances c²/w
+    r_s  : f[n]  reweighted terminal-source conductances
+    r_t  : f[n]  reweighted terminal-sink conductances
+    diag : f[n]  diagonal of the reduced Laplacian L̃
+    """
+
+    r: jax.Array
+    r_s: jax.Array
+    r_t: jax.Array
+    diag: jax.Array
+
+
+def reweight(g: DeviceGraph, v: jax.Array, eps: float) -> Reweighted:
+    """IRLS Step 1 (eq. 4): w_e = sqrt((CBx)_e² + ε²); r_e = c_e²/w_e.
+
+    Fused with the diagonal assembly so one pass over the edges suffices
+    (the Pallas kernel `edge_reweight` implements the same contraction).
+    """
+    z_e, z_s, z_t = edge_residuals(g, v)
+    r = (g.c * g.c) / jnp.sqrt(z_e * z_e + eps * eps)
+    r_s = (g.c_s * g.c_s) / jnp.sqrt(z_s * z_s + eps * eps)
+    r_t = (g.c_t * g.c_t) / jnp.sqrt(z_t * z_t + eps * eps)
+    # zero-capacity terminal entries must not contribute conductance
+    r_s = jnp.where(g.c_s > 0, r_s, 0.0)
+    r_t = jnp.where(g.c_t > 0, r_t, 0.0)
+    deg = jax.ops.segment_sum(r, g.src, num_segments=g.n)
+    deg = deg + jax.ops.segment_sum(r, g.dst, num_segments=g.n)
+    return Reweighted(r=r, r_s=r_s, r_t=r_t, diag=deg + r_s + r_t)
+
+
+def initial_weights(g: DeviceGraph) -> Reweighted:
+    """W⁰ = C (paper §2.1): conductances r = c²/c = c."""
+    r = g.c
+    r_s = g.c_s
+    r_t = g.c_t
+    deg = jax.ops.segment_sum(r, g.src, num_segments=g.n)
+    deg = deg + jax.ops.segment_sum(r, g.dst, num_segments=g.n)
+    return Reweighted(r=r, r_s=r_s, r_t=r_t, diag=deg + r_s + r_t)
+
+
+def matvec_coo(g: DeviceGraph, rw: Reweighted, v: jax.Array) -> jax.Array:
+    """Edge-scatter (COO) reduced-Laplacian matvec  y = L̃ v."""
+    flux = rw.r * (v[g.src] - v[g.dst])
+    y = jax.ops.segment_sum(flux, g.src, num_segments=g.n)
+    y = y - jax.ops.segment_sum(flux, g.dst, num_segments=g.n)
+    return y + (rw.r_s + rw.r_t) * v
+
+
+def rhs(rw: Reweighted) -> jax.Array:
+    """b = −Zᵀ L e_s = terminal-source conductances (≥ 0, Prop 2.2)."""
+    return rw.r_s
+
+
+# ---------------------------------------------------------------------------
+# ELLPACK layout: static index plan + per-iteration value fill
+# ---------------------------------------------------------------------------
+
+class EllPlan(NamedTuple):
+    """Static ELL index plan for the non-terminal graph.
+
+    The symbolic structure never changes across IRLS iterations (paper §3.1:
+    "the symbolic factorization ... needs to be done only once") — so the
+    column ids and the (edge → ELL slot) scatter map are built once on host.
+
+    cols      : int32[n, k]  padded neighbour ids (0 where invalid)
+    slot_rows : int32[2m]    destination row of each directed edge copy
+    slot_cols : int32[2m]    destination lane of each directed edge copy
+    edge_id   : int32[2m]    originating undirected edge id of each copy
+    """
+
+    cols: jax.Array
+    slot_rows: jax.Array
+    slot_cols: jax.Array
+    edge_id: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.cols.shape[1]
+
+
+def build_ell_plan(src, dst, n: int, pad_to_multiple: int = 8) -> EllPlan:
+    """Host-side construction of the static ELL plan (numpy)."""
+    import numpy as np
+
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    m = src.shape[0]
+    rows = np.concatenate([src, dst])
+    cols = np.concatenate([dst, src])
+    eid = np.concatenate([np.arange(m), np.arange(m)])
+    order = np.argsort(rows, kind="stable")
+    rows, cols, eid = rows[order], cols[order], eid[order]
+    deg = np.bincount(rows, minlength=n)
+    k = int(deg.max()) if n else 0
+    k = max(1, -(-k // pad_to_multiple) * pad_to_multiple)
+    # lane index within the row = running offset
+    starts = np.zeros(n + 1, dtype=np.int64)
+    starts[1:] = np.cumsum(deg)
+    lane = np.arange(2 * m) - starts[rows]
+    colmat = np.zeros((n, k), dtype=np.int32)
+    colmat[rows, lane] = cols
+    return EllPlan(
+        cols=jnp.asarray(colmat),
+        slot_rows=jnp.asarray(rows, dtype=jnp.int32),
+        slot_cols=jnp.asarray(lane, dtype=jnp.int32),
+        edge_id=jnp.asarray(eid, dtype=jnp.int32),
+    )
+
+
+def fill_ell(plan: EllPlan, rw: Reweighted) -> tuple[jax.Array, jax.Array]:
+    """Scatter the per-iteration conductances into the static ELL slots.
+
+    Returns (vals[n,k], diag[n]): off-diagonals are −r_e, the diagonal is the
+    full L̃ diagonal (includes terminal conductances).
+    """
+    n, k = plan.n, plan.k
+    vals = jnp.zeros((n, k), dtype=rw.r.dtype)
+    vals = vals.at[plan.slot_rows, plan.slot_cols].set(-rw.r[plan.edge_id])
+    return vals, rw.diag
+
+
+def matvec_ell(cols: jax.Array, vals: jax.Array, diag: jax.Array,
+               v: jax.Array) -> jax.Array:
+    """ELLPACK matvec  y = diag·v + Σ_lane vals[:,lane] · v[cols[:,lane]].
+
+    Padded lanes carry vals == 0 so gathering v[0] there is harmless.
+    Pure-jnp reference; the Pallas kernel (kernels/ell_spmv.py) computes the
+    same contraction with explicit VMEM tiling.
+    """
+    gathered = v[cols]  # [n, k]
+    return diag * v + jnp.sum(vals * gathered, axis=1)
+
+
+def dense_reduced_laplacian(g: DeviceGraph, rw: Reweighted) -> jax.Array:
+    """Dense L̃ (testing oracle only — O(n²) memory)."""
+    n = g.n
+    L = jnp.zeros((n, n), dtype=rw.r.dtype)
+    L = L.at[g.src, g.dst].add(-rw.r)
+    L = L.at[g.dst, g.src].add(-rw.r)
+    L = L.at[jnp.arange(n), jnp.arange(n)].add(rw.diag)
+    return L

@@ -1,0 +1,117 @@
+"""Preconditioned conjugate gradients on the reduced Laplacian (paper §3.1).
+
+Implemented as a single ``jax.lax.while_loop`` so the whole solve stays on
+device (one fused program; jit/shard_map friendly).  Supports:
+
+* warm starts (paper §3.1: x0 = previous IRLS solution, ~20% fewer iters),
+* relative-residual stopping criterion (paper: ‖r‖/‖b‖ ≤ 1e-3),
+* hard iteration cap (paper: 50 at scale, 300 in the §5.2 study),
+* a residual-history trace (fixed-length buffer) for the Fig-1 benchmark.
+
+The matvec and the preconditioner are passed as closures so the same code
+path serves the single-host (ELL / Pallas), the oracle (dense) and the
+sharded (shard_map collective) implementations.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class PCGResult(NamedTuple):
+    x: jax.Array          # solution
+    iters: jax.Array      # iterations taken (i32 scalar)
+    rel_res: jax.Array    # final relative residual
+    history: jax.Array    # f[max_iters+1] residual norms (NaN-padded)
+
+
+def pcg(matvec: Callable[[jax.Array], jax.Array],
+        b: jax.Array,
+        x0: Optional[jax.Array] = None,
+        precond: Optional[Callable[[jax.Array], jax.Array]] = None,
+        tol: float = 1e-3,
+        max_iters: int = 300,
+        record_history: bool = False) -> PCGResult:
+    """Solve ``A x = b`` with A SPD given through ``matvec``.
+
+    ``precond`` applies M⁻¹ (identity when None).  ``x0`` enables warm starts.
+    """
+    if precond is None:
+        precond = lambda r: r
+    x = jnp.zeros_like(b) if x0 is None else x0
+
+    b_norm = jnp.linalg.norm(b)
+    # guard: b == 0 ⇒ x = 0 is exact; avoid dividing by zero
+    b_norm = jnp.where(b_norm > 0, b_norm, 1.0)
+
+    r = b - matvec(x)
+    z = precond(r)
+    p = z
+    rz = jnp.vdot(r, z)
+    res0 = jnp.linalg.norm(r) / b_norm
+
+    hist_len = max_iters + 1 if record_history else 1
+    history = jnp.full((hist_len,), jnp.nan, dtype=b.dtype)
+    history = history.at[0].set(res0)
+
+    def cond(state):
+        _, _, _, _, rel, it, _ = state
+        return jnp.logical_and(rel > tol, it < max_iters)
+
+    def body(state):
+        x, r, p, rz, rel, it, hist = state
+        Ap = matvec(p)
+        pAp = jnp.vdot(p, Ap)
+        alpha = rz / jnp.where(pAp != 0, pAp, 1.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = precond(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        p = z + beta * p
+        rel = jnp.linalg.norm(r) / b_norm
+        it = it + 1
+        if record_history:
+            hist = hist.at[it].set(rel)
+        return x, r, p, rz_new, rel, it, hist
+
+    state = (x, r, p, rz, res0, jnp.asarray(0, jnp.int32), history)
+    x, r, p, rz, rel, it, history = jax.lax.while_loop(cond, body, state)
+    return PCGResult(x=x, iters=it, rel_res=rel, history=history)
+
+
+def pcg_fixed_iters(matvec, b, x0=None, precond=None, n_iters: int = 50):
+    """PCG with a fixed iteration count via ``lax.scan`` — fully static
+    control flow.  This is the variant the dry-run lowers (while_loop also
+    compiles under pjit, but a static schedule gives a deterministic HLO for
+    the roofline term extraction)."""
+    if precond is None:
+        precond = lambda r: r
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - matvec(x)
+    z = precond(r)
+    p = z
+    rz = jnp.vdot(r, z)
+
+    def step(carry, _):
+        x, r, p, rz = carry
+        Ap = matvec(p)
+        pAp = jnp.vdot(p, Ap)
+        alpha = rz / jnp.where(pAp != 0, pAp, 1.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = precond(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        p = z + beta * p
+        return (x, r, p, rz_new), jnp.linalg.norm(r)
+
+    (x, r, p, rz), res_hist = jax.lax.scan(step, (x, r, p, rz), None,
+                                           length=n_iters)
+    b_norm = jnp.linalg.norm(b)
+    b_norm = jnp.where(b_norm > 0, b_norm, 1.0)
+    return PCGResult(x=x, iters=jnp.asarray(n_iters, jnp.int32),
+                     rel_res=jnp.linalg.norm(r) / b_norm,
+                     history=res_hist / b_norm)

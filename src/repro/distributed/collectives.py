@@ -1,0 +1,34 @@
+"""Mesh helpers for the distributed solver.
+
+The IRLS solver is 1-D domain-decomposed exactly like the paper's MPI layout
+(§3.3: one block row per process).  The production meshes are 2-D/3-D
+(data, model[, pod]); the solver flattens them into a single "shard" axis.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SOLVER_AXIS = "shard"
+
+
+def flat_mesh(devices=None) -> Mesh:
+    """1-D mesh over all (given) devices with axis name 'shard'."""
+    if devices is None:
+        devices = jax.devices()
+    return Mesh(np.asarray(devices).reshape(-1), (SOLVER_AXIS,))
+
+
+def flatten_mesh(mesh: Mesh) -> Mesh:
+    """Reshape any mesh into the solver's 1-D layout (same device order)."""
+    return Mesh(mesh.devices.reshape(-1), (SOLVER_AXIS,))
+
+
+def shard_leading(mesh: Mesh):
+    return NamedSharding(mesh, P(SOLVER_AXIS))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,350 @@
+"""Sharded IRLS + PCG under ``jax.shard_map`` (the parallel PIRMCut of §3).
+
+The whole IRLS(T) × PCG(K) nest runs as ONE jitted SPMD program over the
+flattened device mesh.  Communication per PCG step:
+
+  psum schedule : 1 × all-reduce(n)      (baseline)
+  halo schedule : 1 × all-gather(p·b_sh) (partition-aware, b_sh ≪ n/p)
+
+plus scalar psums for the CG dot products.  The block-Jacobi preconditioner
+is fully local to each shard — its sub-blocks are nested inside the
+partition parts, so applying it needs NO collectives (the paper's central
+argument for choosing block Jacobi, §4).
+
+The same body is used (a) for numerical execution in the multi-device CPU
+tests and (b) for the production-mesh dry-run (lower + compile only).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.irls import IRLSConfig
+from repro.core.pcg import pcg_fixed_iters
+from .collectives import SOLVER_AXIS, flat_mesh
+from .spmv import HaloPlan, build_halo_plan, build_psum_plan, \
+    halo_exchange, make_halo_matvec, psum_matvec
+
+
+def _pcg_sharded(matvec, b, x0, precond, n_iters: int, axis: str, local_dot):
+    """Fixed-schedule PCG where every inner product is a cross-shard psum."""
+    def dot(a, c):
+        return jax.lax.psum(local_dot(a, c), axis)
+
+    r = b - matvec(x0)
+    z = precond(r)
+    p = z
+    rz = dot(r, z)
+
+    def step(carry, _):
+        x, r, p, rz = carry
+        Ap = matvec(p)
+        pAp = dot(p, Ap)
+        alpha = rz / jnp.where(pAp != 0, pAp, 1.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = precond(r)
+        rz_new = dot(r, z)
+        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        p = z + beta * p
+        return (x, r, p, rz_new), jnp.sqrt(jnp.maximum(dot(r, r), 0.0))
+
+    (x, r, p, rz), res = jax.lax.scan(step, (x0, r, p, rz), None,
+                                      length=n_iters)
+    return x, res
+
+
+class HaloBlockPlan(NamedTuple):
+    """Per-shard sub-block preconditioner plan (zero-collective apply).
+
+    copy_b/copy_i/copy_j : i32[p, mc] sub-block / local slots of intra-block
+                           directed copies (off-diagonal scatter targets)
+    copy_id              : i32[p, mc] source copy index (into the ml axis)
+    copy_valid           : f32[p, mc] 1 = real, 0 = padding
+    node_b/node_s        : i32[p, nl] sub-block / slot of each local node
+    nb, bs               : static — sub-blocks per shard / block size
+    """
+
+    copy_b: np.ndarray
+    copy_i: np.ndarray
+    copy_j: np.ndarray
+    copy_id: np.ndarray
+    copy_valid: np.ndarray
+    node_b: np.ndarray
+    node_s: np.ndarray
+    nb: int
+    bs: int
+
+
+def build_halo_block_plan(plan: HaloPlan, target_bs: int = 128) -> HaloBlockPlan:
+    """Split each shard's contiguous node range into fixed-size sub-blocks
+    (node order already groups partition parts → sub-blocks inherit the
+    partition locality the paper's preconditioner relies on)."""
+    p, nl = plan.p, plan.nl
+    bs = min(target_bs, nl)
+    nb = -(-nl // bs)
+    node_b = np.broadcast_to((np.arange(nl) // bs).astype(np.int32), (p, nl)).copy()
+    node_s = np.broadcast_to((np.arange(nl) % bs).astype(np.int32), (p, nl)).copy()
+    rows = []
+    mc = 0
+    for i in range(p):
+        h, t, c = plan.heads[i], plan.tails_ext[i], plan.c[i]
+        ok = (c > 0) & (t < nl) & ((h // bs) == (t // bs))
+        ids = np.nonzero(ok)[0]
+        rows.append(ids)
+        mc = max(mc, len(ids))
+    mc = max(8, -(-mc // 8) * 8)
+    copy_b = np.zeros((p, mc), dtype=np.int32)
+    copy_i = np.zeros((p, mc), dtype=np.int32)
+    copy_j = np.zeros((p, mc), dtype=np.int32)
+    copy_id = np.zeros((p, mc), dtype=np.int32)
+    copy_valid = np.zeros((p, mc), dtype=np.float32)
+    for i, ids in enumerate(rows):
+        k = len(ids)
+        h, t = plan.heads[i][ids], plan.tails_ext[i][ids]
+        copy_b[i, :k] = (h // bs).astype(np.int32)
+        copy_i[i, :k] = (h % bs).astype(np.int32)
+        copy_j[i, :k] = (t % bs).astype(np.int32)
+        copy_id[i, :k] = ids.astype(np.int32)
+        copy_valid[i, :k] = 1.0
+    return HaloBlockPlan(copy_b=copy_b, copy_i=copy_i, copy_j=copy_j,
+                         copy_id=copy_id, copy_valid=copy_valid,
+                         node_b=node_b, node_s=node_s, nb=nb, bs=bs)
+
+
+def abstract_halo_plans(n: int, m: int, p: int, boundary_frac: float,
+                        precond_bs: int = 128
+                        ) -> Tuple["HaloPlan", "HaloBlockPlan"]:
+    """Analytic plan SHAPES for dry-run lowering at scales where building a
+    real instance on this host is pointless.  nl/ml/b_sh follow the same
+    padding rules as build_halo_plan; boundary_frac comes from the real
+    partitioner's measured cut fraction on small instances of the family."""
+    pad8 = lambda x: max(8, -(-int(x) // 8) * 8)
+    nl = pad8(-(-n // p))
+    ml = pad8(2 * m / p * 1.05)
+    b_sh = pad8(n * boundary_frac / p)
+    sds = jax.ShapeDtypeStruct
+    i32, f32, i64 = jnp.int32, jnp.float32, jnp.int64
+    plan = HaloPlan(
+        heads=sds((p, ml), i32), tails_ext=sds((p, ml), i32),
+        c=sds((p, ml), f32), c_s=sds((p, nl), f32), c_t=sds((p, nl), f32),
+        export=sds((p, b_sh), i32), node_valid=sds((p, nl), f32),
+        perm=sds((n,), i64), n=n, nl=nl, b_sh=b_sh, p=p)
+    bs = min(precond_bs, nl)
+    nb = -(-nl // bs)
+    mc = ml  # upper bound: every copy intra-block
+    bplan = HaloBlockPlan(
+        copy_b=sds((p, mc), i32), copy_i=sds((p, mc), i32),
+        copy_j=sds((p, mc), i32), copy_id=sds((p, mc), i32),
+        copy_valid=sds((p, mc), f32), node_b=sds((p, nl), i32),
+        node_s=sds((p, nl), i32), nb=nb, bs=bs)
+    return plan, bplan
+
+
+class ShardedSolver:
+    """Compiled sharded PIRMCut IRLS (halo or psum schedule)."""
+
+    def __init__(self, instance, cfg: IRLSConfig, mesh: Optional[Mesh] = None,
+                 schedule: str = "halo", labels: Optional[np.ndarray] = None,
+                 precond_bs: int = 128, plans: Optional[tuple] = None,
+                 halo_compression: Optional[str] = None):
+        self.cfg = cfg
+        self.halo_compression = halo_compression
+        self.mesh = mesh if mesh is not None else flat_mesh()
+        self.schedule = schedule
+        self.p = int(np.prod(self.mesh.devices.shape))
+        if plans is not None:
+            if schedule == "halo":
+                self.plan, self.block_plan = plans
+            else:
+                (self.plan,) = plans
+        elif schedule == "halo":
+            self.plan = build_halo_plan(instance, self.p, labels=labels)
+            self.block_plan = build_halo_block_plan(self.plan, precond_bs)
+        elif schedule == "psum":
+            self.plan = build_psum_plan(instance, self.p)
+        else:
+            raise ValueError(schedule)
+        self._fn = self._build_halo() if schedule == "halo" else self._build_psum()
+
+    # -- halo schedule --------------------------------------------------------
+    def _build_halo(self):
+        cfg = self.cfg
+        axis = SOLVER_AXIS
+        plan, bplan = self.plan, self.block_plan
+        nl = plan.nl
+        nb, bs = bplan.nb, bplan.bs
+        mv_local = make_halo_matvec(nl)
+        use_block = cfg.precond in ("block_jacobi",)
+        compression = self.halo_compression
+
+        def body(heads, tails_ext, c, c_s, c_t, export, valid,
+                 copy_b, copy_i, copy_j, copy_id, copy_valid, node_b, node_s):
+            (heads, tails_ext, c, c_s, c_t, export, valid, copy_b, copy_i,
+             copy_j, copy_id, copy_valid, node_b, node_s) = (
+                a[0] for a in (heads, tails_ext, c, c_s, c_t, export, valid,
+                               copy_b, copy_i, copy_j, copy_id, copy_valid,
+                               node_b, node_s))
+
+            def local_dot(a, b_):
+                return jnp.vdot(a * valid, b_ * valid)
+
+            def conductances(v, eps, initial):
+                if initial:
+                    r, r_s, r_t = c, c_s, c_t
+                else:
+                    ext = halo_exchange(v, export, axis, compression)
+                    z = c * (jnp.take(ext, heads, axis=0, fill_value=0.0)
+                             - jnp.take(ext, tails_ext, axis=0, fill_value=0.0))
+                    r = jnp.where(c > 0, (c * c) /
+                                  jnp.sqrt(z * z + eps * eps), 0.0)
+                    z_s = c_s * (1.0 - v)
+                    z_t = c_t * v
+                    r_s = jnp.where(c_s > 0, (c_s * c_s) /
+                                    jnp.sqrt(z_s * z_s + eps * eps), 0.0)
+                    r_t = jnp.where(c_t > 0, (c_t * c_t) /
+                                    jnp.sqrt(z_t * z_t + eps * eps), 0.0)
+                deg = jax.ops.segment_sum(r, heads, num_segments=nl)
+                diag = deg + r_s + r_t
+                diag = jnp.where(valid > 0, diag, 1.0)
+                return r, r_s, diag
+
+            def make_precond(r, diag):
+                if not use_block:
+                    return lambda x: x / diag
+                A = jnp.zeros((nb, bs, bs), dtype=diag.dtype)
+                rvals = r[copy_id] * copy_valid
+                A = A.at[copy_b, copy_i, copy_j].add(-rvals)
+                A = A.at[node_b, node_s, node_s].add(
+                    jnp.where(valid > 0, diag, 0.0))
+                occ = jnp.zeros((nb, bs), dtype=diag.dtype)
+                occ = occ.at[node_b, node_s].max(valid)
+                eye = jnp.eye(bs, dtype=diag.dtype)
+                A = A + eye * (1.0 - occ)[:, None, :]
+                chol = jnp.linalg.cholesky(A)
+
+                def apply_M(x):
+                    xb = jnp.zeros((nb, bs), dtype=x.dtype)
+                    xb = xb.at[node_b, node_s].set(x * valid)
+                    yb = jax.scipy.linalg.cho_solve((chol, True),
+                                                    xb[..., None])[..., 0]
+                    return yb[node_b, node_s] * valid
+                return apply_M
+
+            def solve_wls(v, eps, initial, x0):
+                r, r_s, diag = conductances(v, eps, initial)
+
+                # y = diag·x − Σ_{copies head=u} r x_tail  (scatter is local;
+                # only the tail gather needs the halo all-gather)
+                def matvec(x):
+                    ext = halo_exchange(x, export, axis, compression)
+                    contrib = r * jnp.take(ext, tails_ext, axis=0,
+                                           fill_value=0.0)
+                    acc = jax.ops.segment_sum(contrib, heads, num_segments=nl)
+                    return diag * x - acc
+                M = make_precond(r, diag)
+                x, res = _pcg_sharded(matvec, r_s, x0, M, cfg.pcg_max_iters,
+                                      axis, local_dot)
+                return x * valid, res[-1]
+
+            v0, _ = solve_wls(jnp.zeros((nl,), c.dtype), cfg.eps, True,
+                              jnp.zeros((nl,), c.dtype))
+
+            def scan_step(v, _):
+                x0 = v if cfg.warm_start else jnp.zeros_like(v)
+                v2, rel = solve_wls(v, cfg.eps, False, x0)
+                return v2, rel
+
+            v, rels = jax.lax.scan(scan_step, v0, None, length=cfg.n_irls)
+            return v[None], rels
+
+        fn = jax.shard_map(body, mesh=self.mesh,
+                           in_specs=(P(SOLVER_AXIS),) * 14,
+                           out_specs=(P(SOLVER_AXIS), P()),
+                           check_vma=False)
+        self._raw_body = fn
+        return jax.jit(fn)
+
+    # -- psum schedule ----------------------------------------------------------
+    def _build_psum(self):
+        cfg = self.cfg
+        plan = self.plan
+        n_pad = plan.n_pad
+
+        def body(src, dst, c, c_s, c_t):
+            src, dst, c = src[0], dst[0], c[0]
+
+            def conductances(v, eps, initial):
+                if initial:
+                    r, r_s, r_t = c, c_s, c_t
+                else:
+                    z = c * (v[src] - v[dst])
+                    r = jnp.where(c > 0, (c * c) /
+                                  jnp.sqrt(z * z + eps * eps), 0.0)
+                    z_s = c_s * (1.0 - v)
+                    z_t = c_t * v
+                    r_s = jnp.where(c_s > 0, (c_s * c_s) /
+                                    jnp.sqrt(z_s * z_s + eps * eps), 0.0)
+                    r_t = jnp.where(c_t > 0, (c_t * c_t) /
+                                    jnp.sqrt(z_t * z_t + eps * eps), 0.0)
+                deg = jax.ops.segment_sum(r, src, num_segments=n_pad)
+                deg = deg + jax.ops.segment_sum(r, dst, num_segments=n_pad)
+                deg = jax.lax.psum(deg, SOLVER_AXIS)
+                diag = jnp.where(deg + r_s + r_t > 0, deg + r_s + r_t, 1.0)
+                return r, r_s, r_t, diag
+
+            def solve_wls(v, eps, initial, x0):
+                r, r_s, r_t, diag = conductances(v, eps, initial)
+                mv = lambda x: psum_matvec(x, src, dst, r, r_s + r_t,
+                                           n_pad, SOLVER_AXIS)
+                res = pcg_fixed_iters(mv, r_s, x0=x0, precond=lambda x: x / diag,
+                                      n_iters=cfg.pcg_max_iters)
+                return res.x, res.rel_res
+
+            v, _ = solve_wls(jnp.zeros((n_pad,), c.dtype), cfg.eps, True,
+                             jnp.zeros((n_pad,), c.dtype))
+
+            def scan_step(v_, _):
+                x0 = v_ if cfg.warm_start else jnp.zeros_like(v_)
+                v2, rel = solve_wls(v_, cfg.eps, False, x0)
+                return v2, rel
+
+            v, rels = jax.lax.scan(scan_step, v, None, length=cfg.n_irls)
+            return v, rels
+
+        fn = jax.shard_map(body, mesh=self.mesh,
+                           in_specs=(P(SOLVER_AXIS), P(SOLVER_AXIS),
+                                     P(SOLVER_AXIS), P(), P()),
+                           out_specs=(P(), P()),
+                           check_vma=False)
+        return jax.jit(fn)
+
+    # -- execution --------------------------------------------------------------
+    def arrays(self):
+        if self.schedule == "halo":
+            pl_, bp = self.plan, self.block_plan
+            return (pl_.heads, pl_.tails_ext, pl_.c, pl_.c_s, pl_.c_t,
+                    pl_.export, pl_.node_valid, bp.copy_b, bp.copy_i,
+                    bp.copy_j, bp.copy_id, bp.copy_valid, bp.node_b, bp.node_s)
+        pl_ = self.plan
+        return (pl_.src, pl_.dst, pl_.c, pl_.c_s, pl_.c_t)
+
+    def abstract_inputs(self):
+        return tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                     for a in self.arrays())
+
+    def lower(self):
+        return self._fn.lower(*self.abstract_inputs())
+
+    def solve(self):
+        """Run and return voltages in ORIGINAL node order + residual trace."""
+        out, rels = self._fn(*[jnp.asarray(a) for a in self.arrays()])
+        out = np.asarray(out).reshape(-1)
+        if self.schedule == "halo":
+            return out[self.plan.perm], np.asarray(rels)
+        return out[: self.plan.n], np.asarray(rels)

@@ -1,0 +1,239 @@
+"""Sharded reduced-Laplacian SpMV: the paper's §3.3 block-row distribution.
+
+Two communication schedules:
+
+* **psum** (baseline) — edges sharded, voltage vector replicated.  Each
+  shard scatters its local fluxes into a full-length vector and one
+  ``psum`` (all-reduce of n floats) combines them.  Robust, partition-
+  agnostic; collective volume = n per matvec.
+
+* **halo** (optimized; the paper's actual design) — nodes are partitioned
+  into contiguous ranges (one per shard, from the k-way partitioner);
+  every DIRECTED edge copy lives with the owner of its head node, so the
+  scatter is purely local and only the *gather* of remote tail values needs
+  communication.  Each shard exports its boundary values; one
+  ``all_gather`` of (p × b_sh) floats replaces the n-float all-reduce.
+  With a good partition b_sh ≪ n/p — this is exactly the paper's argument
+  that "k-way partitioning ... helps to reduce the process communication
+  cost".
+
+Both schedules are built as STATIC plans on the host (numpy) once per
+instance — mirroring the paper's one-time setup phase — and executed inside
+``shard_map`` with fixed shapes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .collectives import SOLVER_AXIS
+
+
+# ---------------------------------------------------------------------------
+# Plans (host-side, static)
+# ---------------------------------------------------------------------------
+
+class PsumPlan(NamedTuple):
+    """Edge-sharded / replicated-v plan.  All arrays have a leading shard
+    axis of size p; edge slots are padded with c = 0."""
+
+    src: np.ndarray    # i32[p, ml]
+    dst: np.ndarray    # i32[p, ml]
+    c: np.ndarray      # f32[p, ml]
+    c_s: np.ndarray    # f32[n_pad]   (replicated)
+    c_t: np.ndarray    # f32[n_pad]
+    n: int             # true node count
+    n_pad: int
+    p: int
+
+
+class HaloPlan(NamedTuple):
+    """Block-row plan.  Nodes reordered so shard i owns [i·nl, (i+1)·nl).
+
+    heads     : i32[p, ml]   local head index of each directed copy
+    tails_ext : i32[p, ml]   tail index into [local v (nl) | halo (p·b_sh)]
+    c         : f32[p, ml]   edge weight of each copy (0 = padding)
+    c_s, c_t  : f32[p, nl]   terminal weights (local slices)
+    export    : i32[p, b_sh] local indices of exported boundary nodes
+    node_valid: f32[p, nl]   1 for real nodes, 0 for padding
+    perm      : i64[n]       new_id = perm[old_id] (for lifting results)
+    n, nl, b_sh, p
+    """
+
+    heads: np.ndarray
+    tails_ext: np.ndarray
+    c: np.ndarray
+    c_s: np.ndarray
+    c_t: np.ndarray
+    export: np.ndarray
+    node_valid: np.ndarray
+    perm: np.ndarray
+    n: int
+    nl: int
+    b_sh: int
+    p: int
+
+
+def build_psum_plan(instance, p: int) -> PsumPlan:
+    g = instance.graph
+    n = g.n
+    n_pad = -(-n // p) * p
+    m = g.m
+    ml = -(-m // p) * p // p
+    src = np.zeros((p, ml), dtype=np.int32)
+    dst = np.zeros((p, ml), dtype=np.int32)
+    c = np.zeros((p, ml), dtype=np.float32)
+    flat_src = np.asarray(g.src, dtype=np.int32)
+    flat_dst = np.asarray(g.dst, dtype=np.int32)
+    flat_c = np.asarray(g.weight, dtype=np.float32)
+    for i in range(p):
+        lo, hi = i * ml, min((i + 1) * ml, m)
+        if hi > lo:
+            src[i, : hi - lo] = flat_src[lo:hi]
+            dst[i, : hi - lo] = flat_dst[lo:hi]
+            c[i, : hi - lo] = flat_c[lo:hi]
+    c_s = np.zeros(n_pad, dtype=np.float32)
+    c_t = np.zeros(n_pad, dtype=np.float32)
+    c_s[:n] = np.asarray(instance.s_weight, dtype=np.float32)
+    c_t[:n] = np.asarray(instance.t_weight, dtype=np.float32)
+    return PsumPlan(src=src, dst=dst, c=c, c_s=c_s, c_t=c_t,
+                    n=n, n_pad=n_pad, p=p)
+
+
+def build_halo_plan(instance, p: int, labels: Optional[np.ndarray] = None) -> HaloPlan:
+    """Partition → reorder → directed copies → halo layout (all numpy)."""
+    from repro.graphs import partition as gp
+
+    g = instance.graph
+    n = g.n
+    if labels is None:
+        labels = gp.partition_kway(g, p)
+    perm = gp.partition_order(labels)           # new = perm[old]
+    src = perm[np.asarray(g.src, dtype=np.int64)]
+    dst = perm[np.asarray(g.dst, dtype=np.int64)]
+    w = np.asarray(g.weight, dtype=np.float32)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(n)
+    c_s_r = np.asarray(instance.s_weight, dtype=np.float32)[inv]
+    c_t_r = np.asarray(instance.t_weight, dtype=np.float32)[inv]
+
+    # contiguous equal ranges per shard (may split partition boundaries when
+    # parts are unbalanced — the preconditioner plan tolerates this)
+    nl = -(-n // p)
+    owner = lambda node: np.minimum(node // nl, p - 1)
+
+    # directed copies: (head, tail) both ways
+    heads = np.concatenate([src, dst])
+    tails = np.concatenate([dst, src])
+    cc = np.concatenate([w, w])
+    h_own = owner(heads)
+    t_own = owner(tails)
+
+    # exported nodes per shard: tails whose copy lives on another shard
+    remote = h_own != t_own
+    b_sh = 0
+    exports = []
+    for j in range(p):
+        ex = np.unique(tails[remote & (t_own == j)])
+        exports.append(ex)
+        b_sh = max(b_sh, len(ex))
+    b_sh = max(1, -(-b_sh // 8) * 8)
+    export = np.zeros((p, b_sh), dtype=np.int32)
+    # position of node within exporting shard's list
+    pos_of = {}
+    for j, ex in enumerate(exports):
+        export[j, : len(ex)] = ex - j * nl
+        for k_, node in enumerate(ex):
+            pos_of[int(node)] = (j, k_)
+
+    # per-shard copy arrays
+    ml = 0
+    per_shard = []
+    for i in range(p):
+        sel = np.nonzero(h_own == i)[0]
+        per_shard.append(sel)
+        ml = max(ml, len(sel))
+    ml = max(1, -(-ml // 8) * 8)
+    H = np.zeros((p, ml), dtype=np.int32)
+    T = np.zeros((p, ml), dtype=np.int32)
+    C = np.zeros((p, ml), dtype=np.float32)
+    for i, sel in enumerate(per_shard):
+        k_ = len(sel)
+        H[i, :k_] = heads[sel] - i * nl
+        tl = tails[sel]
+        local = owner(tl) == i
+        text = np.empty(k_, dtype=np.int64)
+        text[local] = tl[local] - i * nl
+        for idx in np.nonzero(~local)[0]:
+            j, pos = pos_of[int(tl[idx])]
+            text[idx] = nl + j * b_sh + pos
+        T[i, :k_] = text
+        C[i, :k_] = cc[sel]
+
+    n_pad = nl * p
+    cs = np.zeros(n_pad, dtype=np.float32)
+    ct = np.zeros(n_pad, dtype=np.float32)
+    cs[:n] = c_s_r
+    ct[:n] = c_t_r
+    valid = np.zeros(n_pad, dtype=np.float32)
+    valid[:n] = 1.0
+    return HaloPlan(heads=H, tails_ext=T, c=C,
+                    c_s=cs.reshape(p, nl), c_t=ct.reshape(p, nl),
+                    export=export, node_valid=valid.reshape(p, nl),
+                    perm=perm, n=n, nl=nl, b_sh=b_sh, p=p)
+
+
+# ---------------------------------------------------------------------------
+# Device-side matvec bodies (called inside shard_map; arrays are the LOCAL
+# block with the leading shard axis of size 1)
+# ---------------------------------------------------------------------------
+
+def halo_exchange(v_loc: jax.Array, export_loc: jax.Array,
+                  axis: str = SOLVER_AXIS,
+                  compression: Optional[str] = None) -> jax.Array:
+    """Collect every shard's exported boundary values.
+
+    v_loc: f[nl] local voltages; export_loc: i32[b_sh].
+    Returns the extended vector [v_loc | halo(p·b_sh)].
+
+    ``compression="int8"`` quantizes the exported values with one per-shard
+    scale before the all-gather — 4× less halo wire traffic for a slightly
+    inexact matvec (trade-off measured in EXPERIMENTS.md §Perf.E; voltages
+    live in [0,1], so the quantization error is ≤ scale/254 ≈ 4e-3)."""
+    bvals = v_loc[export_loc]
+    if compression == "int8":
+        scale = jnp.max(jnp.abs(bvals)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(bvals / scale), -127, 127).astype(jnp.int8)
+        halo_q = jax.lax.all_gather(q, axis)            # [p, b_sh] int8
+        scales = jax.lax.all_gather(scale, axis)        # [p]
+        halo = halo_q.astype(v_loc.dtype) * scales[:, None]
+    else:
+        halo = jax.lax.all_gather(bvals, axis)          # [p, b_sh]
+    return jnp.concatenate([v_loc, halo.reshape(-1)])
+
+
+def make_halo_matvec(plan_nl: int):
+    """y_u = diag_u v_u − Σ_{copies head=u} r_e v_tail  (local scatter only).
+
+    ``ext`` is the halo-extended vector from halo_exchange; ``r`` are the
+    per-copy reweighted conductances (0 on padding)."""
+    def mv(ext, heads, tails_ext, r, diag_loc):
+        contrib = r * jnp.take(ext, tails_ext, axis=0, fill_value=0.0)
+        acc = jax.ops.segment_sum(contrib, heads, num_segments=plan_nl)
+        return diag_loc * ext[:plan_nl] - acc
+    return mv
+
+
+def psum_matvec(v_full: jax.Array, src: jax.Array, dst: jax.Array,
+                r: jax.Array, rs_rt_diag: jax.Array, n_pad: int,
+                axis: str = SOLVER_AXIS) -> jax.Array:
+    """Baseline: local partial scatter over owned edges + one all-reduce."""
+    flux = r * (v_full[src] - v_full[dst])
+    y = jax.ops.segment_sum(flux, src, num_segments=n_pad)
+    y = y - jax.ops.segment_sum(flux, dst, num_segments=n_pad)
+    y = jax.lax.psum(y, axis)
+    return y + rs_rt_diag * v_full

@@ -1,0 +1,246 @@
+"""Graph containers used across the framework.
+
+Three layouts, mirroring DESIGN.md §2:
+
+* ``EdgeList`` — canonical undirected edge list (each edge stored once with an
+  arbitrary orientation ``src -> dst``).  This is the layout the IRLS solver
+  consumes: the incidence operator ``C B x`` is a gather over (src, dst) and
+  ``Bᵀ y`` is a ``segment_sum`` scatter.
+* ``CSR`` — host-side compressed sparse rows, used by the neighbour sampler,
+  the exact max-flow oracle and the partitioner.
+* ``ELL`` — ELLPACK padded fixed-degree layout, the TPU-native SpMV layout
+  (regular gathers; see kernels/ell_spmv.py).
+
+All device-facing containers are plain NamedTuples of arrays so they are
+pytree-compatible and can be donated / sharded by pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+try:  # jnp only needed for device paths; numpy paths must import standalone.
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jnp = None
+
+
+class EdgeList(NamedTuple):
+    """Undirected weighted graph as an oriented edge list.
+
+    src, dst : int32[m]   endpoints (arbitrary but fixed orientation)
+    weight   : float[m]   positive edge weights c({u,v})
+    n        : int        number of nodes (static python int)
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    weight: np.ndarray
+    n: int
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        d = np.zeros(self.n, dtype=np.int64)
+        np.add.at(d, np.asarray(self.src), 1)
+        np.add.at(d, np.asarray(self.dst), 1)
+        return d
+
+    def weighted_degrees(self) -> np.ndarray:
+        d = np.zeros(self.n, dtype=np.float64)
+        np.add.at(d, np.asarray(self.src), np.asarray(self.weight, dtype=np.float64))
+        np.add.at(d, np.asarray(self.dst), np.asarray(self.weight, dtype=np.float64))
+        return d
+
+    def total_weight(self) -> float:
+        return float(np.sum(self.weight))
+
+    def validate(self) -> "EdgeList":
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        w = np.asarray(self.weight)
+        assert src.shape == dst.shape == w.shape
+        assert src.ndim == 1
+        assert np.all(w > 0), "edge weights must be positive"
+        assert np.all(src != dst), "self loops are not allowed"
+        assert src.min(initial=0) >= 0 and dst.min(initial=0) >= 0
+        assert max(src.max(initial=-1), dst.max(initial=-1)) < self.n
+        return self
+
+    def permute_nodes(self, perm: np.ndarray) -> "EdgeList":
+        """Relabel nodes: new_id = perm[old_id]."""
+        perm = np.asarray(perm)
+        return EdgeList(
+            src=perm[np.asarray(self.src)].astype(np.int32),
+            dst=perm[np.asarray(self.dst)].astype(np.int32),
+            weight=np.asarray(self.weight),
+            n=self.n,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Host-side symmetric adjacency in CSR form (both directions stored)."""
+
+    indptr: np.ndarray  # int64[n+1]
+    indices: np.ndarray  # int32[2m]
+    data: np.ndarray  # float[2m]
+    n: int
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def neighbors(self, u: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = self.indptr[u], self.indptr[u + 1]
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+class ELL(NamedTuple):
+    """ELLPACK padded neighbour layout (TPU-native SpMV).
+
+    cols    : int32[n, k]  neighbour ids, padded with 0 where invalid
+    vals    : float[n, k]  off-diagonal values (0 where padded)
+    diag    : float[n]     diagonal of the (Laplacian-like) matrix
+    """
+
+    cols: np.ndarray
+    vals: np.ndarray
+    diag: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(self.cols.shape[0])
+
+    @property
+    def k(self) -> int:
+        return int(self.cols.shape[1])
+
+
+def edgelist_to_csr(g: EdgeList) -> CSR:
+    src = np.asarray(g.src, dtype=np.int64)
+    dst = np.asarray(g.dst, dtype=np.int64)
+    w = np.asarray(g.weight, dtype=np.float64)
+    rows = np.concatenate([src, dst])
+    cols = np.concatenate([dst, src])
+    vals = np.concatenate([w, w])
+    order = np.argsort(rows, kind="stable")
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    indptr = np.zeros(g.n + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSR(indptr=indptr, indices=cols.astype(np.int32), data=vals, n=g.n)
+
+
+def csr_to_ell(a: CSR, diag: Optional[np.ndarray] = None, k: Optional[int] = None) -> ELL:
+    """Pad a CSR adjacency into ELLPACK.  ``diag`` defaults to weighted degree
+    (i.e. the Laplacian diagonal)."""
+    deg = a.degrees()
+    kk = int(k if k is not None else (deg.max() if a.n else 0))
+    cols = np.zeros((a.n, kk), dtype=np.int32)
+    vals = np.zeros((a.n, kk), dtype=a.data.dtype)
+    for u in range(a.n):
+        lo, hi = a.indptr[u], a.indptr[u + 1]
+        cnt = int(hi - lo)
+        if cnt > kk:
+            raise ValueError(f"node {u} degree {cnt} exceeds ELL width {kk}")
+        cols[u, :cnt] = a.indices[lo:hi]
+        vals[u, :cnt] = a.data[lo:hi]
+    if diag is None:
+        diag = np.zeros(a.n, dtype=np.float64)
+        np.add.at(diag, np.repeat(np.arange(a.n), np.diff(a.indptr)), a.data)
+    return ELL(cols=cols, vals=vals, diag=np.asarray(diag))
+
+
+def edgelist_to_ell(g: EdgeList, k: Optional[int] = None) -> ELL:
+    """ELLPACK of the *Laplacian* of g: diag = weighted degree, off-diag = -w."""
+    a = edgelist_to_csr(g)
+    ell = csr_to_ell(a, k=k)
+    return ELL(cols=ell.cols, vals=-ell.vals, diag=ell.diag)
+
+
+def laplacian_dense(g: EdgeList, reweight: Optional[np.ndarray] = None) -> np.ndarray:
+    """Dense Laplacian (testing oracle only). reweight multiplies edge weights."""
+    w = np.asarray(g.weight, dtype=np.float64)
+    if reweight is not None:
+        w = w * np.asarray(reweight, dtype=np.float64)
+    L = np.zeros((g.n, g.n), dtype=np.float64)
+    s = np.asarray(g.src)
+    d = np.asarray(g.dst)
+    np.add.at(L, (s, d), -w)
+    np.add.at(L, (d, s), -w)
+    np.add.at(L, (s, s), w)
+    np.add.at(L, (d, d), w)
+    return L
+
+
+class STInstance(NamedTuple):
+    """An s-t min-cut instance: non-terminal graph + terminal edges.
+
+    The layout mirrors the paper's decomposition (§3.3): ``graph`` is the
+    non-terminal graph G~ over nodes 0..n-1; ``s_weight[u]`` / ``t_weight[u]``
+    are the terminal edge weights c({s,u}) / c({t,u}) (0 when absent).
+    The full graph G has n+2 nodes with s = n, t = n+1.
+    """
+
+    graph: EdgeList
+    s_weight: np.ndarray  # float[n]
+    t_weight: np.ndarray  # float[n]
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    @property
+    def s(self) -> int:
+        return self.graph.n
+
+    @property
+    def t(self) -> int:
+        return self.graph.n + 1
+
+    def full_edgelist(self) -> EdgeList:
+        """Materialize the full graph including terminal edges (oracle paths)."""
+        su = np.nonzero(np.asarray(self.s_weight) > 0)[0]
+        tu = np.nonzero(np.asarray(self.t_weight) > 0)[0]
+        src = np.concatenate([np.asarray(self.graph.src),
+                              np.full(su.shape, self.s, dtype=np.int64),
+                              np.full(tu.shape, self.t, dtype=np.int64)])
+        dst = np.concatenate([np.asarray(self.graph.dst), su, tu])
+        w = np.concatenate([np.asarray(self.graph.weight),
+                            np.asarray(self.s_weight)[su],
+                            np.asarray(self.t_weight)[tu]])
+        return EdgeList(src=src.astype(np.int32), dst=dst.astype(np.int32),
+                        weight=w, n=self.n + 2)
+
+    def cut_value(self, in_source: np.ndarray) -> float:
+        """cut(S, S̄) for a boolean indicator over non-terminal nodes
+        (True = source side).  Includes terminal edges."""
+        ind = np.asarray(in_source, dtype=bool)
+        s_, d_ = np.asarray(self.graph.src), np.asarray(self.graph.dst)
+        w = np.asarray(self.graph.weight, dtype=np.float64)
+        crossing = ind[s_] != ind[d_]
+        val = float(np.sum(w[crossing]))
+        # terminal edges: s->u cut when u on sink side; t->u cut when u on source side
+        val += float(np.sum(np.asarray(self.s_weight, dtype=np.float64)[~ind]))
+        val += float(np.sum(np.asarray(self.t_weight, dtype=np.float64)[ind]))
+        return val
+
+
+def permute_instance(inst: STInstance, perm: np.ndarray) -> STInstance:
+    """Relabel non-terminal nodes of an instance: new_id = perm[old_id]."""
+    perm = np.asarray(perm)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0])
+    return STInstance(
+        graph=inst.graph.permute_nodes(perm),
+        s_weight=np.asarray(inst.s_weight)[inv],
+        t_weight=np.asarray(inst.t_weight)[inv],
+    )

@@ -1,0 +1,59 @@
+"""Block-Jacobi apply Pallas TPU kernel: batched block-diagonal matvec.
+
+The paper applies its block-Jacobi preconditioner with per-block sparse
+LU/ILU(0) triangular solves (UMFPACK / PETSc).  Triangular solves are
+inherently sequential along the dependency chain — a poor fit for the MXU.
+The TPU-native adaptation (DESIGN.md §2): form the explicit block inverses
+once per IRLS iteration (batched Cholesky + batched solve against I, done by
+XLA), then every PCG preconditioning step is
+
+    y[p] = inv_blocks[p] @ x[p]        p = 0..P-1
+
+— pure batched GEMM work that lives on the MXU.  One IRLS iteration runs
+~50 PCG steps, so the (more expensive) explicit inversion amortizes exactly
+like the paper's "symbolic factorization once, numeric refactor per
+iteration" argument.
+
+Tiling: grid over blocks; each step loads one (bs, bs) block + its (bs,)
+slice into VMEM and issues an MXU matvec.  bs is padded to a multiple of 128
+by ops.py so the matmul dims are hardware-aligned; typical bs = 128–512
+⇒ 64 KiB–1 MiB per block in f32, well inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_diag_matvec_kernel(a_ref, x_ref, y_ref):
+    a = a_ref[...]                     # (1, bs, bs)
+    x = x_ref[...]                     # (1, bs)
+    # MXU matvec: contract as (bs, bs) @ (bs, 1) to keep a 2-D matmul shape
+    y = jnp.dot(a[0], x[0][:, None],
+                preferred_element_type=jnp.float32)
+    y_ref[...] = y[:, 0][None].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_diag_matvec_pallas(blocks: jax.Array, x: jax.Array,
+                             *, interpret: bool = False) -> jax.Array:
+    """y[p] = blocks[p] @ x[p]  (see ref.block_diag_matvec_ref).
+
+    blocks: f[P, bs, bs], x: f[P, bs] → f[P, bs].
+    """
+    p, bs, bs2 = blocks.shape
+    assert bs == bs2 and x.shape == (p, bs)
+    return pl.pallas_call(
+        _block_diag_matvec_kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, bs), x.dtype),
+        interpret=interpret,
+    )(blocks, x)

@@ -1,0 +1,64 @@
+"""Fused IRLS edge-reweight Pallas TPU kernel (paper eq. 4 → eq. 8).
+
+One pass over the edge list computes, per edge,
+
+    z_e = c_e · (v[src_e] − v[dst_e])         (gather, subtract, scale)
+    w_e = sqrt(z_e² + ε²)                      (smoothed ℓ1 weight)
+    r_e = c_e² / w_e                           (reweighted conductance)
+
+The unfused jnp path materializes z, w and r separately (3 HBM round trips
+over m-length vectors); the kernel keeps everything in VREGs so the edge
+arrays stream through VMEM exactly once — the reweighting step is then
+bandwidth-bound at 3 reads + 1 write per edge, its roofline minimum.
+
+Tiling: grid over edge blocks (E = 4096 edges per step); ``v`` stays fully
+VMEM-resident like in ell_spmv (sharded upstream).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EDGES_PER_BLOCK = 4096
+
+
+def _edge_reweight_kernel(src_ref, dst_ref, c_ref, v_ref, eps_ref, r_ref):
+    src = src_ref[...]
+    dst = dst_ref[...]
+    c = c_ref[...]
+    v = v_ref[...]
+    eps = eps_ref[0]
+    z = c * (jnp.take(v, src, axis=0, fill_value=0)
+             - jnp.take(v, dst, axis=0, fill_value=0))
+    r_ref[...] = (c * c) * jax.lax.rsqrt(z * z + eps * eps)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def edge_reweight_pallas(src: jax.Array, dst: jax.Array, c: jax.Array,
+                         v: jax.Array, eps: jax.Array,
+                         *, interpret: bool = False) -> jax.Array:
+    """r_e = c² / sqrt((c·Δv)² + ε²)  (see ref.edge_reweight_ref).
+
+    m must be a multiple of EDGES_PER_BLOCK (the ops.py wrapper pads)."""
+    m = src.shape[0]
+    n = v.shape[0]
+    assert m % EDGES_PER_BLOCK == 0, m
+    grid = (m // EDGES_PER_BLOCK,)
+    eps_arr = jnp.asarray([eps], dtype=v.dtype)
+    return pl.pallas_call(
+        _edge_reweight_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((EDGES_PER_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((EDGES_PER_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((EDGES_PER_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((EDGES_PER_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), v.dtype),
+        interpret=interpret,
+    )(src, dst, c, v, eps_arr)

@@ -1,0 +1,93 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode, which executes the kernel body in Python — the
+correctness contract the tests enforce against ref.py.  The wrappers own all
+padding so callers never see the block-size requirements.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_diag_matmul import block_diag_matvec_pallas
+from .edge_reweight import EDGES_PER_BLOCK, edge_reweight_pallas
+from .ell_spmv import ROWS_PER_BLOCK, ell_spmv_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int = 0, value=0):
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def ell_spmv(cols: jax.Array, vals: jax.Array, diag: jax.Array,
+             v: jax.Array) -> jax.Array:
+    """ELLPACK SpMV (kernel on TPU / interpret elsewhere).  Pads the row
+    count to ROWS_PER_BLOCK; padded rows have diag=0, vals=0 → output 0."""
+    n = v.shape[0]
+    cols_p = _pad_to(cols, ROWS_PER_BLOCK)
+    vals_p = _pad_to(vals, ROWS_PER_BLOCK)
+    diag_p = _pad_to(diag, ROWS_PER_BLOCK)
+    n_pad = cols_p.shape[0]
+    # v is only padded for the diag⊙v row slice; gathers use fill_value=0
+    v_p = _pad_to(v, ROWS_PER_BLOCK) if n_pad != n else v
+    y = ell_spmv_pallas(cols_p, vals_p, diag_p, v_p, interpret=_interpret())
+    return y[:n]
+
+
+def edge_reweight_r(src: jax.Array, dst: jax.Array, c: jax.Array,
+                    v: jax.Array, eps) -> jax.Array:
+    """Fused reweighted conductances r_e (padded edges get c=0 → r=0)."""
+    m = src.shape[0]
+    src_p = _pad_to(src, EDGES_PER_BLOCK)
+    dst_p = _pad_to(dst, EDGES_PER_BLOCK)
+    c_p = _pad_to(c, EDGES_PER_BLOCK)
+    r = edge_reweight_pallas(src_p, dst_p, c_p, v, jnp.asarray(eps, v.dtype),
+                             interpret=_interpret())
+    return r[:m]
+
+
+def edge_reweight(g, v: jax.Array, eps):
+    """Drop-in replacement for core.laplacian.reweight backed by the fused
+    kernel: kernel computes r; terminal conductances + diagonal assembly
+    (segment_sum scatters) stay in XLA."""
+    from repro.core.laplacian import Reweighted
+
+    r = edge_reweight_r(g.src, g.dst, g.c, v, eps)
+    z_s = g.c_s * (1.0 - v)
+    z_t = g.c_t * v
+    r_s = jnp.where(g.c_s > 0,
+                    (g.c_s * g.c_s) / jnp.sqrt(z_s * z_s + eps * eps), 0.0)
+    r_t = jnp.where(g.c_t > 0,
+                    (g.c_t * g.c_t) / jnp.sqrt(z_t * z_t + eps * eps), 0.0)
+    deg = jax.ops.segment_sum(r, g.src, num_segments=g.n)
+    deg = deg + jax.ops.segment_sum(r, g.dst, num_segments=g.n)
+    return Reweighted(r=r, r_s=r_s, r_t=r_t, diag=deg + r_s + r_t)
+
+
+def block_diag_matvec(blocks: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched block-diagonal matvec; pads bs up to a 128 multiple so the
+    MXU matmul dims are hardware-aligned."""
+    p, bs, _ = blocks.shape
+    target = max(128, -(-bs // 128) * 128)
+    if target != bs:
+        blocks = jnp.pad(blocks, ((0, 0), (0, target - bs), (0, target - bs)))
+        x = jnp.pad(x, ((0, 0), (0, target - bs)))
+    y = block_diag_matvec_pallas(blocks, x, interpret=_interpret())
+    return y[:, :bs]
+
+
+__all__ = ["ell_spmv", "edge_reweight", "edge_reweight_r",
+           "block_diag_matvec", "ref"]

@@ -1,0 +1,420 @@
+"""Dry-run program builders: (arch × shape-cell × mesh) → lowerable jit.
+
+Every assigned cell resolves here to a concrete program:
+
+  LM    train_4k     → full train step (fwd + bwd + AdamW update)
+        prefill_32k  → prefill (logits + KV-cache fill)
+        decode_32k   → one serve_step against a 32k cache (donated)
+        long_500k    → serve_step, batch 1, 524k cache sharded over seq
+  GNN   *            → full train step on the cell-sized graph batch
+  DIN   train_batch  → train step;  serve_* → scoring;  retrieval_cand →
+                       1-user × 1M-candidate scoring
+  PIRMCut road_*/grid_* → the sharded IRLS(T)×PCG(K) solver program over
+                       the flattened mesh (halo schedule)
+
+Inputs are ``ShapeDtypeStruct``s — nothing is allocated; ``lower().compile()``
+is the proof of distribution coherence.  Dims that don't divide the mesh are
+padded UP to the next multiple (recorded in meta) — exactly what a
+production launcher would do to the batch/graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.models import gnn as gnn_m
+from repro.models import recsys as din_m
+from repro.models import transformer as tr
+from repro.models.sharding import ShardingRules, lm_rules
+from repro.train.optimizer import AdamWConfig, init_state
+
+
+@dataclasses.dataclass
+class DryRunProgram:
+    arch: str
+    cell: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args)
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _mesh_size(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def _data_size(mesh: Mesh) -> int:
+    s = mesh.shape.get("data", 1)
+    s *= mesh.shape.get("pod", 1)
+    return s
+
+
+def _abstract_tree(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _tree_sharding(tree, sharding):
+    return jax.tree.map(lambda _: sharding, tree)
+
+
+# ---------------------------------------------------------------------------
+# rules per family
+# ---------------------------------------------------------------------------
+
+def gnn_rules(mesh: Optional[Mesh]) -> ShardingRules:
+    axes = tuple(a for a in ("pod", "data", "model")
+                 if mesh is not None and a in mesh.shape)
+    return ShardingRules(mesh=mesh, rules={
+        "nodes": axes, "edges": axes, "triplets": axes,
+        "fsdp": None,
+    })
+
+
+def din_rules(mesh: Optional[Mesh]) -> ShardingRules:
+    data_axes = tuple(a for a in ("pod", "data")
+                      if mesh is not None and a in mesh.shape)
+    all_axes = tuple(a for a in ("pod", "data", "model")
+                     if mesh is not None and a in mesh.shape)
+    return ShardingRules(mesh=mesh, rules={
+        "batch": data_axes, "rows": "model", "candidates": all_axes,
+    })
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (analytic "useful work" for the roofline ratio)
+# ---------------------------------------------------------------------------
+
+def lm_model_flops(cfg: tr.LMConfig, cell: dict) -> float:
+    n_act = cfg.active_param_count()
+    B, S = cell["global_batch"], cell["seq_len"]
+    kinds = cfg.layer_kinds()
+    H, Dh = cfg.n_heads, cfg.d_head
+    if cell["kind"] == "train":
+        flops = 6.0 * n_act * B * S
+        for k in kinds:                      # causal attention term (fwd+bwd)
+            ctx = min(cfg.window, S) if (k == "L" and cfg.window) else S
+            flops += 3.0 * B * S * (ctx / (1 if k == "L" and cfg.window else 2)) \
+                * 4 * H * Dh
+        return flops
+    if cell["kind"] == "prefill":
+        flops = 2.0 * n_act * B * S
+        for k in kinds:
+            ctx = min(cfg.window, S) if (k == "L" and cfg.window) else S
+            flops += B * S * (ctx / (1 if k == "L" and cfg.window else 2)) \
+                * 4 * H * Dh
+        return flops
+    # decode: one token/step
+    flops = 2.0 * n_act * B
+    for k in kinds:
+        ctx = min(cfg.window, S) if (k == "L" and cfg.window) else S
+        flops += 4.0 * B * ctx * H * Dh
+    return flops
+
+
+def gnn_model_flops(arch: str, cfg, cell: dict) -> float:
+    n, e = cell["n_nodes"], cell["n_edges"]
+    if arch == "gcn-cora":
+        f = 2.0 * n * (cfg.in_dim * cfg.d_hidden + cfg.d_hidden * cfg.n_classes)
+        f += 2.0 * 2 * e * (cfg.d_hidden + cfg.n_classes)
+    elif arch == "schnet":
+        h, r = cfg.d_hidden, cfg.n_rbf
+        per = e * 2 * (r * h + h * h) + n * 2 * (2 * h * h) + 2 * e * h * 2
+        f = cfg.n_interactions * per + n * 2 * (h * h // 2)
+    elif arch == "dimenet":
+        h, nb = cfg.d_hidden, cfg.n_bilinear
+        T = cell["n_triplets"]
+        per = (e * 2 * (cfg.n_radial * h + 3 * h * h)
+               + T * 2 * (cfg.sbf_dim * nb + h * nb * h))
+        f = cfg.n_blocks * per + e * 2 * h * h
+    else:  # meshgraphnet
+        h = cfg.d_hidden
+        per = e * 2 * (3 * h * h + h * h) + n * 2 * (2 * h * h + h * h)
+        f = cfg.n_layers * per + n * 2 * (cell["d_feat"] * h) + e * 2 * (7 * h)
+    return 3.0 * f  # train: fwd + bwd
+
+
+def din_model_flops(cfg, cell: dict) -> float:
+    d2 = 4 * cfg.embed_dim
+    att = cfg.seq_len * 2 * (2 * d2 * cfg.attn_mlp[0]
+                             + cfg.attn_mlp[0] * cfg.attn_mlp[1]
+                             + cfg.attn_mlp[1])
+    head = 2 * ((2 * d2 // 2 + cfg.embed_dim) * cfg.mlp[0]
+                + cfg.mlp[0] * cfg.mlp[1] + cfg.mlp[1])
+    per_ex = att + head
+    if cell["kind"] == "train":
+        return 3.0 * cell["batch"] * per_ex
+    if cell["kind"] == "retrieval":
+        return float(cell["n_candidates"]) * per_ex
+    return float(cell["batch"]) * per_ex
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _opt_cfg_for(cfg: tr.LMConfig) -> AdamWConfig:
+    # llama4's 770B-param stack keeps moments in bf16 (memory table in
+    # DESIGN.md); everything else holds f32 moments.
+    big = cfg.param_count() > 3e11
+    return AdamWConfig(moments_dtype=jnp.bfloat16 if big else jnp.float32)
+
+
+def build_lm_cell(arch: str, cell_id: str, mesh: Mesh) -> DryRunProgram:
+    entry = registry.get(arch)
+    cfg: tr.LMConfig = entry.make_config()
+    cell = entry.shapes[cell_id]
+    rules = lm_rules(mesh)
+    B = cell["global_batch"]
+    S = cell["seq_len"]
+    aparams = tr.abstract_params(cfg)
+    psh = tr.param_shardings(cfg, rules)
+    meta = dict(kind=cell["kind"], global_batch=B, seq_len=S,
+                params=cfg.param_count(), active_params=cfg.active_param_count(),
+                model_flops=lm_model_flops(cfg, cell))
+
+    if cell["kind"] == "train":
+        opt_cfg = _opt_cfg_for(cfg)
+        aopt = jax.eval_shape(lambda p: init_state(opt_cfg, p), aparams)
+        osh = {"m": psh, "v": psh, "count": _replicated(mesh)}
+        tok_sh = rules.named_sharding("batch", None, shape=(B, S))
+        from repro.train.train_step import build_train_step
+        step = build_train_step(lambda p, b: tr.lm_loss(p, b, cfg, rules),
+                                opt_cfg)
+        atoks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return DryRunProgram(
+            arch, cell_id, step, (aparams, aopt, atoks),
+            in_shardings=(psh, osh, tok_sh),
+            out_shardings=(psh, osh, _tree_sharding(
+                {"loss": 0, "grad_norm": 0, "lr": 0}, _replicated(mesh))),
+            donate_argnums=(0, 1), meta=meta)
+
+    if cell["kind"] == "prefill":
+        tok_sh = rules.named_sharding("batch", None, shape=(B, S))
+        csh = tr.cache_shardings(cfg, B, S, rules)
+        fn = lambda p, t: tr.prefill(p, t, cfg, rules)
+        atoks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return DryRunProgram(
+            arch, cell_id, fn, (aparams, atoks),
+            in_shardings=(psh, tok_sh),
+            out_shardings=(rules.named_sharding("batch", "vocab",
+                                                shape=(B, cfg.vocab)), csh),
+            donate_argnums=(), meta=meta)
+
+    # decode
+    acache = tr.abstract_cache(cfg, B, S)
+    csh = tr.cache_shardings(cfg, B, S, rules)
+    tok_sh = rules.named_sharding("batch", shape=(B,))
+    fn = lambda p, c, t, i: tr.decode_step(p, c, t, i, cfg, rules)
+    args = (aparams, acache, jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return DryRunProgram(
+        arch, cell_id, fn, args,
+        in_shardings=(psh, csh, tok_sh, _replicated(mesh)),
+        out_shardings=(rules.named_sharding("batch", "vocab",
+                                            shape=(B, cfg.vocab)), csh),
+        donate_argnums=(1,), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def build_gnn_cell(arch: str, cell_id: str, mesh: Mesh) -> DryRunProgram:
+    from repro.data.graphs import gnn_batch_shapes
+
+    entry = registry.get(arch)
+    cell = dict(entry.shapes[cell_id])
+    p = _mesh_size(mesh)
+    # pad graph dims to mesh multiples (production padding, recorded)
+    for k in ("n_nodes", "n_edges", "n_triplets"):
+        cell[k] = _pad_up(cell[k], p) if cell.get(k) else cell.get(k, 0)
+    cfg = entry.make_config(cell)
+    rules = gnn_rules(mesh)
+
+    shapes = gnn_batch_shapes(
+        arch, cell["n_nodes"], cell["n_edges"], cell["d_feat"],
+        n_triplets=cell.get("n_triplets", 0),
+        n_graphs=cell.get("n_graphs", 1))
+    abatch = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+
+    def batch_sharding(name, shape):
+        lead = {"edge_src": "edges", "edge_dst": "edges", "edge_mask": "edges",
+                "edge_dist": "edges", "edge_feat": "edges",
+                "tri_kj": "triplets", "tri_ji": "triplets",
+                "tri_mask": "triplets", "tri_sbf": "triplets"}.get(name, "nodes")
+        if name == "labels" and len(shape) == 1 and shape[0] == cell.get("n_graphs"):
+            return _replicated(mesh)
+        dims = (lead,) + (None,) * (len(shape) - 1)
+        return rules.named_sharding(*dims, shape=shape)
+
+    bsh = {k: batch_sharding(k, s.shape) for k, s in abatch.items()}
+
+    loss_fns = {
+        "gcn-cora": gnn_m.gcn_loss, "schnet": gnn_m.schnet_loss,
+        "dimenet": gnn_m.dimenet_loss, "meshgraphnet": gnn_m.mgn_loss,
+    }
+    init_fns = {
+        "gcn-cora": gnn_m.gcn_init, "schnet": gnn_m.schnet_init,
+        "dimenet": gnn_m.dimenet_init, "meshgraphnet": gnn_m.mgn_init,
+    }
+    n_graphs = cell.get("n_graphs", 1)
+    needs_graphs = arch in ("schnet", "dimenet")
+
+    def loss(params, batch):
+        b = dict(batch, n_graphs=n_graphs) if needs_graphs else batch
+        return loss_fns[arch](params, b, cfg, rules)
+
+    aparams = jax.eval_shape(lambda k: init_fns[arch](cfg, k),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+    psh = _tree_sharding(aparams, _replicated(mesh))  # GNN params are tiny
+    opt_cfg = AdamWConfig()
+    aopt = jax.eval_shape(lambda pp: init_state(opt_cfg, pp), aparams)
+    osh = {"m": psh, "v": psh, "count": _replicated(mesh)}
+
+    from repro.train.train_step import build_train_step
+    step = build_train_step(loss, opt_cfg)
+    meta = dict(kind="train", model_flops=gnn_model_flops(arch, cfg, cell),
+                padded_cell=cell)
+    return DryRunProgram(
+        arch, cell_id, step, (aparams, aopt, abatch),
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, _tree_sharding(
+            {"loss": 0, "grad_norm": 0, "lr": 0}, _replicated(mesh))),
+        donate_argnums=(0, 1), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# DIN cells
+# ---------------------------------------------------------------------------
+
+def build_din_cell(arch: str, cell_id: str, mesh: Mesh) -> DryRunProgram:
+    from repro.data.recsys import din_batch_shapes, din_retrieval_shapes
+
+    entry = registry.get(arch)
+    cfg = entry.make_config()
+    cell = dict(entry.shapes[cell_id])
+    rules = din_rules(mesh)
+    p_all = _mesh_size(mesh)
+
+    aparams = jax.eval_shape(lambda k: din_m.din_init(cfg, k),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def table_sharding(name, shape):
+        if name.endswith("_table"):
+            return rules.named_sharding("rows", None, shape=shape)
+        return _replicated(mesh)
+
+    psh = {k: (table_sharding(k, v.shape) if not isinstance(v, dict)
+               else _tree_sharding(v, _replicated(mesh)))
+           for k, v in aparams.items()}
+    meta = dict(kind=cell["kind"], model_flops=din_model_flops(cfg, cell))
+
+    if cell["kind"] == "retrieval":
+        C = _pad_up(cell["n_candidates"], p_all)
+        cell["n_candidates"] = C
+        shapes = din_retrieval_shapes(C, cfg.seq_len, cfg.tag_bag_width)
+        abatch = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+        bsh = {k: (rules.named_sharding("candidates", shape=v.shape)
+                   if k.startswith("cand") else _replicated(mesh))
+               for k, v in abatch.items()}
+        fn = lambda p, b: din_m.din_retrieval_scores(p, b, cfg, rules)
+        return DryRunProgram(
+            arch, cell_id, fn, (aparams, abatch),
+            in_shardings=(psh, bsh),
+            out_shardings=rules.named_sharding("candidates", shape=(C,)),
+            donate_argnums=(), meta=meta)
+
+    B = cell["batch"]
+    shapes = din_batch_shapes(B, cfg.seq_len, cfg.tag_bag_width,
+                              with_labels=cell["kind"] == "train")
+    abatch = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    bsh = {k: rules.named_sharding(*("batch",) + (None,) * (len(v.shape) - 1),
+                                   shape=v.shape)
+           for k, v in abatch.items()}
+
+    if cell["kind"] == "train":
+        opt_cfg = AdamWConfig()
+        aopt = jax.eval_shape(lambda pp: init_state(opt_cfg, pp), aparams)
+        osh = {"m": psh, "v": psh, "count": _replicated(mesh)}
+        from repro.train.train_step import build_train_step
+        step = build_train_step(
+            lambda p, b: din_m.din_loss(p, b, cfg, rules), opt_cfg)
+        return DryRunProgram(
+            arch, cell_id, step, (aparams, aopt, abatch),
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, _tree_sharding(
+                {"loss": 0, "grad_norm": 0, "lr": 0}, _replicated(mesh))),
+            donate_argnums=(0, 1), meta=meta)
+
+    fn = lambda p, b: din_m.din_logits(p, b, cfg, rules)
+    return DryRunProgram(
+        arch, cell_id, fn, (aparams, abatch),
+        in_shardings=(psh, bsh),
+        out_shardings=rules.named_sharding("batch", shape=(B,)),
+        donate_argnums=(), meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# PIRMCut solver cells (the paper's workload on the production mesh)
+# ---------------------------------------------------------------------------
+
+def build_solver_cell(arch: str, cell_id: str, mesh: Mesh) -> DryRunProgram:
+    from repro.core.irls import IRLSConfig
+    from repro.distributed.collectives import flatten_mesh
+    from repro.distributed.solver import ShardedSolver, abstract_halo_plans
+
+    entry = registry.get(arch)
+    cell = entry.shapes[cell_id]
+    fmesh = flatten_mesh(mesh)
+    p = _mesh_size(mesh)
+    plan, bplan = abstract_halo_plans(cell["n_nodes"], cell["n_edges"], p,
+                                      cell["boundary_frac"], precond_bs=128)
+    cfg = IRLSConfig(n_irls=50, pcg_max_iters=50, precond="block_jacobi")
+    solver = ShardedSolver(None, cfg, mesh=fmesh, schedule="halo",
+                           plans=(plan, bplan))
+    meta = dict(kind="solve", n_nodes=cell["n_nodes"], n_edges=cell["n_edges"],
+                # per PCG iteration: SpMV touches each directed copy once
+                # (8 flops: gather-sub-mul-acc) + axpys; × T·K iterations
+                model_flops=cfg.n_irls * cfg.pcg_max_iters *
+                (8.0 * 2 * cell["n_edges"] + 10.0 * cell["n_nodes"]))
+    sh = NamedSharding(fmesh, P("shard"))
+    args = solver.abstract_inputs()
+    return DryRunProgram(
+        arch, cell_id, solver._raw_body, args,
+        in_shardings=tuple(sh for _ in args),
+        out_shardings=(sh, _replicated(fmesh)),
+        donate_argnums=(), meta=meta)
+
+
+def build_cell(arch: str, cell_id: str, mesh: Mesh) -> DryRunProgram:
+    family = registry.get(arch).family
+    if family == "lm":
+        return build_lm_cell(arch, cell_id, mesh)
+    if family == "gnn":
+        return build_gnn_cell(arch, cell_id, mesh)
+    if family == "recsys":
+        return build_din_cell(arch, cell_id, mesh)
+    return build_solver_cell(arch, cell_id, mesh)

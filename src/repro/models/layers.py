@@ -1,0 +1,473 @@
+"""Shared neural-net layers for the architecture zoo (pure JAX, functional).
+
+Everything is a plain function over pytrees of arrays — no framework.  The
+perf-critical attention path is a blockwise (flash-style) implementation
+with online softmax so long-context prefill never materializes an
+[Sq, Sk] score matrix; windowed (local) layers use a banded kv slice so
+their FLOPs scale with the window, not the sequence.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: [..., S, H, D], positions: [..., S] (int)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash) attention with a FLASH BACKWARD (custom_vjp)
+# ---------------------------------------------------------------------------
+# A plain lax.scan online-softmax forward is memory-efficient, but its
+# autodiff backward saves the per-tile probability matrices across the scan
+# — O(S²) residuals, exactly what flash attention exists to avoid (observed:
+# 10 GiB/chip f32 stacks in the llama4 train_4k dry-run, §Perf iteration 1).
+# So the backward is written by hand, FlashAttention-style: save only
+# (q, k, v, out, lse) and recompute each tile's probabilities in the
+# backward, accumulating dq per q-chunk and dk/dv per kv-chunk.
+
+def _tile_logits(qc, kc, scale, q_pos, k_pos, causal, window):
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale
+    msk = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        msk &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        msk &= k_pos[None, :] > q_pos[:, None] - window
+    return logits + jnp.where(msk, 0.0, NEG_INF)[None, None, None]
+
+
+def _flash_fwd_impl(q, k, v, *, causal, window, q_offset, q_chunk, k_chunk,
+                    scale):
+    """Returns (out [B,Sq,KV,G,D], lse [B,KV,G,Sq])."""
+    B, Sq, KV, G, D = q.shape
+    Sk = k.shape[1]
+    nq = Sq // q_chunk
+    qr = q.reshape(B, nq, q_chunk, KV, G, D)
+    banded = window is not None and window + q_chunk < Sk
+    w_len = min(window + q_chunk, Sk) if window is not None else Sk
+
+    def one_chunk(i):
+        qc = qr[:, i]
+        q_start = q_offset + i * q_chunk
+        q_pos = q_start + jnp.arange(q_chunk)
+        if banded:
+            start = jnp.clip(q_start + q_chunk - w_len, 0, Sk - w_len)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, w_len, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, w_len, axis=1)
+            logits = _tile_logits(qc, kc, scale, q_pos,
+                                  start + jnp.arange(w_len), causal, window)
+            m = jnp.max(logits, axis=-1)
+            p = jnp.exp(logits - m[..., None])
+            l = jnp.sum(p, axis=-1)
+            o = jnp.einsum("bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+            return (o / jnp.maximum(l, 1e-30)[..., None],
+                    m + jnp.log(jnp.maximum(l, 1e-30)))
+        nk = Sk // k_chunk
+        kr = k.reshape(B, nk, k_chunk, KV, D)
+        vr = v.reshape(B, nk, k_chunk, KV, D)
+
+        def kv_step(carry, j):
+            m_run, l_run, acc = carry
+            logits = _tile_logits(qc, kr[:, j], scale, q_pos,
+                                  j * k_chunk + jnp.arange(k_chunk),
+                                  causal, window)
+            m = jnp.max(logits, axis=-1)
+            m_new = jnp.maximum(m_run, m)
+            p = jnp.exp(logits - m_new[..., None])
+            c1 = jnp.exp(m_run - m_new)
+            l_new = l_run * c1 + jnp.sum(p, axis=-1)
+            acc = acc * c1[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vr[:, j].astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return (acc / jnp.maximum(l, 1e-30)[..., None],
+                m + jnp.log(jnp.maximum(l, 1e-30)))
+
+    outs, lses = jax.lax.map(one_chunk, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1)                   # [B,nq,KV,G,Qc,D]
+    out = jnp.moveaxis(out, -2, 2).reshape(B, Sq, KV, G, D)
+    lse = jnp.moveaxis(lses, 0, 1).reshape(B, nq, KV, G, q_chunk)
+    lse = jnp.moveaxis(lse, 1, -2).reshape(B, KV, G, Sq)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, do, *, causal, window, q_offset,
+                    q_chunk, k_chunk, scale):
+    """Tile-recomputing backward.  Memory: O(S·D) accumulators only."""
+    B, Sq, KV, G, D = q.shape
+    Sk = k.shape[1]
+    nq = Sq // q_chunk
+    qr = q.reshape(B, nq, q_chunk, KV, G, D)
+    dor = do.reshape(B, nq, q_chunk, KV, G, D)
+    lser = lse.reshape(B, KV, G, nq, q_chunk)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    deltar = delta.reshape(B, nq, q_chunk, KV, G)
+    banded = window is not None and window + q_chunk < Sk
+    w_len = min(window + q_chunk, Sk) if window is not None else Sk
+
+    def q_step(carry, i):
+        dk, dv = carry
+        qc = qr[:, i]                              # [B,Qc,KV,G,D]
+        doc = jnp.einsum("bqkgd->bkgqd", dor[:, i]).astype(jnp.float32)
+        lsec = lser[:, :, :, i]                    # [B,KV,G,Qc]
+        dlt = jnp.einsum("bqkg->bkgq", deltar[:, i])
+        q_start = q_offset + i * q_chunk
+        q_pos = q_start + jnp.arange(q_chunk)
+
+        def tile(kc, vc, k_pos):
+            logits = _tile_logits(qc, kc, scale, q_pos, k_pos, causal, window)
+            p = jnp.exp(logits - lsec[..., None])          # [B,KV,G,Qc,Kc]
+            dvc = jnp.einsum("bkgqs,bkgqd->bskd", p, doc)
+            dp = jnp.einsum("bkgqd,bskd->bkgqs", doc, vc.astype(jnp.float32))
+            ds = p * (dp - dlt[..., None]) * scale
+            dkc = jnp.einsum("bkgqs,bqkgd->bskd", ds, qc.astype(jnp.float32))
+            dqc = jnp.einsum("bkgqs,bskd->bqkgd", ds, kc.astype(jnp.float32))
+            return dqc, dkc, dvc
+
+        if banded:
+            start = jnp.clip(q_start + q_chunk - w_len, 0, Sk - w_len)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, w_len, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, w_len, axis=1)
+            dqc, dkc, dvc = tile(kc, vc, start + jnp.arange(w_len))
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(dk, start, w_len, 1) + dkc,
+                start, axis=1)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(dv, start, w_len, 1) + dvc,
+                start, axis=1)
+            return (dk, dv), dqc
+
+        nk = Sk // k_chunk
+        kr = k.reshape(B, nk, k_chunk, KV, D)
+        vr = v.reshape(B, nk, k_chunk, KV, D)
+        dkr = dk.reshape(B, nk, k_chunk, KV, D)
+        dvr = dv.reshape(B, nk, k_chunk, KV, D)
+
+        def kv_step(carry, j):
+            dkr, dvr, dq_acc = carry
+            dqc, dkc, dvc = tile(kr[:, j], vr[:, j],
+                                 j * k_chunk + jnp.arange(k_chunk))
+            dkr = dkr.at[:, j].add(dkc)
+            dvr = dvr.at[:, j].add(dvc)
+            return (dkr, dvr, dq_acc + dqc), None
+
+        dq0 = jnp.zeros((B, q_chunk, KV, G, D), jnp.float32)
+        (dkr, dvr, dqc), _ = jax.lax.scan(kv_step, (dkr, dvr, dq0),
+                                          jnp.arange(nk))
+        return (dkr.reshape(B, Sk, KV, D), dvr.reshape(B, Sk, KV, D)), dqc
+
+    dk0 = jnp.zeros((B, Sk, KV, D), jnp.float32)
+    dv0 = jnp.zeros((B, Sk, KV, D), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sq, KV, G, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: Optional[int], q_offset: int,
+                q_chunk: int, k_chunk: int, scale: float):
+    kw = dict(causal=causal, window=window, q_offset=q_offset,
+              q_chunk=q_chunk, k_chunk=k_chunk, scale=scale)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return _flash_fwd_impl(q, k, v, **kw)[0]
+
+    def fwd(q, k, v):
+        out, lse = _flash_fwd_impl(q, k, v, **kw)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, do):
+        q, k, v, out, lse = res
+        return _flash_bwd_impl(q, k, v, out, lse, do, **kw)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, q_chunk: int = 512,
+                    k_chunk: int = 1024, scale: Optional[float] = None,
+                    use_pallas: bool = False) -> jax.Array:
+    """Flash attention with GQA, causal masking and sliding windows.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, KV, D] with H = KV·G.  Windowed layers
+    take a banded kv slice per q chunk (compute O(S·window)); the backward
+    recomputes tiles (no O(S²) residuals).
+
+    ``use_pallas=True`` routes the FORWARD through the Pallas TPU kernel
+    (kernels/flash_attention.py) — inference paths (prefill/serve) only:
+    the kernel has no backward, and windowed layers stay on the JAX banded
+    path."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, k.shape[1])
+    assert Sq % q_chunk == 0 and k.shape[1] % k_chunk == 0
+    if use_pallas and window is None and q_offset == 0:
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      q_chunk=q_chunk, k_chunk=k_chunk,
+                                      scale=scale)
+    attn = _make_flash(causal, window, q_offset, q_chunk, k_chunk, float(scale))
+    out = attn(q.reshape(B, Sq, KV, G, D), k, v)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, window: Optional[int] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-step decode: q: [B, 1, H, D] vs cache [B, S, KV, D].
+
+    cache_len: i32 — number of valid cache entries (new token position =
+    cache_len).  Returns [B, 1, H, D]."""
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KV, G, D)
+    # keep the cache in bf16 and accumulate in f32 (preferred_element_type):
+    # an .astype(f32) on the cache gets hoisted out of the layer scan by XLA
+    # and materializes a FULL f32 cache copy (+32 GiB/device on minitron
+    # decode_32k — §Perf extras)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    valid = pos[None, :] < cache_len  # attend to the filled prefix
+    if window is not None:
+        valid = valid & (pos[None, :] >= cache_len - window)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU FFN: (silu(x@w1) ⊙ (x@w3)) @ w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array   # [D, E]
+    w1: jax.Array       # [E, D, F]
+    w3: jax.Array       # [E, D, F]
+    w2: jax.Array       # [E, F, D]
+
+
+def moe_layer_grouped(x: jax.Array, p: MoEParams, top_k: int,
+                      capacity_factor: float = 1.25, n_groups: int = 1,
+                      rules=None) -> jax.Array:
+    """GROUP-LOCAL MoE dispatch (GShard-style grouping, §Perf mixtral log).
+
+    Tokens are split into ``n_groups`` groups aligned with the data axis;
+    each group routes into its own per-expert capacity buffers, so the
+    scatter/gather never crosses shards — dispatch needs ZERO collectives
+    (vs ~40 GiB/chip/layer of all-reduce for the global scatter when E
+    doesn't divide the data axis).  Every group computes against all E
+    experts; expert weights are FSDP/TP-sharded, not expert-sharded, which
+    is the right trade-off when E is small (mixtral's 8).
+
+    x: [T, D] with T divisible by n_groups (the cells pad)."""
+    T, D = x.shape
+    E = p.router.shape[1]
+    G = n_groups
+    Tg = T // G
+    C = int(capacity_factor * top_k * Tg / E)
+    C = max(8, -(-C // 8) * 8)
+
+    xg = x.reshape(G, Tg, D)
+    if rules is not None:
+        xg = rules.constraint(xg, "tokens", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg, p.router)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_gates, top_idx = jax.lax.top_k(gates, top_k)        # [G, Tg, k]
+    top_gates = top_gates / jnp.maximum(
+        jnp.sum(top_gates, axis=-1, keepdims=True), 1e-9)
+
+    flat_e = top_idx.reshape(G, Tg * top_k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(
+        se, jnp.arange(E, dtype=se.dtype)))(sorted_e)       # [G, E]
+    rank_sorted = (jnp.arange(Tg * top_k, dtype=jnp.int32)[None]
+                   - jnp.take_along_axis(starts, sorted_e, axis=1
+                                         ).astype(jnp.int32))
+    rank = jnp.zeros((G, Tg * top_k), jnp.int32)
+    rank = jax.vmap(lambda r, o, rs: r.at[o].set(rs))(rank, order, rank_sorted)
+    keep = rank < C
+    slot = flat_e * C + jnp.where(keep, rank, 0)            # [G, Tg*k]
+
+    contrib = jnp.repeat(xg, top_k, axis=1) * keep[..., None].astype(x.dtype)
+    xe = jnp.zeros((G, E * C, D), dtype=x.dtype)
+    xe = jax.vmap(lambda b, s, c: b.at[s].add(c))(xe, slot, contrib)
+    xe = xe.reshape(G, E, C, D)
+    if rules is not None:
+        xe = rules.constraint(xe, "tokens", None, None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p.w1)
+    g = jnp.einsum("gecd,edf->gecf", xe, p.w3)
+    if rules is not None:
+        h = rules.constraint(h, "tokens", None, None, "d_ff")
+        g = rules.constraint(g, "tokens", None, None, "d_ff")
+    ye = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * g, p.w2)
+    if rules is not None:
+        ye = rules.constraint(ye, "tokens", None, None, None)
+
+    gathered = jax.vmap(lambda b, s: b[s])(ye.reshape(G, E * C, D), slot)
+    gathered = gathered * (keep[..., None]
+                           * top_gates.reshape(G, Tg * top_k)[..., None]
+                           ).astype(x.dtype)
+    y = gathered.reshape(G, Tg, top_k, D).sum(axis=2)
+    return y.reshape(T, D)
+
+
+def moe_layer(x: jax.Array, p: MoEParams, top_k: int,
+              capacity_factor: float = 1.25,
+              rules=None) -> jax.Array:
+    """Scatter-based token dispatch (MegaBlocks-style, no [T,E,C] one-hot).
+
+    x: [T, D] (tokens flattened).  Per (token, choice): expert id + its rank
+    among same-expert tokens (via cumulative counts over the top-k choice
+    matrix); tokens beyond the per-expert capacity are dropped (GShard
+    semantics).  Grouped GEMMs run as einsum over the expert axis so EP
+    sharding of the E dimension yields the canonical all-to-all pattern.
+    """
+    T, D = x.shape
+    E = p.router.shape[1]
+    F = p.w1.shape[2]
+    C = int(capacity_factor * top_k * T / E)
+    C = max(8, -(-C // 8) * 8)
+
+    logits = x @ p.router                      # [T, E]
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_gates, top_idx = jax.lax.top_k(gates, top_k)   # [T, k]
+    top_gates = top_gates / jnp.maximum(
+        jnp.sum(top_gates, axis=-1, keepdims=True), 1e-9)
+
+    # rank of each (token, choice) within its expert via a stable sort —
+    # O(T·k) memory (the one-hot cumsum alternative is O(T·k·E): 33 GiB/chip
+    # for llama4's 1M-token batch; see EXPERIMENTS.md §Perf)
+    flat_e = top_idx.reshape(-1)               # [T*k]
+    Tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)   # token order kept per expert
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=flat_e.dtype))
+    rank_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    rank = jnp.zeros((Tk,), jnp.int32).at[order].set(rank_sorted)
+    keep = rank < C
+    slot = flat_e * C + jnp.where(keep, rank, 0)
+
+    xe = jnp.zeros((E * C, D), dtype=x.dtype)
+    contrib = jnp.repeat(x, top_k, axis=0) * keep[:, None].astype(x.dtype)
+    if rules is not None:
+        contrib = rules.constraint(contrib, "tokens", None)
+    xe = xe.at[slot].add(contrib)
+    xe = xe.reshape(E, C, D)
+    if rules is not None:
+        xe = rules.constraint(xe, "expert_ep", "expert_cap", None)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p.w1)
+    g = jnp.einsum("ecd,edf->ecf", xe, p.w3)
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * g, p.w2)
+    if rules is not None:
+        ye = rules.constraint(ye, "expert_ep", "expert_cap", None)
+
+    gathered = ye.reshape(E * C, D)[slot]      # [T*k, D]
+    if rules is not None:
+        gathered = rules.constraint(gathered, "tokens", None)
+    gathered = gathered * (keep[:, None] * top_gates.reshape(-1)[:, None]
+                           ).astype(x.dtype)
+    y = gathered.reshape(T, top_k, D).sum(axis=1)
+    return y
+
+
+def moe_aux_loss(x: jax.Array, router: jax.Array, top_k: int) -> jax.Array:
+    """Switch/GShard load-balance auxiliary loss."""
+    E = router.shape[1]
+    gates = jax.nn.softmax((x @ router).astype(jnp.float32), axis=-1)
+    _, top_idx = jax.lax.top_k(gates, top_k)
+    me = jnp.mean(gates, axis=0)                         # mean gate per expert
+    ce = jnp.mean(jax.nn.one_hot(top_idx[:, 0], E), axis=0)  # top-1 load
+    return E * jnp.sum(me * ce)
+
+
+# ---------------------------------------------------------------------------
+# Embedding-bag (JAX has no native one — required substrate, see spec)
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jax.Array, ids: jax.Array, mask: jax.Array,
+                  mode: str = "sum") -> jax.Array:
+    """EmbeddingBag over fixed-width multi-hot bags.
+
+    table: [V, D]; ids: i32[B, W]; mask: f[B, W] (0 = padding).
+    Implemented as gather + masked reduce — the jnp.take + segment-reduce
+    recipe, with the segment structure static (one bag per row)."""
+    emb = jnp.take(table, ids, axis=0)         # [B, W, D]
+    emb = emb * mask[..., None].astype(emb.dtype)
+    if mode == "sum":
+        return emb.sum(axis=1)
+    if mode == "mean":
+        denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+        return emb.sum(axis=1) / denom.astype(emb.dtype)
+    if mode == "max":
+        emb = jnp.where(mask[..., None] > 0, emb, NEG_INF)
+        return emb.max(axis=1)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(table: jax.Array, flat_ids: jax.Array,
+                         segment_ids: jax.Array, num_bags: int,
+                         weights: Optional[jax.Array] = None) -> jax.Array:
+    """Ragged EmbeddingBag: jnp.take + jax.ops.segment_sum (CSR-style bags)."""
+    emb = jnp.take(table, flat_ids, axis=0)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    return jax.ops.segment_sum(emb, segment_ids, num_segments=num_bags)
+
+
+def mlp(x: jax.Array, weights, biases, act=jax.nn.relu,
+        final_act: bool = False) -> jax.Array:
+    """Plain MLP: weights/biases are lists of arrays."""
+    n = len(weights)
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,117 @@
+"""Logical-axis sharding rules (MaxText-style, minimal).
+
+Models annotate tensors with LOGICAL dimension names; a ``ShardingRules``
+table maps logical names to mesh axes.  ``None`` mesh or unmapped names mean
+"no constraint".  Rules only attach constraints when the dimension size is
+divisible by the mapped mesh-axes product — GSPMD could pad uneven shards,
+but divisible-only keeps the compiled collectives clean for the roofline
+accounting (the per-arch notes in DESIGN.md record where a dim was left
+unsharded for this reason, e.g. qwen2's 12 heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisNames = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Optional[Mesh]
+    rules: Dict[str, AxisNames]
+
+    def _axes_size(self, axes: AxisNames) -> int:
+        if axes is None or self.mesh is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def spec(self, *dims: Optional[str], shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical dims.  Drops (a) mappings that don't
+        divide the dim and (b) mesh axes already claimed by an earlier dim
+        (e.g. MoE weights map both `experts` and `d_ff` to the model axis —
+        whichever divides first wins, so mixtral's 8 experts fall back to
+        TP over d_ff while llama4's 128 experts take EP)."""
+        parts = []
+        used: set = set()
+        for i, d in enumerate(dims):
+            axes = self.rules.get(d) if d is not None else None
+            if axes is not None:
+                tup = (axes,) if isinstance(axes, str) else tuple(axes)
+                tup = tuple(a for a in tup if a not in used)
+                axes = tup if tup else None
+                if axes is not None and shape is not None and \
+                        shape[i] % self._axes_size(axes) != 0:
+                    axes = None
+                if axes is not None:
+                    used.update(axes)
+                    if len(axes) == 1:
+                        axes = axes[0]
+            parts.append(axes)
+        return P(*parts)
+
+    def constraint(self, x: jax.Array, *dims: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = self.spec(*dims, shape=x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def named_sharding(self, *dims: Optional[str],
+                       shape: Optional[Sequence[int]] = None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*dims, shape=shape))
+
+
+def no_sharding() -> ShardingRules:
+    return ShardingRules(mesh=None, rules={})
+
+
+# logical-name conventions used across the model zoo:
+#   batch, seq, heads, kv_heads, d_model, d_ff, vocab, experts, expert_cap,
+#   nodes, edges, graph_batch, rows (embedding-table rows), candidates
+def lm_rules(mesh: Optional[Mesh], data_axes: AxisNames = ("pod", "data"),
+             model_axes: AxisNames = "model") -> ShardingRules:
+    """Standard LM recipe: batch → data axes (DP), width → model axis (TP)."""
+    if mesh is not None:
+        data_axes = tuple(a for a in (data_axes if isinstance(data_axes, tuple)
+                                      else (data_axes,)) if a in mesh.shape)
+        if len(data_axes) == 1:
+            data_axes = data_axes[0]
+    all_axes = tuple(a for a in ("pod", "data", "model")
+                     if mesh is None or a in mesh.shape)
+    return ShardingRules(mesh=mesh, rules={
+        "batch": data_axes,
+        "seq_shard": data_axes,      # long-context decode: shard the cache seq
+        "seq_sp": model_axes,        # Megatron-style sequence parallelism on
+                                     # the residual stream (activation carries)
+        # flattened B·S token axis (MoE dispatch): data axes only — an
+        # all-axes layout forces GSPMD into involuntary full remat on the
+        # [B,S,D]↔[B·S,D] reshape (§Perf log, llama4 iteration 2)
+        "tokens": data_axes,
+        "heads": model_axes,
+        "kv_heads": model_axes,
+        "d_head": model_axes,        # cache fallback when KV ∤ model
+        "d_ff": model_axes,
+        "vocab": model_axes,
+        # EP over the DATA axes: tokens are data-sharded, so expert dispatch
+        # becomes an all-to-all within the data axis (sharding experts over
+        # "model" instead forces a full token all-gather — §Perf iteration 3)
+        "expert_ep": data_axes,
+        "expert_cap": data_axes,     # capacity-dim fallback when E ∤ data
+        "experts": model_axes,
+        "nodes": data_axes,
+        "edges": data_axes,
+        "rows": model_axes,
+        "candidates": data_axes,
+        "fsdp": data_axes,           # ZeRO-style param/optimizer sharding
+    })

@@ -1,0 +1,681 @@
+"""LM-family transformer: dense + MoE, GQA, RoPE, sliding-window patterns.
+
+One parameterized implementation covers the five assigned LM architectures
+(minitron-4b, qwen2-1.5b, gemma3-27b, llama4-maverick, mixtral-8x22b):
+
+* layers are stacked along a leading L axis and executed with ``lax.scan``
+  (flat HLO independent of depth — essential for 62-layer compiles);
+* heterogeneous local/global layouts (gemma3's 5:1) scan over PERIODS —
+  groups of ``len(cfg.layer_pattern)`` layers with statically-known kinds —
+  so the windowed-attention band slicing stays static;
+* local (sliding-window) layers keep only window-sized KV caches (ring
+  buffer at decode) — the source of gemma3/mixtral's long-context memory
+  advantage, visible in the dry-run memory analysis;
+* the LM loss is chunked over the sequence (never materializes [B,S,V]
+  logits) with the vocab dimension model-sharded.
+
+Everything is functional: ``init_params`` / ``abstract_params`` build the
+pytree, ``forward`` / ``lm_loss`` / ``prefill`` / ``decode_step`` consume it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as nn
+from .sharding import ShardingRules, no_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    shared_expert: bool = False
+    aux_loss_weight: float = 0.01
+    # "global": EP over the data axes, dispatch = cross-shard scatter (right
+    #   when E divides the data axes — llama4's 128).
+    # "grouped": group-local dispatch (GShard grouping) — zero-collective
+    #   dispatch, experts FSDP/TP-sharded (right when E is small — mixtral).
+    dispatch: str = "global"
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    moe: Optional[MoECfg] = None
+    qkv_bias: bool = False
+    window: Optional[int] = None          # sliding-window size for 'L' layers
+    layer_pattern: Tuple[str, ...] = ("G",)  # periodic pattern, e.g. 5×L + G
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    loss_chunk: int = 128                 # CE seq-chunk size
+    q_chunk: int = 512
+    k_chunk: int = 1024
+    remat: bool = True
+    # Megatron-style sequence parallelism: the residual stream (and hence
+    # every remat-saved scan carry) is sharded over the model axis on the
+    # SEQ dim — ~16× less activation memory at train time (§Perf log).
+    seq_parallel: bool = True
+    # route full-attention FORWARDS through the Pallas TPU kernel
+    # (inference/serving only — no backward; see kernels/flash_attention.py)
+    use_pallas_attention: bool = False
+
+    @property
+    def period(self) -> int:
+        return len(self.layer_pattern)
+
+    def layer_kinds(self) -> List[str]:
+        reps = -(-self.n_layers // self.period)
+        return list((self.layer_pattern * reps)[: self.n_layers])
+
+    def param_count(self) -> int:
+        D, F, V = self.d_model, self.d_ff, self.vocab
+        H, KV, Dh = self.n_heads, self.n_kv_heads, self.d_head
+        attn = D * H * Dh + 2 * D * KV * Dh + H * Dh * D
+        if self.qkv_bias:
+            attn += (H + 2 * KV) * Dh
+        if self.moe:
+            ffn = self.moe.n_experts * 3 * D * F + D * self.moe.n_experts
+            if self.moe.shared_expert:
+                ffn += 3 * D * F
+        else:
+            ffn = 3 * D * F
+        per_layer = attn + ffn + 2 * D
+        return self.n_layers * per_layer + V * D + D
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k experts only) for MODEL_FLOPS."""
+        if not self.moe:
+            return self.param_count()
+        D, F, V = self.d_model, self.d_ff, self.vocab
+        H, KV, Dh = self.n_heads, self.n_kv_heads, self.d_head
+        attn = D * H * Dh + 2 * D * KV * Dh + H * Dh * D
+        ffn = self.moe.top_k * 3 * D * F + D * self.moe.n_experts
+        if self.moe.shared_expert:
+            ffn += 3 * D * F
+        per_layer = attn + ffn + 2 * D
+        return self.n_layers * per_layer + V * D + D
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _layer_shapes(cfg: LMConfig) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    D, F = cfg.d_model, cfg.d_ff
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    L = cfg.n_layers
+    t = cfg.dtype
+    s: Dict[str, Tuple[Tuple[int, ...], Any]] = {
+        "attn_norm": ((L, D), t), "ffn_norm": ((L, D), t),
+        "wq": ((L, D, H * Dh), t), "wk": ((L, D, KV * Dh), t),
+        "wv": ((L, D, KV * Dh), t), "wo": ((L, H * Dh, D), t),
+    }
+    if cfg.qkv_bias:
+        s.update({"bq": ((L, H * Dh), t), "bk": ((L, KV * Dh), t),
+                  "bv": ((L, KV * Dh), t)})
+    if cfg.moe:
+        E = cfg.moe.n_experts
+        s.update({"router": ((L, D, E), t),
+                  "w1": ((L, E, D, F), t), "w3": ((L, E, D, F), t),
+                  "w2": ((L, E, F, D), t)})
+        if cfg.moe.shared_expert:
+            s.update({"s1": ((L, D, F), t), "s3": ((L, D, F), t),
+                      "s2": ((L, F, D), t)})
+    else:
+        s.update({"w1": ((L, D, F), t), "w3": ((L, D, F), t),
+                  "w2": ((L, F, D), t)})
+    return s
+
+
+def param_shapes(cfg: LMConfig):
+    shapes = {
+        "embed": ((cfg.vocab, cfg.d_model), cfg.dtype),
+        "final_norm": ((cfg.d_model,), cfg.dtype),
+        "layers": _layer_shapes(cfg),
+    }
+    return shapes
+
+
+def abstract_params(cfg: LMConfig):
+    def to_sds(tree):
+        if isinstance(tree, dict):
+            return {k: to_sds(v) for k, v in tree.items()}
+        shape, dtype = tree
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return to_sds(param_shapes(cfg))
+
+
+def init_params(cfg: LMConfig, key: jax.Array):
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple))
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(k, spec):
+        shape, dtype = spec
+        if len(shape) <= 2 and shape[-1] == cfg.d_model and len(shape) == 1:
+            return jnp.zeros(shape, dtype)  # norm gains (offset by 1 in rms)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape, jnp.float32)
+                / math.sqrt(max(1, fan_in))).astype(dtype)
+
+    inits = [init_one(k, s) for k, s in zip(keys, leaves)]
+    params = jax.tree.unflatten(treedef, inits)
+    # norms start at 0 (rms_norm applies 1 + w)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    params["layers"]["attn_norm"] = jnp.zeros_like(params["layers"]["attn_norm"])
+    params["layers"]["ffn_norm"] = jnp.zeros_like(params["layers"]["ffn_norm"])
+    return params
+
+
+def param_shardings(cfg: LMConfig, rules: ShardingRules):
+    """NamedShardings for the param pytree: TP on width dims + FSDP on a
+    complementary dim (ZeRO-style over the data axes)."""
+    def spec_for(path: str, shape):
+        logical: Tuple[Optional[str], ...]
+        if path == "embed":
+            logical = ("vocab", "fsdp")
+        elif path.endswith("norm"):
+            logical = (None,) * len(shape)
+        elif path in ("wq", "wk", "wv"):
+            logical = (None, "fsdp", "heads")      # [L, D, H·Dh]
+        elif path == "wo":
+            logical = (None, "heads", "fsdp")
+        elif path in ("bq", "bk", "bv"):
+            logical = (None, "heads")
+        elif path == "router":
+            logical = (None, "fsdp", None)
+        elif path in ("w1", "w3"):
+            logical = (None, "expert_ep", "fsdp", "d_ff") if cfg.moe \
+                else (None, "fsdp", "d_ff")
+        elif path == "w2":
+            logical = (None, "expert_ep", "d_ff", "fsdp") if cfg.moe \
+                else (None, "d_ff", "fsdp")
+        elif path in ("s1", "s3"):
+            logical = (None, "fsdp", "d_ff")
+        elif path == "s2":
+            logical = (None, "d_ff", "fsdp")
+        else:
+            logical = (None,) * len(shape)
+        return rules.named_sharding(*logical, shape=shape)
+
+    shapes = param_shapes(cfg)
+
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        shape, dtype = tree
+        return spec_for(name, shape)
+
+    return walk(shapes)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attn_block(x, lp, cfg: LMConfig, rules: ShardingRules, kind: str,
+                positions, k_cache=None, v_cache=None, cache_len=None):
+    """Self-attention sub-block.  Training/prefill when k_cache is None
+    (uses computed k/v); decode when caches are given (Sq == 1)."""
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = nn.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    # Pin h to the residual's seq-sharded layout: rms_norm is per-token, so
+    # it runs fully local, and the projections then gather BF16 h — whose
+    # backward is a bf16 reduce-scatter instead of an f32 all-reduce of the
+    # whole [B,S,D] cotangent (§Perf gemma3 iteration 1; pinning h GATHERED
+    # was the earlier refuted variant — mixtral iteration 2).
+    h = _residual_constraint(h, cfg, rules)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KV, Dh)
+    v = v.reshape(B, S, KV, Dh)
+    q = nn.rope(q, positions, cfg.rope_theta)
+    k = nn.rope(k, positions, cfg.rope_theta)
+    # attention computes over the FULL sequence: pin k/v to batch(+kv-head)
+    # sharding so the seq_sp residual sharding is gathered ONCE here rather
+    # than per flash tile (§Perf llama4 iteration 4).  When the head count
+    # doesn't divide the model axis (minitron 24, qwen2 12, llama4 40 on a
+    # 16-wide axis), attention would otherwise run 16× REPLICATED — instead
+    # shard q's SEQ dim over the model axis: attention rows are independent,
+    # so each shard computes its own q rows against the full k/v
+    # (§Perf minitron-prefill iteration 1).
+    model_sz = max(1, rules._axes_size(rules.rules.get("heads"))) \
+        if rules.mesh is not None else 1
+    heads_shardable = H % model_sz == 0
+    q_seq_shard = (cfg.seq_parallel and not heads_shardable and S > 1
+                   and rules.mesh is not None)
+    if q_seq_shard:
+        q = rules.constraint(q, "batch", "seq_sp", None, None)
+    else:
+        q = rules.constraint(q, "batch", None, "heads", None)
+    k = rules.constraint(k, "batch", None, "kv_heads", None)
+    v = rules.constraint(v, "batch", None, "kv_heads", None)
+
+    window = cfg.window if kind == "L" else None
+    if k_cache is None:
+        # q-seq-sharded attention must not slice the sharded seq dim —
+        # use one full-width q chunk (kv chunking bounds the tile memory)
+        qc = S if q_seq_shard else min(cfg.q_chunk, S)
+        out = nn.flash_attention(q, k, v, causal=True, window=window,
+                                 q_chunk=qc,
+                                 k_chunk=min(cfg.k_chunk, S),
+                                 use_pallas=cfg.use_pallas_attention)
+        new_kv = (k, v)
+    else:
+        # decode: write k/v at the ring/linear position, attend to cache
+        Sc = k_cache.shape[1]
+        pos = cache_len if window is None else cache_len % Sc
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
+        # ring buffer: once full, all Sc slots are valid (RoPE is applied
+        # before caching, so absolute positions survive the wrap-around)
+        eff_len = jnp.minimum(cache_len + 1, Sc) if window is not None \
+            else cache_len + 1
+        out = nn.decode_attention(q, k_cache, v_cache, eff_len, window=None)
+        new_kv = (k_cache, v_cache)
+    out = out.reshape(B, S, H * Dh)
+    return x + out @ lp["wo"], new_kv
+
+
+def _ffn_block(x, lp, cfg: LMConfig, rules: ShardingRules):
+    """Returns (x + ffn(x), aux_loss)."""
+    B, S, D = x.shape
+    h = nn.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    h = _residual_constraint(h, cfg, rules)   # local norm; bf16 gather (see attn)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        hf = h.reshape(B * S, D)
+        p = nn.MoEParams(router=lp["router"], w1=lp["w1"], w3=lp["w3"],
+                         w2=lp["w2"])
+        n_groups = rules._axes_size(rules.rules.get("tokens")) \
+            if rules.mesh is not None else 1
+        if (cfg.moe.dispatch == "grouped" and n_groups > 1
+                and hf.shape[0] % n_groups == 0 and hf.shape[0] >= n_groups):
+            y = nn.moe_layer_grouped(hf, p, cfg.moe.top_k,
+                                     cfg.moe.capacity_factor, n_groups, rules)
+        else:
+            y = nn.moe_layer(hf, p, cfg.moe.top_k, cfg.moe.capacity_factor,
+                             rules)
+        if cfg.moe.aux_loss_weight:
+            aux = nn.moe_aux_loss(hf, lp["router"], cfg.moe.top_k)
+        if cfg.moe.shared_expert:
+            y = y + nn.swiglu(hf, lp["s1"], lp["s3"], lp["s2"])
+        y = y.reshape(B, S, D)
+    else:
+        g = jax.nn.silu(h @ lp["w1"]) * (h @ lp["w3"])
+        g = rules.constraint(g, "batch", None, "d_ff")
+        y = g @ lp["w2"]
+    y = rules.constraint(y, "batch", None, None)
+    return x + y, aux
+
+
+def _residual_constraint(x, cfg: LMConfig, rules: ShardingRules):
+    if cfg.seq_parallel and x.shape[1] > 1:
+        return rules.constraint(x, "batch", "seq_sp", None)
+    return rules.constraint(x, "batch", None, None)
+
+
+def _layer(x, lp, cfg, rules, kind, positions, cache=None, cache_len=None):
+    if cache is None:
+        x, kv = _attn_block(x, lp, cfg, rules, kind, positions)
+        x, aux = _ffn_block(x, lp, cfg, rules)
+        x = _residual_constraint(x, cfg, rules)
+        return x, kv, aux
+    k_c, v_c = cache
+    x, (k_c, v_c) = _attn_block(x, lp, cfg, rules, kind, positions,
+                                k_cache=k_c, v_cache=v_c, cache_len=cache_len)
+    x, aux = _ffn_block(x, lp, cfg, rules)
+    return x, (k_c, v_c), aux
+
+
+def _split_groups(cfg: LMConfig, stacked):
+    """Split L-stacked layer params into (grouped [n_g, period, ...],
+    remainder list of per-layer slices)."""
+    L, per = cfg.n_layers, cfg.period
+    n_g = L // per
+    def head(a):
+        return a[: n_g * per].reshape((n_g, per) + a.shape[1:])
+    grouped = jax.tree.map(head, stacked)
+    rest = [jax.tree.map(lambda a, i=i: a[i], stacked)
+            for i in range(n_g * per, L)]
+    return n_g, grouped, rest
+
+
+def forward(params, tokens, cfg: LMConfig, rules: Optional[ShardingRules] = None):
+    """Token ids [B, S] → (final hidden states [B, S, D], aux loss sum)."""
+    rules = rules or no_sharding()
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = _residual_constraint(x, cfg, rules)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kinds = cfg.layer_kinds()
+    n_g, grouped, rest = _split_groups(cfg, params["layers"])
+
+    def group_body(carry, gp):
+        x, aux = carry
+        for j in range(cfg.period):
+            lp = jax.tree.map(lambda a, j=j: a[j], gp)
+            x, _, a = _layer(x, lp, cfg, rules, cfg.layer_pattern[j], positions)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), grouped)
+    for i, lp in enumerate(rest):
+        kind = kinds[n_g * cfg.period + i]
+        x, _, a = _layer(x, lp, cfg, rules, kind, positions)
+        aux = aux + a
+    return nn.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def lm_loss(params, tokens, cfg: LMConfig,
+            rules: Optional[ShardingRules] = None) -> jax.Array:
+    """Next-token CE, chunked over the sequence (no [B,S,V] logits)."""
+    rules = rules or no_sharding()
+    x, aux = forward(params, tokens, cfg, rules)      # [B, S, D]
+    B, S, D = x.shape
+    # gather the seq-sharded residuals once before the chunked loss
+    x = rules.constraint(x, "batch", None, None)
+    inputs = x[:, :-1]
+    labels = tokens[:, 1:]
+    T = S - 1
+    ch = min(cfg.loss_chunk, T)
+    n_full = T // ch
+    emb = params["embed"]                             # tied LM head
+
+    def chunk_loss(xc, lc):
+        logits = (xc @ emb.T).astype(jnp.float32)     # [B, ch, V]
+        logits = rules.constraint(logits, "batch", None, "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - ll)
+
+    def body(acc, xs):
+        xc, lc = xs
+        return acc + chunk_loss(xc, lc), None
+
+    xs = (inputs[:, : n_full * ch].reshape(B, n_full, ch, D).swapaxes(0, 1),
+          labels[:, : n_full * ch].reshape(B, n_full, ch).swapaxes(0, 1))
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    if n_full * ch < T:
+        total = total + chunk_loss(inputs[:, n_full * ch:],
+                                   labels[:, n_full * ch:])
+    loss = total / (B * T)
+    if cfg.moe and cfg.moe.aux_loss_weight:
+        loss = loss + cfg.moe.aux_loss_weight * aux / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: LMConfig, batch: int, seq_len: int):
+    """Cache pytree shapes: global layers get full-length caches, local
+    (windowed) layers get ring buffers of size window."""
+    kinds = cfg.layer_kinds()
+    n_local = sum(1 for k in kinds if k == "L")
+    n_global = len(kinds) - n_local
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    w = min(cfg.window or seq_len, seq_len)
+    shapes = {}
+    if n_global:
+        shapes["global_k"] = ((n_global, batch, seq_len, KV, Dh), cfg.dtype)
+        shapes["global_v"] = ((n_global, batch, seq_len, KV, Dh), cfg.dtype)
+    if n_local:
+        shapes["local_k"] = ((n_local, batch, w, KV, Dh), cfg.dtype)
+        shapes["local_v"] = ((n_local, batch, w, KV, Dh), cfg.dtype)
+    return shapes
+
+
+def abstract_cache(cfg: LMConfig, batch: int, seq_len: int):
+    return {k: jax.ShapeDtypeStruct(s, d)
+            for k, (s, d) in cache_shapes(cfg, batch, seq_len).items()}
+
+
+def init_cache(cfg: LMConfig, batch: int, seq_len: int):
+    return {k: jnp.zeros(s, d)
+            for k, (s, d) in cache_shapes(cfg, batch, seq_len).items()}
+
+
+def cache_shardings(cfg: LMConfig, batch: int, seq_len: int,
+                    rules: ShardingRules):
+    """Shard caches: batch → data axes when divisible, else the cache
+    SEQUENCE dim is sharded over the data axes (long-context split-KV,
+    flash-decoding style); kv-heads → model when divisible else d_head."""
+    out = {}
+    for name, (shape, _) in cache_shapes(cfg, batch, seq_len).items():
+        dims: Tuple[Optional[str], ...] = (None,) * len(shape)
+        bsz = shape[1]
+        data_size = rules._axes_size(rules.rules.get("batch"))
+        kv_ok = shape[3] % max(1, rules._axes_size(rules.rules.get("kv_heads"))) == 0
+        # fall back to sharding d_head over the model axis when the KV-head
+        # count doesn't divide it (e.g. 8 kv-heads on a 16-way axis) — the
+        # 32k-context × 128-batch caches are 275 GB and MUST split 256-way
+        kv_dim, d_dim = ("kv_heads", None) if kv_ok else (None, "d_head")
+        if bsz % max(1, data_size) == 0 and bsz >= data_size:
+            dims = (None, "batch", None, kv_dim, d_dim)
+        else:
+            dims = (None, None, "seq_shard", kv_dim, d_dim)
+        out[name] = rules.named_sharding(*dims, shape=shape)
+    return out
+
+
+def _cache_layout(cfg: LMConfig):
+    """Per-layer (kind, index within its kind-stack)."""
+    gi = li = 0
+    layout = []
+    for k in cfg.layer_kinds():
+        if k == "L":
+            layout.append(("L", li)); li += 1
+        else:
+            layout.append(("G", gi)); gi += 1
+    return layout
+
+
+def _kind_counts_per_period(cfg: LMConfig):
+    nl = sum(1 for k in cfg.layer_pattern if k == "L")
+    ng = cfg.period - nl
+    return nl, ng
+
+
+def _group_cache(cfg: LMConfig, cache, n_g: int):
+    """Reshape the kind-stacked caches into (grouped head, remainder tail)
+    matching _split_groups' layer grouping."""
+    nl, ng = _kind_counts_per_period(cfg)
+    grouped, rest = {}, {}
+    for key, arr in cache.items():
+        per = nl if key.startswith("local") else ng
+        head = arr[: n_g * per].reshape((n_g, per) + arr.shape[1:]) \
+            if per else arr[:0].reshape((n_g, 0) + arr.shape[1:])
+        grouped[key] = head
+        rest[key] = arr[n_g * per:]
+    return grouped, rest
+
+
+def _cache_slice_dims(B: int, KV: int, rules: ShardingRules):
+    """Logical dims for a [B, S, KV, D] cache slice — mirrors
+    cache_shardings: batch-sharded when divisible, else seq-sharded;
+    kv-heads over model when divisible, else d_head."""
+    data_size = max(1, rules._axes_size(rules.rules.get("batch")))
+    kv_ok = KV % max(1, rules._axes_size(rules.rules.get("kv_heads"))) == 0
+    kv_dim, d_dim = ("kv_heads", None) if kv_ok else (None, "d_head")
+    if B % data_size == 0 and B >= data_size:
+        return ("batch", None, kv_dim, d_dim)
+    return (None, "seq_shard", kv_dim, d_dim)
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: LMConfig,
+                rules: Optional[ShardingRules] = None):
+    """One serving step: tokens [B] at position cache_len → logits [B, V].
+
+    Scans over layer GROUPS with the per-group cache slices as scan xs/ys,
+    so the HLO stays depth-independent and XLA keeps donated caches
+    in place (dynamic-update-slice aliasing).  Cache slices are re-pinned
+    to their sharding inside the scan: without the constraint XLA keeps
+    replicated copies of the updated cache in the loop carry (observed
+    96 GiB/device on minitron decode_32k)."""
+    rules = rules or no_sharding()
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(cfg.dtype)
+    positions = jnp.broadcast_to(cache_len[None, None], (B, 1)).astype(jnp.int32)
+    kinds = cfg.layer_kinds()
+    n_g, grouped_p, rest_p = _split_groups(cfg, params["layers"])
+    grouped_c, rest_c = _group_cache(cfg, cache, n_g)
+
+    def group_body(x, xs):
+        gp, gc = xs
+        li = gi = 0
+        out_c = dict(gc)
+        for j, kind in enumerate(cfg.layer_pattern):
+            lp = jax.tree.map(lambda a, j=j: a[j], gp)
+            kname, idx = ("local", li) if kind == "L" else ("global", gi)
+            kc = out_c[f"{kname}_k"][idx]
+            vc = out_c[f"{kname}_v"][idx]
+            x, (kc, vc), _ = _layer(x, lp, cfg, rules, kind, positions,
+                                    cache=(kc, vc), cache_len=cache_len)
+            dims = _cache_slice_dims(kc.shape[0], kc.shape[2], rules)
+            kc = rules.constraint(kc, *dims)
+            vc = rules.constraint(vc, *dims)
+            out_c[f"{kname}_k"] = out_c[f"{kname}_k"].at[idx].set(kc)
+            out_c[f"{kname}_v"] = out_c[f"{kname}_v"].at[idx].set(vc)
+            if kind == "L":
+                li += 1
+            else:
+                gi += 1
+        return x, out_c
+
+    x, new_grouped = jax.lax.scan(group_body, x, (grouped_p, grouped_c))
+
+    new_rest = dict(rest_c)
+    li = gi = 0
+    for i, lp in enumerate(rest_p):
+        kind = kinds[n_g * cfg.period + i]
+        kname, idx = ("local", li) if kind == "L" else ("global", gi)
+        kc = new_rest[f"{kname}_k"][idx]
+        vc = new_rest[f"{kname}_v"][idx]
+        x, (kc, vc), _ = _layer(x, lp, cfg, rules, kind, positions,
+                                cache=(kc, vc), cache_len=cache_len)
+        new_rest[f"{kname}_k"] = new_rest[f"{kname}_k"].at[idx].set(kc)
+        new_rest[f"{kname}_v"] = new_rest[f"{kname}_v"].at[idx].set(vc)
+        if kind == "L":
+            li += 1
+        else:
+            gi += 1
+
+    new_cache = {}
+    for key in cache:
+        head = new_grouped[key].reshape((-1,) + new_grouped[key].shape[2:])
+        new_cache[key] = jnp.concatenate([head, new_rest[key]], axis=0) \
+            if new_rest[key].shape[0] else head
+
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["embed"].T).astype(jnp.float32)
+    logits = rules.constraint(logits, "batch", "vocab")
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: LMConfig,
+            rules: Optional[ShardingRules] = None,
+            pad_cache_to: Optional[int] = None):
+    """Prefill: tokens [B, S] → (last-position logits [B, V], filled cache).
+
+    Global layers cache all S keys; local layers keep the trailing window
+    as a RING buffer aligned with decode's ``pos % w`` indexing (position p
+    lives at slot p % w).  ``pad_cache_to`` reserves extra global-cache
+    capacity so decode can continue for (pad_cache_to − S) tokens."""
+    rules = rules or no_sharding()
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    kinds = cfg.layer_kinds()
+    n_g, grouped_p, rest_p = _split_groups(cfg, params["layers"])
+    cap = pad_cache_to or S
+    w = min(cfg.window or cap, cap)     # ring size (window, capped by capacity)
+    m = min(S, w)                       # how many trailing keys we can store
+    nl, ng = _kind_counts_per_period(cfg)
+
+    def ring(k):
+        """Last m keys placed so position p sits at slot p % w (aligned with
+        decode's ring writes); unused slots stay zero (masked via eff_len)."""
+        tail = k[:, S - m:]
+        if w > m:
+            tail = jnp.pad(tail, ((0, 0), (0, w - m), (0, 0), (0, 0)))
+        return jnp.roll(tail, (S - m) % w, axis=1)
+
+    def grow(k):  # pad global cache capacity for subsequent decode
+        if pad_cache_to is not None and pad_cache_to > S:
+            return jnp.pad(k, ((0, 0), (0, pad_cache_to - S), (0, 0), (0, 0)))
+        return k
+
+    def group_body(x, gp):
+        lk, lv, gk, gv = [], [], [], []
+        for j, kind in enumerate(cfg.layer_pattern):
+            lp = jax.tree.map(lambda a, j=j: a[j], gp)
+            x, (k, v), _ = _layer(x, lp, cfg, rules, kind, positions)
+            if kind == "L":
+                lk.append(ring(k))
+                lv.append(ring(v))
+            else:
+                gk.append(grow(k))
+                gv.append(grow(v))
+        ys = {}
+        if lk:
+            ys["local_k"] = jnp.stack(lk)
+            ys["local_v"] = jnp.stack(lv)
+        if gk:
+            ys["global_k"] = jnp.stack(gk)
+            ys["global_v"] = jnp.stack(gv)
+        return x, ys
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, grouped_c = jax.lax.scan(body, x, grouped_p)
+
+    rest_caches: Dict[str, List[jax.Array]] = {k: [] for k in grouped_c}
+    for i, lp in enumerate(rest_p):
+        kind = kinds[n_g * cfg.period + i]
+        x, (k, v), _ = _layer(x, lp, cfg, rules, kind, positions)
+        if kind == "L":
+            rest_caches.setdefault("local_k", []).append(ring(k))
+            rest_caches.setdefault("local_v", []).append(ring(v))
+        else:
+            rest_caches.setdefault("global_k", []).append(grow(k))
+            rest_caches.setdefault("global_v", []).append(grow(v))
+
+    cache = {}
+    for key, head in grouped_c.items():
+        flat = head.reshape((-1,) + head.shape[2:])
+        tail = rest_caches.get(key, [])
+        cache[key] = jnp.concatenate([flat, jnp.stack(tail)], axis=0) \
+            if tail else flat
+    for key, tail in rest_caches.items():
+        if key not in cache and tail:
+            cache[key] = jnp.stack(tail)
+
+    x = nn.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["embed"].T).astype(jnp.float32)
+    logits = rules.constraint(logits, "batch", "vocab")
+    return logits, cache

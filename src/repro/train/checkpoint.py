@@ -1,0 +1,149 @@
+"""Checkpointing: atomic, async-capable, elastic across mesh shapes.
+
+Format: one ``.npz`` per checkpoint holding every pytree leaf (keys are
+"/"-joined paths) + a JSON manifest (step, tree structure, shapes, dtypes,
+mesh metadata).  Writes go to a temp file and are atomically renamed, so a
+preemption mid-write never corrupts the latest checkpoint.
+
+Elasticity: ``restore`` rebuilds the pytree on HOST and the caller
+device_puts it with the CURRENT mesh's shardings — so a checkpoint taken on
+a 2×16×16 mesh restores onto 16×16 (pod loss) or any other shape: the
+dedicated test exercises a shrink. ``async_save`` runs serialization on a
+background thread (the training loop never blocks on I/O).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any], structure) -> Any:
+    def walk(s, prefix=""):
+        if isinstance(s, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in s.items()}
+        if isinstance(s, (list, tuple)):
+            t = [walk(v, f"{prefix}{i}/") for i, v in enumerate(s)]
+            return type(s)(t) if isinstance(s, tuple) else t
+        return flat[prefix[:-1]]
+    return walk(structure)
+
+
+def _structure_of(tree):
+    if isinstance(tree, dict):
+        return {k: _structure_of(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_structure_of(v) for v in tree]
+    return None
+
+
+def save(path: str, step: int, tree, extra: Optional[Dict] = None) -> str:
+    """Atomic synchronous save.  Returns the checkpoint file path."""
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in flat.items()}
+    manifest = {
+        "step": int(step),
+        "structure": _structure_of(tree),
+        "shapes": {k: list(v.shape) for k, v in host.items()},
+        "dtypes": {k: str(v.dtype) for k, v in host.items()},
+        "extra": extra or {},
+    }
+    ckpt = os.path.join(path, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **host)
+    os.replace(tmp, ckpt)
+    mtmp = ckpt + ".manifest.tmp"
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, ckpt + ".manifest.json")
+    return ckpt
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing; at most one write in flight."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[str] = None
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        self.wait()
+        # snapshot to host BEFORE returning control (device buffers may be
+        # donated by the next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            self.last_saved = save(self.path, step, host_tree, extra)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(path)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: Optional[int] = None,
+            shardings=None) -> Tuple[int, Any, Dict]:
+    """Load a checkpoint; place leaves with ``shardings`` when given (a
+    pytree of NamedSharding matching the restored tree — this is the elastic
+    re-shard path: the TARGET mesh decides placement, not the source)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    ckpt = os.path.join(path, f"ckpt_{step:08d}.npz")
+    with open(ckpt + ".manifest.json") as f:
+        manifest = json.load(f)
+    data = np.load(ckpt)
+    flat = {k: data[k] for k in data.files}
+    tree = _unflatten(flat, manifest["structure"])
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+            tree, shardings)
+    return manifest["step"], tree, manifest.get("extra", {})
+
+
+def prune(path: str, keep: int = 3):
+    """Drop all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(path):
+        return
+    steps = sorted([int(f[5:13]) for f in os.listdir(path)
+                    if f.startswith("ckpt_") and f.endswith(".npz")])
+    for s in steps[:-keep]:
+        for suffix in (".npz", ".npz.manifest.json"):
+            p = os.path.join(path, f"ckpt_{s:08d}{suffix}")
+            if os.path.exists(p):
+                os.remove(p)

@@ -1,0 +1,63 @@
+"""Generic train/serve step builders shared by every architecture.
+
+``build_train_step(loss_fn, opt_cfg)`` returns a pure function
+    (params, opt_state, batch) → (params, opt_state, metrics)
+with optional MICROBATCH gradient accumulation (lax.scan over batch splits
+— keeps per-step activation memory flat, the standard large-batch recipe).
+
+The jit wrapper (shardings, donation) is applied by the launchers, so the
+same step function serves smoke tests (no mesh) and the production dry-run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, apply_updates
+
+
+def build_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                     n_microbatches: int = 1):
+    """loss_fn(params, batch) → scalar loss."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % n_microbatches == 0, (b, n_microbatches)
+                return x.reshape((n_microbatches, b // n_microbatches)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grads_of(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grad_acc, grads)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+
+        params, opt_state, metrics = apply_updates(opt_cfg, params, grads,
+                                                   opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step
+
+
+def build_eval_step(loss_fn: Callable):
+    def step(params, batch):
+        return loss_fn(params, batch)
+    return step

@@ -1,0 +1,181 @@
+"""Distributed solver + pipeline + HLO analyzer — these need >1 device, so
+they run in subprocesses with a forced host device count."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=_SRC)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, r.stderr[-4000:]
+    return r.stdout
+
+
+def test_sharded_solver_matches_exact():
+    out = run_py("""
+        import numpy as np, json
+        from repro.graphs import generators as gen
+        from repro.core import IRLSConfig, max_flow, two_level
+        from repro.distributed.solver import ShardedSolver
+        g = gen.grid_2d(20, 20, seed=7)
+        inst = gen.segmentation_instance(g, (20, 20), seed=8)
+        exact = max_flow(inst).value
+        res = {}
+        for sched in ("halo", "psum"):
+            s = ShardedSolver(inst, IRLSConfig(n_irls=20, pcg_max_iters=80),
+                              schedule=sched, precond_bs=64)
+            v, rels = s.solve()
+            res[sched] = two_level(inst, v).cut_value
+        print(json.dumps({"exact": exact, **res}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["halo"] == pytest.approx(res["exact"], rel=1e-6)
+    assert res["psum"] == pytest.approx(res["exact"], rel=1e-6)
+
+
+def test_halo_collective_smaller_than_psum():
+    """The partition-aware halo schedule must move fewer collective bytes
+    than the psum baseline (the paper's §3.3 communication argument)."""
+    out = run_py("""
+        import json
+        from repro.graphs import generators as gen
+        from repro.core import IRLSConfig
+        from repro.distributed.solver import ShardedSolver
+        from repro.launch import hlo_analysis as ha
+        g = gen.grid_2d(32, 32, seed=9)
+        inst = gen.segmentation_instance(g, (32, 32), seed=10)
+        cfg = IRLSConfig(n_irls=5, pcg_max_iters=20)
+        out = {}
+        for sched in ("halo", "psum"):
+            s = ShardedSolver(inst, cfg, schedule=sched, precond_bs=32)
+            txt = s.lower().compile().as_text()
+            out[sched] = ha.analyze(txt, 8).collective_bytes
+        print(json.dumps(out))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["halo"] < 0.7 * res["psum"], res
+
+
+def test_pipeline_loss_matches_reference():
+    out = run_py("""
+        import jax, jax.numpy as jnp, json
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        from repro.models.transformer import LMConfig, init_params, lm_loss
+        from repro.train.pipeline import build_pipeline_loss, stage_params_from_flat
+        cfg = LMConfig("t", n_layers=4, d_model=32, n_heads=4, n_kv_heads=2,
+                       d_head=8, d_ff=64, vocab=128, dtype=jnp.float32,
+                       q_chunk=16, k_chunk=16, loss_chunk=8, remat=False)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 4, 16), 0, 128)
+        loss_fn = build_pipeline_loss(cfg, mesh, None, n_microbatches=4)
+        staged = stage_params_from_flat(params, 2)
+        l = float(jax.jit(loss_fn)(staged, toks))
+        l_ref = float(lm_loss(params, toks.reshape(16, 16), cfg))
+        print(json.dumps({"pipe": l, "ref": l_ref}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["pipe"] == pytest.approx(res["ref"], rel=1e-4)
+
+
+def test_lm_sharded_loss_matches_unsharded():
+    """GSPMD shardings are semantics-preserving: sharded loss == single."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, json
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        from repro.models.transformer import (LMConfig, MoECfg, init_params,
+                                              lm_loss, param_shardings)
+        from repro.models.sharding import lm_rules
+        cfg = LMConfig("t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                       d_head=8, d_ff=64, vocab=128,
+                       moe=MoECfg(n_experts=4, top_k=2, capacity_factor=4.0),
+                       dtype=jnp.float32, q_chunk=16, k_chunk=16,
+                       loss_chunk=8, remat=False)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, 128)
+        l1 = float(lm_loss(params, toks, cfg))
+        rules = lm_rules(mesh)
+        psh = param_shardings(cfg, rules)
+        sp = jax.device_put(params, psh)
+        l2 = float(jax.jit(lambda p, t: lm_loss(p, t, cfg, rules))(sp, toks))
+        print(json.dumps({"single": l1, "sharded": l2}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["sharded"] == pytest.approx(res["single"], rel=2e-4)
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    out = run_py("""
+        import jax, jax.numpy as jnp, json
+        from repro.launch import hlo_analysis as ha
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            return jax.lax.scan(body, x, None, length=12)[0]
+        s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        comp = jax.jit(f).lower(s, s).compile()
+        c = ha.analyze(comp.as_text())
+        print(json.dumps({"flops": c.flops, "expect": 2*64**3*12}))
+    """, devices=1)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["flops"] == pytest.approx(res["expect"], rel=0.01)
+
+
+def test_dryrun_cell_builders_lower_on_tiny_mesh():
+    """Every cell builder produces a lowerable program (tiny 2×2 mesh,
+    lower-only — the full 256/512-chip compiles run via launch.dryrun)."""
+    out = run_py("""
+        import jax, json
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        from repro.launch.cells import build_cell
+        ok = []
+        for arch, cell in [("qwen2-1.5b", "decode_32k"),
+                           ("gcn-cora", "full_graph_sm"),
+                           ("din", "serve_p99")]:
+            prog = build_cell(arch, cell, mesh)
+            prog.lower()   # no compile — just prove tracing/sharding works
+            ok.append(arch)
+        print(json.dumps(ok))
+    """, devices=4, timeout=1200)
+    assert len(json.loads(out.strip().splitlines()[-1])) == 3
+
+
+def test_halo_int8_compression_reduces_bytes():
+    """int8 halo exchange cuts wire bytes ~4× (quality trade-off documented
+    in EXPERIMENTS.md §Perf.E — this asserts the bytes and that the solver
+    still produces a VALID cut, not an exact one)."""
+    out = run_py("""
+        import json
+        from repro.graphs import generators as gen
+        from repro.core import IRLSConfig, two_level
+        from repro.distributed.solver import ShardedSolver
+        from repro.launch import hlo_analysis as ha
+        g = gen.grid_2d(24, 24, seed=9)
+        inst = gen.segmentation_instance(g, (24, 24), seed=10)
+        cfg = IRLSConfig(n_irls=8, pcg_max_iters=40)
+        res = {}
+        for comp in (None, "int8"):
+            s = ShardedSolver(inst, cfg, schedule="halo", precond_bs=32,
+                              halo_compression=comp)
+            c = ha.analyze(s.lower().compile().as_text(), 8)
+            v, _ = s.solve()
+            r = two_level(inst, v)
+            res[str(comp)] = {"bytes": c.collective_bytes,
+                              "cut": r.cut_value,
+                              "valid": bool((v.min() > -1) and (v.max() < 2))}
+        print(json.dumps(res))
+    """)
+    import json as _json
+    res = _json.loads(out.strip().splitlines()[-1])
+    assert res["int8"]["bytes"] < 0.4 * res["None"]["bytes"]
+    assert res["int8"]["valid"] and res["int8"]["cut"] > 0

@@ -1,0 +1,65 @@
+"""Exact max-flow oracle: brute-force cut enumeration + flow/cut duality."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.maxflow import max_flow
+from repro.graphs import generators as gen
+from repro.graphs.structures import EdgeList, STInstance
+
+
+def brute_force_min_cut(inst: STInstance) -> float:
+    n = inst.n
+    best = np.inf
+    for bits in itertools.product([False, True], repeat=n):
+        ind = np.asarray(bits)
+        best = min(best, inst.cut_value(ind))
+    return best
+
+
+def random_tiny(n, seed):
+    rng = np.random.default_rng(seed)
+    g = gen.random_regular(n, 3, seed=seed)
+    s_w = np.where(rng.random(n) < 0.4, rng.uniform(0.5, 3.0, n), 0.0)
+    t_w = np.where(rng.random(n) < 0.4, rng.uniform(0.5, 3.0, n), 0.0)
+    return STInstance(graph=g, s_weight=s_w, t_weight=t_w)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_maxflow_matches_bruteforce(seed):
+    inst = random_tiny(9, seed)
+    res = max_flow(inst)
+    expect = brute_force_min_cut(inst)
+    assert res.value == pytest.approx(expect, rel=1e-9)
+    # the extracted cut achieves the min value (strong duality)
+    assert inst.cut_value(res.in_source[: inst.n]) == pytest.approx(expect, rel=1e-9)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_maxflow_cut_duality_property(seed):
+    """Flow value == value of the extracted cut (max-flow/min-cut duality),
+    on random small instances with float weights."""
+    inst = random_tiny(12, seed)
+    res = max_flow(inst)
+    cut = inst.cut_value(res.in_source[: inst.n])
+    assert res.value == pytest.approx(cut, rel=1e-8, abs=1e-8)
+    # s side contains s (index n) and never t
+    assert res.in_source[inst.s]
+    assert not res.in_source[inst.t]
+
+
+def test_maxflow_disconnected_terminal():
+    # no s edges → min cut 0
+    g = gen.random_regular(6, 3, seed=1)
+    inst = STInstance(graph=g, s_weight=np.zeros(6), t_weight=np.ones(6))
+    assert max_flow(inst).value == pytest.approx(0.0, abs=1e-12)
+
+
+def test_maxflow_grid_instance(grid_instance):
+    res = max_flow(grid_instance)
+    assert res.value > 0
+    assert res.value == pytest.approx(
+        grid_instance.cut_value(res.in_source[: grid_instance.n]), rel=1e-9)

@@ -1,0 +1,158 @@
+"""Training substrate: optimizer, checkpoints (incl. elastic restore),
+fault controller (resume / preemption / straggler)."""
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as ck
+from repro.train.fault import (Journal, PreemptionSignal, StragglerWatchdog,
+                               TrainController)
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+from repro.train.train_step import build_train_step
+
+
+def quad_loss(params, batch):
+    return jnp.sum((params["w"] @ batch["x"] - batch["y"]) ** 2)
+
+
+def make_problem(seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal((4, 8)).astype(np.float32)
+    x = rng.standard_normal((8, 32)).astype(np.float32)
+    y = w_true @ x
+    params = {"w": jnp.zeros((4, 8))}
+    batch = {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+    return params, batch
+
+
+def test_adamw_converges():
+    params, batch = make_problem()
+    oc = AdamWConfig(lr=3e-2, weight_decay=0.0, warmup_steps=1)
+    state = init_state(oc, params)
+    l0 = float(quad_loss(params, batch))
+    for _ in range(200):
+        loss, grads = jax.value_and_grad(quad_loss)(params, batch)
+        params, state, _ = apply_updates(oc, params, grads, state)
+    assert float(quad_loss(params, batch)) < 1e-2 * l0
+
+
+def test_grad_compression_error_feedback_converges():
+    params, batch = make_problem(1)
+    oc = AdamWConfig(lr=3e-2, weight_decay=0.0, warmup_steps=1,
+                     compress_grads=True)
+    state = init_state(oc, params)
+    l0 = float(quad_loss(params, batch))
+    for _ in range(300):
+        loss, grads = jax.value_and_grad(quad_loss)(params, batch)
+        params, state, _ = apply_updates(oc, params, grads, state)
+    assert float(quad_loss(params, batch)) < 1e-1 * l0
+
+
+def test_microbatch_equals_full_batch():
+    params, _ = make_problem(2)
+    # loss averaged per microbatch must equal single-shot on the same data
+    oc = AdamWConfig(lr=1e-2, warmup_steps=1)
+    # batch-leading layout so the accumulator can split it
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"].T - b["y"]) ** 2)
+    rng = np.random.default_rng(3)
+    b = {"x": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+         "y": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)}
+    s1 = build_train_step(loss_fn, oc, n_microbatches=1)
+    s2 = build_train_step(loss_fn, oc, n_microbatches=4)
+    p1, st1, m1 = s1(params, init_state(oc, params), b)
+    p2, st2, m2 = s2(params, init_state(oc, params), b)
+    np.testing.assert_allclose(m1["loss"], m2["loss"], rtol=1e-5)
+    np.testing.assert_allclose(p1["w"], p2["w"], rtol=1e-4, atol=1e-6)
+
+
+def test_checkpoint_roundtrip_and_prune():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(5), "b": {"c": jnp.ones((2, 3))},
+                "lst": [jnp.zeros(2), jnp.ones(3)]}
+        for s in (1, 2, 3, 4):
+            ck.save(d, s, tree, extra={"note": f"s{s}"})
+        ck.prune(d, keep=2)
+        assert ck.latest_step(d) == 4
+        step, restored, extra = ck.restore(d)
+        assert step == 4 and extra["note"] == "s4"
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        np.testing.assert_array_equal(restored["lst"][1], tree["lst"][1])
+        # pruned old ones
+        assert not os.path.exists(os.path.join(d, "ckpt_00000001.npz"))
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        saver = ck.AsyncCheckpointer(d)
+        saver.save(7, {"x": jnp.full((128,), 3.0)})
+        saver.wait()
+        step, tree, _ = ck.restore(d)
+        assert step == 7
+        np.testing.assert_allclose(tree["x"], 3.0)
+
+
+def test_elastic_restore_reshards():
+    """Checkpoint written from one layout restores onto a DIFFERENT mesh
+    (single-device here: a 1×1 mesh with explicit shardings)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+        ck.save(d, 1, tree)
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        sh = {"w": NamedSharding(mesh, P("data", "model"))}
+        step, restored, _ = ck.restore(d, shardings=sh)
+        assert restored["w"].sharding == sh["w"]
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_controller_resume_and_preemption():
+    with tempfile.TemporaryDirectory() as d:
+        calls = {"n": 0}
+
+        def step_fn(state, batch):
+            calls["n"] += 1
+            return state + 1, {"loss": float(state)}
+
+        batches = iter(range(10 ** 9))
+        sentinel = os.path.join(d, "preempt")
+        ctl = TrainController(step_fn, d, ckpt_every=3,
+                              preemption_sentinel=sentinel,
+                              install_signal_handler=False)
+        s0, state = ctl.resume_or_init(lambda: jnp.asarray(0))
+        s1, state, stop = ctl.run(state, batches, s0, 5)
+        assert s1 == 5 and stop == "completed"
+        # restart → resumes from 5
+        ctl2 = TrainController(step_fn, d, ckpt_every=3,
+                               preemption_sentinel=sentinel,
+                               install_signal_handler=False)
+        s2, state2 = ctl2.resume_or_init(lambda: jnp.asarray(0))
+        assert s2 == 5 and int(state2) == 5
+        # preemption: sentinel file stops immediately + checkpoints
+        open(sentinel, "w").close()
+        s3, _, stop3 = ctl2.run(state2, batches, s2, 5)
+        assert stop3 == "preempted" and s3 == 5
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(factor=2.0, max_consecutive=2, warmup=3)
+    events = [wd.observe(0.1) for _ in range(5)]
+    assert all(e is None for e in events)
+    assert wd.observe(0.5) == "straggler"
+    assert wd.observe(0.5) == "restart_requested"
+    # recovers
+    assert wd.observe(0.1) is None
+
+
+def test_journal_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        j = Journal(os.path.join(d, "j.jsonl"))
+        j.append({"step": 1, "loss": 2.0})
+        j.append({"step": 2, "event": "straggler"})
+        recs = j.read()
+        assert len(recs) == 2 and recs[1]["event"] == "straggler"
