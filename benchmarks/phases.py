@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import IRLSConfig, solve, sweep_cut, two_level
+from repro.core import IRLSConfig, MinCutSession, Problem, sweep_cut, two_level
 from repro.graphs import partition as gp
 
 from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
@@ -17,8 +17,11 @@ def _one(name, inst, n_blocks=8, n_irls=50):
     rows["t_partition"] = t.dt
     cfg = IRLSConfig(eps=1e-6, n_irls=n_irls, pcg_max_iters=50,
                      n_blocks=n_blocks)
+    sess = MinCutSession(Problem.build(inst, n_blocks=n_blocks, labels=labels),
+                         cfg)
     with timer() as t:
-        v, diag = solve(inst, cfg, labels=labels)
+        res = sess.solve(rounding=None)
+    v = res.voltages
     rows["t_irls"] = t.dt
     with timer() as t:
         rs = sweep_cut(inst, v)

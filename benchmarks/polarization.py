@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import IRLSConfig, solve
+from repro.core import IRLSConfig, MinCutSession
 
 from .common import grid_instance, save_json, timer
 
@@ -14,7 +14,9 @@ def run(side=64, n_irls=50):
     cfg = IRLSConfig(eps=1e-6, n_irls=n_irls, pcg_tol=1e-3,
                      pcg_max_iters=300, n_blocks=4)
     with timer() as t:
-        v, diag = solve(inst, cfg, collect_voltages=True)
+        res = MinCutSession(inst, cfg).solve(rounding=None,
+                                             collect_voltages=True)
+    diag = res.diagnostics
     frac_pol = []
     deciles = []
     for x in diag.voltages:

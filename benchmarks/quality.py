@@ -2,14 +2,14 @@
 two-level rounding, against the exact solver."""
 from __future__ import annotations
 
-from repro.core import IRLSConfig, max_flow, solve, sweep_cut, two_level
+from repro.core import IRLSConfig, MinCutSession, max_flow, sweep_cut, two_level
 
 from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
 
 
 def _one(inst):
     cfg = IRLSConfig(eps=1e-6, n_irls=50, pcg_max_iters=50, n_blocks=8)
-    v, _ = solve(inst, cfg)
+    v = MinCutSession(inst, cfg).solve(rounding=None).voltages
     exact = max_flow(inst).value
     rs = sweep_cut(inst, v)
     rt = two_level(inst, v)

@@ -23,7 +23,7 @@ import textwrap
 
 import numpy as np
 
-from repro.core import IRLSConfig, solve
+from repro.core import IRLSConfig, MinCutSession
 
 from .common import grid_instance, save_json, timer
 
@@ -62,7 +62,7 @@ def run(side=48):
     for nb in (2, 4, 8, 16, 32):
         cfg = IRLSConfig(n_irls=10, pcg_max_iters=100, n_blocks=nb)
         with timer() as t:
-            solve(inst, cfg)
+            MinCutSession(inst, cfg).solve(rounding=None)
         times[nb] = t.dt
     # (b) collective bytes per shard count
     comm = {p: _collective_bytes_at(p, side) for p in (2, 4, 8)}

@@ -5,7 +5,7 @@ role the B-K solver plays in the paper: an exact combinatorial solver on
 one core).  PIRMCut = IRLS (vectorized/XLA) + two-level rounding."""
 from __future__ import annotations
 
-from repro.core import IRLSConfig, max_flow, solve, two_level
+from repro.core import IRLSConfig, MinCutSession, max_flow
 
 from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
 
@@ -18,12 +18,11 @@ def _one(inst, n_blocks=None):
         n_blocks = max(8, inst.n // 512)
     cfg = IRLSConfig(eps=1e-6, n_irls=30, pcg_max_iters=50, n_blocks=n_blocks)
     with timer() as t_cold:              # includes jit compiles + partition
-        v, _ = solve(inst, cfg)
-        res = two_level(inst, v)
-    with timer() as t_warm:              # steady-state solve (paper regime:
-        v, _ = solve(inst, cfg)          # a SEQUENCE of related problems)
-        res = two_level(inst, v)
-    with timer() as t_exact:
+        sess = MinCutSession(inst, cfg)
+        res = sess.solve()
+    with timer() as t_warm:              # steady-state session re-solve (paper
+        res = sess.solve()               # regime: a SEQUENCE of related
+    with timer() as t_exact:             # problems on one topology)
         exact = max_flow(inst)
     delta = (res.cut_value - exact.value) / exact.value
     return {"n": inst.n, "m": inst.graph.m,

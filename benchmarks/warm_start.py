@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import IRLSConfig, solve
+from repro.core import IRLSConfig, MinCutSession, Problem
 
 from .common import grid_instance, road_instance, save_json, timer
 
@@ -14,10 +14,14 @@ from .common import grid_instance, road_instance, save_json, timer
 def _measure(inst, n_irls):
     base = dict(eps=1e-6, n_irls=n_irls, pcg_tol=1e-3, pcg_max_iters=300,
                 n_blocks=4)
+    # one Problem: the partition/plans are shared; only the stepper differs
+    sess = MinCutSession(Problem.build(inst, n_blocks=4))
     with timer() as tw:
-        _, warm = solve(inst, IRLSConfig(warm_start=True, **base))
+        warm = sess.solve(cfg=IRLSConfig(warm_start=True, **base),
+                          rounding=None).diagnostics
     with timer() as tc:
-        _, cold = solve(inst, IRLSConfig(warm_start=False, **base))
+        cold = sess.solve(cfg=IRLSConfig(warm_start=False, **base),
+                          rounding=None).diagnostics
     w = np.asarray(warm.pcg_iters)
     c = np.asarray(cold.pcg_iters)
     saving = 1.0 - w[1:].sum() / max(1, c[1:].sum())

@@ -2,11 +2,12 @@
 
 The paper's motivating applications solve a SEQUENCE of s-t min-cut
 instances whose weights change slowly (FlowImprove partition refinement).
-This example runs such a sequence and demonstrates the two amortizations
-the paper's design enables:
+This is exactly what the session API makes first-class:
 
-  * the graph partition / block plan is built ONCE and reused,
-  * each instance warm-starts from the previous voltage vector.
+  * ``Problem.build`` runs the graph partition / plan construction ONCE,
+  * each iteration re-solves with ``session.solve(weights=..., warm_from=
+    previous)`` — same compiled stepper, new terminal weights, voltages
+    warm-started from the previous instance's solution.
 
   PYTHONPATH=src python examples/flow_improve_sequence.py
 """
@@ -14,7 +15,7 @@ import time
 
 import numpy as np
 
-from repro.core import IRLSConfig, max_flow, two_level, solve
+from repro.core import IRLSConfig, MinCutSession, Problem, max_flow
 from repro.graphs import generators as gen
 from repro.graphs import partition as gp
 
@@ -22,25 +23,30 @@ g = gen.road_like(60, seed=4)
 print(f"road network: {g.n} nodes, {g.m} edges")
 
 # FlowImprove iterates: seed set → s-t instance → cut → new seed set → ...
-labels = gp.partition_kway(g, 8)       # built once, reused across the run
 rng = np.random.default_rng(0)
 seed_set = np.nonzero(rng.random(g.n) < 0.5)[0]   # start from a RANDOM set
 cfg = IRLSConfig(eps=1e-6, n_irls=25, pcg_max_iters=100, n_blocks=8)
 
+inst0 = gen.flow_improve_instance(g, seed_set=seed_set, seed=10)
+problem = Problem.build(inst0, n_blocks=cfg.n_blocks)   # partition built once
+session = MinCutSession(problem, cfg)
+
 cut_values = []
+prev = None
 for it in range(4):
     inst = gen.flow_improve_instance(g, seed_set=seed_set, seed=10 + it)
     t0 = time.time()
-    v, diag = solve(inst, cfg, labels=labels)
-    res = two_level(inst, v)
+    res = session.solve(weights=inst, warm_from=prev, rounding="two_level")
     dt = time.time() - t0
     exact = max_flow(inst).value
     delta = (res.cut_value - exact) / exact
     cut_values.append(res.cut_value)
     # the improved partition becomes the next seed set (FlowImprove loop)
-    seed_set = np.nonzero(res.in_source)[0]
+    seed_set = np.nonzero(res.cut.in_source)[0]
+    prev = res
     print(f"iter {it}: cut={res.cut_value:10.4f} δ={delta:8.1e} "
-          f"({dt:.1f}s, {sum(diag.pcg_iters)} PCG iters)")
+          f"({dt:.1f}s, {sum(res.diagnostics.pcg_iters)} PCG iters, "
+          f"setup {res.timings['setup']:.2f}s)")
 
 print("\ncut value sequence:", [f"{c:.2f}" for c in cut_values])
 print("(non-increasing sequence = the partition keeps improving)")

@@ -4,7 +4,7 @@
 """
 import numpy as np
 
-from repro.core import IRLSConfig, max_flow, pirmcut
+from repro.core import IRLSConfig, MinCutSession, Problem, max_flow, pirmcut
 from repro.graphs import generators as gen
 
 # 1. build an instance: a 2-D segmentation graph (float-valued weights)
@@ -12,21 +12,33 @@ g = gen.grid_2d(32, 32, seed=0)
 inst = gen.segmentation_instance(g, (32, 32), seed=1)
 print(f"instance: {inst.n} nodes, {inst.graph.m} edges")
 
-# 2. run PIRMCut (Algorithm 1): IRLS voltages → two-level rounding
+# 2. run PIRMCut (Algorithm 1) through the session API: the Problem holds
+#    the one-time partition + plans; the session holds the compiled stepper
 cfg = IRLSConfig(eps=1e-6, n_irls=30, pcg_max_iters=100, n_blocks=8)
-result, voltages, diag = pirmcut(inst, cfg, rounding="two_level")
+problem = Problem.build(inst, n_blocks=cfg.n_blocks)
+session = MinCutSession(problem, cfg)
+result = session.solve(rounding="two_level")
 print(f"PIRMCut cut value : {result.cut_value:.4f}")
-print(f"coarse graph size : {result.meta['coarse_n']} "
-      f"(reduction {result.meta['reduction']:.1f}x)")
-print(f"PCG iterations/IRLS step: {diag.pcg_iters[:10]} ...")
+print(f"coarse graph size : {result.cut.meta['coarse_n']} "
+      f"(reduction {result.cut.meta['reduction']:.1f}x)")
+print(f"PCG iterations/IRLS step: {result.diagnostics.pcg_iters[:10]} ...")
 
-# 3. compare with the exact serial solver (the paper's B-K role)
+# 3. a second solve on the same session skips partitioning + compilation
+again = session.solve(rounding="two_level")
+print(f"amortized re-solve: {again.timings['total']:.3f}s "
+      f"(first: {result.timings['total']:.3f}s)")
+
+# 4. compare with the exact serial solver (the paper's B-K role)
 exact = max_flow(inst)
 delta = (result.cut_value - exact.value) / exact.value
 print(f"exact min-cut     : {exact.value:.4f}")
 print(f"relative gap δ    : {delta:.2e}")
 
-# 4. the source side of the cut
-side = result.in_source
+# 5. the source side of the cut
+side = result.cut.in_source
 print(f"source side holds {int(side.sum())}/{inst.n} nodes")
 assert delta < 1e-3
+
+# one-shot convenience wrapper (identical result, no session to keep):
+res, voltages, diag = pirmcut(inst, cfg, rounding="two_level")
+assert res.cut_value == result.cut_value

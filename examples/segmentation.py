@@ -1,14 +1,16 @@
 """Image-segmentation example (the paper's N-D grid / GraphCut workload).
 
 Builds a 3-D 26-connected voxel grid with unary potentials from a smooth
-random field (an MRI-scan proxy, §5.1), solves it with PIRMCut and renders
-an ASCII slice of the segmentation.
+random field (an MRI-scan proxy, §5.1), solves it through a MinCutSession
+and renders an ASCII slice of the segmentation.  Both rounding procedures
+run on the SAME session solve — the voltages are computed once.
 
   PYTHONPATH=src python examples/segmentation.py
 """
 import numpy as np
 
-from repro.core import IRLSConfig, max_flow, pirmcut, sweep_cut
+from repro.core import IRLSConfig, MinCutSession, max_flow
+from repro.core import rounding as rd
 from repro.graphs import generators as gen
 
 D = H = W = 10
@@ -18,17 +20,18 @@ print(f"voxel grid {D}x{H}x{W} (26-connected): "
       f"{inst.n} voxels, {inst.graph.m} edges")
 
 cfg = IRLSConfig(eps=1e-6, n_irls=40, pcg_max_iters=50, n_blocks=8)
-result, v, diag = pirmcut(inst, cfg, rounding="two_level")
-r_sweep = sweep_cut(inst, v)
+session = MinCutSession(inst, cfg)          # builds the Problem implicitly
+result = session.solve(rounding="two_level")
+r_sweep = rd.round_voltages("sweep", inst, result.voltages)
 exact = max_flow(inst)
 
 print(f"two-level cut: {result.cut_value:.4f} "
       f"(δ={(result.cut_value-exact.value)/exact.value:.1e})")
 print(f"sweep cut    : {r_sweep.cut_value:.4f} "
       f"(δ={(r_sweep.cut_value-exact.value)/exact.value:.1e})")
-print(f"size reduction in two-level: {result.meta['reduction']:.1f}x")
+print(f"size reduction in two-level: {result.cut.meta['reduction']:.1f}x")
 
-seg = result.in_source.reshape(D, H, W)
+seg = result.cut.in_source.reshape(D, H, W)
 print(f"\nmiddle slice (z={D//2}); #=object .=background")
 for row in seg[D // 2]:
     print("".join("#" if x else "." for x in row))

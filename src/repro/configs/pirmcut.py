@@ -32,3 +32,21 @@ class SolveCell:
     boundary_frac: float
     pcg_iters: int = 50
     n_irls: int = 50
+
+
+def pirmcut_config():
+    """Production solver config (paper §5.4 defaults at Table-1 scale):
+    T = K = 50 with the partition-local block-Jacobi preconditioner."""
+    from repro.core.irls import IRLSConfig
+
+    return IRLSConfig(eps=1e-6, n_irls=50, pcg_max_iters=50,
+                      precond="block_jacobi", n_blocks=128, warm_start=True)
+
+
+def reduced_pirmcut():
+    """Down-scaled config for smoke tests / CI: same structure, tiny
+    schedule (5 IRLS × 10 PCG, 4 blocks)."""
+    from repro.core.irls import IRLSConfig
+
+    return IRLSConfig(eps=1e-4, n_irls=5, pcg_max_iters=10,
+                      precond="block_jacobi", n_blocks=4, warm_start=True)

@@ -42,7 +42,7 @@ ARCHS["din"] = ArchEntry(
 
 ARCHS["pirmcut"] = ArchEntry(
     arch_id="pirmcut", family="solver",
-    make_config=lambda: None, make_reduced=lambda: None,
+    make_config=pirmcut.pirmcut_config, make_reduced=pirmcut.reduced_pirmcut,
     cells=pirmcut.PIRMCUT_CELLS, shapes=pirmcut.PIRMCUT_SHAPES)
 
 ASSIGNED = [a for a in ARCHS if a != "pirmcut"]     # the 10 graded archs

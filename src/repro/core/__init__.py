@@ -1,29 +1,33 @@
 """PIRMCut core: the paper's contribution as a composable JAX module.
 
 Public API:
+    Problem, MinCutSession, SolveResult, Weights
+                                 — the session API (build plans once,
+                                   reuse compiled steppers; docs/API.md)
     IRLSConfig, solve            — the IRLS driver (Algorithm 1, steps 2-5)
-    sweep_cut, two_level         — rounding (step 7)
+    sweep_cut, two_level         — rounding (step 7; rounding.REGISTRY)
     max_flow, min_cut_value      — exact serial oracle / B-K stand-in
-    pirmcut                      — Algorithm 1 end to end
+    pirmcut                      — Algorithm 1 end to end (one-shot wrapper
+                                   over MinCutSession)
     cheeger_lambda2              — Thm 2.7 diagnostic
 """
 from .incidence import DeviceGraph, device_graph_from_instance
 from .irls import IRLSConfig, IRLSDiagnostics, solve, solve_scanned
 from .maxflow import MaxFlowResult, max_flow, min_cut_indicator, min_cut_value
-from .rounding import RoundingResult, sweep_cut, two_level
+from .rounding import RoundingResult, round_voltages, sweep_cut, two_level
+from .session import MinCutSession, Problem, SolveResult, Weights, as_weights
 from .cheeger import CheegerEstimate, cheeger_lambda2, phi_of_cut
 
 
 def pirmcut(instance, cfg: IRLSConfig = IRLSConfig(), rounding: str = "two_level",
-            labels=None):
+            labels=None, backend: str = "host"):
     """Algorithm 1 (PIRMCut) end to end: IRLS voltages → rounding → cut.
 
-    Returns (RoundingResult, voltages, IRLSDiagnostics)."""
-    v, diag = solve(instance, cfg, labels=labels)
-    if rounding == "two_level":
-        res = two_level(instance, v)
-    elif rounding == "sweep":
-        res = sweep_cut(instance, v)
-    else:
-        raise ValueError(f"unknown rounding {rounding!r}")
-    return res, v, diag
+    One-shot convenience wrapper over ``MinCutSession``; ``rounding`` is any
+    name in ``rounding.REGISTRY``.  For repeated solves on one topology keep
+    the session instead.  Returns (RoundingResult, voltages, IRLSDiagnostics).
+    """
+    n_blocks = cfg.n_blocks if cfg.precond == "block_jacobi" else 1
+    prob = Problem.build(instance, n_blocks=n_blocks, labels=labels)
+    res = MinCutSession(prob, cfg, backend=backend).solve(rounding=rounding)
+    return res.cut, res.voltages, res.diagnostics

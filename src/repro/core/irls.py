@@ -17,9 +17,17 @@ Two drivers are provided:
 * ``solve_scanned`` — one jitted ``lax.scan`` over IRLS iterations with a
   fixed PCG schedule — the form the distributed dry-run lowers and compiles.
 
-Beyond-paper options (each recorded separately in EXPERIMENTS.md §Perf):
-``eps_schedule`` (ε-continuation annealing) and ``precond="chebyshev"``
-(collective-free polynomial preconditioner).
+Both are thin compatibility entry points over the session API
+(core/session.py): ``Problem`` holds the one-time partition/plan setup and
+``MinCutSession`` caches the compiled steppers, so repeated solves amortize
+everything but the numerics.  See docs/API.md for the backend matrix.
+
+Preconditioners resolve through ``precond.REGISTRY`` and rounding through
+``rounding.REGISTRY`` — new strategies plug in without touching the drivers.
+
+Beyond-paper options (documented in docs/API.md): ``eps_schedule``
+(ε-continuation annealing) and ``precond="chebyshev"`` (collective-free
+polynomial preconditioner).
 """
 from __future__ import annotations
 
@@ -89,7 +97,13 @@ def _make_matvec(g: DeviceGraph, rw: lap.Reweighted, cfg: IRLSConfig,
 
 
 class _Stepper:
-    """Jitted single-IRLS-iteration step factory (host-driven driver)."""
+    """Jitted single-IRLS-iteration step factory (host-driven driver).
+
+    The topology (src/dst and plans) is closed over as a compile-time
+    constant; the edge/terminal weights are TRACED arguments, so one compiled
+    stepper serves every same-topology weight vector — the plan-reuse
+    property ``MinCutSession`` builds on.
+    """
 
     def __init__(self, g: DeviceGraph, cfg: IRLSConfig,
                  block_plan: Optional[pc.BlockPlan],
@@ -98,10 +112,16 @@ class _Stepper:
         self.cfg = cfg
         self.block_plan = block_plan
         self.ell_plan = ell_plan
-        self._step = jax.jit(self._step_impl, static_argnames=("first",))
+        self._jit_step = jax.jit(self._step_impl, static_argnames=("first",))
 
-    def _step_impl(self, v, eps, *, first: bool):
-        g, cfg = self.g, self.cfg
+    def _step(self, v, eps, *, first: bool, weights=None):
+        c, c_s, c_t = (weights if weights is not None
+                       else (self.g.c, self.g.c_s, self.g.c_t))
+        return self._jit_step(v, eps, c, c_s, c_t, first=first)
+
+    def _step_impl(self, v, eps, c, c_s, c_t, *, first: bool):
+        cfg = self.cfg
+        g = DeviceGraph(src=self.g.src, dst=self.g.dst, c=c, c_s=c_s, c_t=c_t)
         if first:
             rw = lap.initial_weights(g)
         else:
@@ -112,25 +132,8 @@ class _Stepper:
                 rw = lap.reweight(g, v, eps)
         matvec = _make_matvec(g, rw, cfg, self.ell_plan)
         b = lap.rhs(rw)
-
-        if cfg.precond == "block_jacobi":
-            M = pc.factorize_blocks(self.block_plan, rw,
-                                    cfg.explicit_block_inverse)
-            if cfg.use_pallas and M.inv is not None:
-                from repro.kernels import ops as kops
-                apply_M = lambda x: pc.scatter_blocks(
-                    M.plan, kops.block_diag_matvec(M.inv, pc.gather_blocks(M.plan, x)))
-            else:
-                apply_M = lambda x: pc.apply_block_jacobi(M, x)
-        elif cfg.precond == "jacobi":
-            apply_M = lambda x: pc.jacobi_apply(rw.diag, x)
-        elif cfg.precond == "chebyshev":
-            apply_M = pc.make_chebyshev_apply(matvec, rw.diag, cfg.cheby_degree)
-        elif cfg.precond == "none":
-            apply_M = None
-        else:
-            raise ValueError(f"unknown preconditioner {cfg.precond!r}")
-
+        apply_M = pc.make_preconditioner(cfg.precond, rw, matvec, cfg,
+                                         self.block_plan)
         x0 = v if (cfg.warm_start and not first) else jnp.zeros_like(v)
         res = pcg(matvec, b, x0=x0, precond=apply_M, tol=cfg.pcg_tol,
                   max_iters=cfg.pcg_max_iters, record_history=True)
@@ -139,63 +142,65 @@ class _Stepper:
         return res.x, res.iters, res.rel_res, s_eps, frac_cut
 
 
-def solve(instance, cfg: IRLSConfig = IRLSConfig(),
-          labels: Optional[np.ndarray] = None,
-          collect_voltages: bool = False):
-    """Run PIRMCut IRLS on a host STInstance.
+def run_host_loop(stepper: _Stepper, cfg: IRLSConfig, n: int, dtype,
+                  v0=None, collect_voltages: bool = False, weights=None):
+    """Drive a prebuilt ``_Stepper`` through the IRLS loop.
 
-    ``labels`` — optional precomputed partition labels over (reordered)
-    non-terminal nodes for the block-Jacobi preconditioner; computed with the
-    multilevel partitioner when absent.  Returns (v, diagnostics).
+    ``v0`` — optional warm-start voltages (REORDERED frame): when given, the
+    cold initial WLS with W⁰ = C is skipped and reweighting starts from v0
+    (the FlowImprove sequence regime).  ``weights`` — optional device
+    ``(c, c_s, c_t)`` triple (REORDERED frame) overriding the stepper's
+    baked-in weights.  Returns (device voltages, diag).
     """
-    from repro.graphs import partition as gp
-    from repro.graphs.structures import permute_instance
-
-    t0 = time.perf_counter()
-    dtype = jnp.dtype(cfg.dtype)
-
-    perm = None
-    if cfg.precond == "block_jacobi":
-        if labels is None:
-            labels = gp.partition_kway(instance.graph, cfg.n_blocks)
-        perm = gp.partition_order(labels)
-        instance = permute_instance(instance, perm)
-        labels = np.sort(np.asarray(labels))
-
-    g = device_graph_from_instance(instance, dtype=dtype)
-
-    block_plan = None
-    if cfg.precond == "block_jacobi":
-        block_plan = pc.build_block_plan(instance.graph.src, instance.graph.dst,
-                                         labels, cfg.n_blocks)
-    ell_plan = None
-    if cfg.layout == "ell":
-        ell_plan = lap.build_ell_plan(instance.graph.src, instance.graph.dst, g.n)
-
-    stepper = _Stepper(g, cfg, block_plan, ell_plan)
-    setup_time = time.perf_counter() - t0
-
     diag = IRLSDiagnostics(pcg_iters=[], pcg_residuals=[], objective=[],
-                           l1_objective=[], voltages=[] if collect_voltages else None,
-                           setup_time=setup_time)
-
+                           l1_objective=[],
+                           voltages=[] if collect_voltages else None)
     t1 = time.perf_counter()
-    v = jnp.zeros((g.n,), dtype=dtype)
-    # x⁰: WLS with W⁰ = C (cold start by definition)
-    v, iters, rel, s_eps, frac = stepper._step(v, cfg.eps, first=True)
-    _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
+    if v0 is None:
+        v = jnp.zeros((n,), dtype=dtype)
+        # x⁰: WLS with W⁰ = C (cold start by definition)
+        v, iters, rel, s_eps, frac = stepper._step(v, cfg.eps, first=True,
+                                                   weights=weights)
+        _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
+    else:
+        v = jnp.asarray(v0, dtype=dtype)
     for l in range(1, cfg.n_irls + 1):
         eps_l = _eps_at(cfg, l)
-        v, iters, rel, s_eps, frac = stepper._step(v, eps_l, first=False)
+        v, iters, rel, s_eps, frac = stepper._step(v, eps_l, first=False,
+                                                   weights=weights)
         _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
     v.block_until_ready()
     diag.irls_time = time.perf_counter() - t1
+    return v, diag
 
-    v_host = np.asarray(v)
-    if perm is not None:
-        # undo the block reordering so callers see original node ids
-        v_host = v_host[perm]
-    return v_host, diag
+
+def solve(instance, cfg: IRLSConfig = IRLSConfig(),
+          labels: Optional[np.ndarray] = None,
+          collect_voltages: bool = False):
+    """Run PIRMCut IRLS on a host STInstance (one-shot compatibility path).
+
+    ``labels`` — optional precomputed partition labels over non-terminal
+    nodes for the block-Jacobi preconditioner; computed with the multilevel
+    partitioner when absent.  Returns (v, diagnostics).  For repeated solves
+    build a ``Problem`` + ``MinCutSession`` instead (core/session.py) — this
+    function rebuilds the partition, plans and jitted stepper every call.
+    """
+    from .session import Problem
+
+    t0 = time.perf_counter()
+    n_blocks = cfg.n_blocks if cfg.precond == "block_jacobi" else 1
+    prob = Problem.build(instance, n_blocks=n_blocks, labels=labels)
+    dtype = jnp.dtype(cfg.dtype)
+    g = prob.device_graph(dtype)
+    block_plan = prob.block_plan() if cfg.precond == "block_jacobi" else None
+    ell_plan = prob.ell_plan() if cfg.layout == "ell" else None
+    stepper = _Stepper(g, cfg, block_plan, ell_plan)
+    setup_time = time.perf_counter() - t0
+
+    v, diag = run_host_loop(stepper, cfg, g.n, dtype,
+                            collect_voltages=collect_voltages)
+    diag.setup_time = setup_time
+    return prob.to_original(np.asarray(v)), diag
 
 
 def _record(diag, v, iters, rel, s_eps, frac, collect_voltages):
@@ -211,38 +216,58 @@ def _record(diag, v, iters, rel, s_eps, frac, collect_voltages):
 # Fully-scanned variant (fixed schedule; what the dry-run lowers)
 # ---------------------------------------------------------------------------
 
+def _scanned_precond(cfg: IRLSConfig, rw, matvec,
+                     block_plan: Optional[pc.BlockPlan]):
+    """Scanned drivers need a fixed-schedule preconditioner: resolve through
+    the registry, falling back to point Jacobi when block Jacobi has no plan
+    AND for "none" — the fixed iteration budget relies on at least diagonal
+    scaling to converge, and this preserves the pre-registry scanned
+    numerics exactly."""
+    name = cfg.precond
+    if name == "none" or (name == "block_jacobi" and block_plan is None):
+        name = "jacobi"
+    return pc.make_preconditioner(name, rw, matvec, cfg, block_plan)
+
+
+def make_scanned_program(src, dst, cfg: IRLSConfig,
+                         block_plan: Optional[pc.BlockPlan] = None,
+                         ell_plan: Optional[lap.EllPlan] = None):
+    """Build the weight-parameterized scanned IRLS program.
+
+    Returns ``run(c, c_s, c_t) → (v, rels)`` with the topology (src/dst and
+    plans) closed over — one jit of ``run`` serves every same-topology
+    weight vector, and ``jax.vmap(run)`` batches many instances (the
+    ``MinCutSession.solve_batch`` serving path).  Static control flow end to
+    end: scan over T IRLS iterations, each a fixed-iteration PCG.
+    """
+    def run(c, c_s, c_t):
+        g = DeviceGraph(src=src, dst=dst, c=c, c_s=c_s, c_t=c_t)
+
+        def irls_step(v, _):
+            rw = lap.reweight(g, v, cfg.eps)
+            matvec = _make_matvec(g, rw, cfg, ell_plan)
+            b = lap.rhs(rw)
+            apply_M = _scanned_precond(cfg, rw, matvec, block_plan)
+            x0 = v if cfg.warm_start else jnp.zeros_like(v)
+            res = pcg_fixed_iters(matvec, b, x0=x0, precond=apply_M,
+                                  n_iters=cfg.pcg_max_iters)
+            return res.x, res.rel_res
+
+        rw0 = lap.initial_weights(g)
+        matvec0 = _make_matvec(g, rw0, cfg, ell_plan)
+        apply_M0 = _scanned_precond(cfg, rw0, matvec0, block_plan)
+        res0 = pcg_fixed_iters(matvec0, lap.rhs(rw0), precond=apply_M0,
+                               n_iters=cfg.pcg_max_iters)
+        v, rels = jax.lax.scan(irls_step, res0.x, None, length=cfg.n_irls)
+        return v, rels
+
+    return run
+
+
 def solve_scanned(g: DeviceGraph, cfg: IRLSConfig,
                   block_plan: Optional[pc.BlockPlan] = None,
                   ell_plan: Optional[lap.EllPlan] = None):
     """One jit-able program: scan over T IRLS iterations, each running a
-    fixed-iteration PCG.  Static control flow end to end."""
-
-    def irls_step(v, _):
-        rw = lap.reweight(g, v, cfg.eps)
-        matvec = _make_matvec(g, rw, cfg, ell_plan)
-        b = lap.rhs(rw)
-        if cfg.precond == "block_jacobi" and block_plan is not None:
-            M = pc.factorize_blocks(block_plan, rw, cfg.explicit_block_inverse)
-            apply_M = lambda x: pc.apply_block_jacobi(M, x)
-        elif cfg.precond == "chebyshev":
-            apply_M = pc.make_chebyshev_apply(matvec, rw.diag, cfg.cheby_degree)
-        else:
-            apply_M = lambda x: pc.jacobi_apply(rw.diag, x)
-        x0 = v if cfg.warm_start else jnp.zeros_like(v)
-        res = pcg_fixed_iters(matvec, b, x0=x0, precond=apply_M,
-                              n_iters=cfg.pcg_max_iters)
-        return res.x, res.rel_res
-
-    rw0 = lap.initial_weights(g)
-    matvec0 = _make_matvec(g, rw0, cfg, ell_plan)
-    if cfg.precond == "block_jacobi" and block_plan is not None:
-        M0 = pc.factorize_blocks(block_plan, rw0, cfg.explicit_block_inverse)
-        apply_M0 = lambda x: pc.apply_block_jacobi(M0, x)
-    elif cfg.precond == "chebyshev":
-        apply_M0 = pc.make_chebyshev_apply(matvec0, rw0.diag, cfg.cheby_degree)
-    else:
-        apply_M0 = lambda x: pc.jacobi_apply(rw0.diag, x)
-    res0 = pcg_fixed_iters(matvec0, lap.rhs(rw0), precond=apply_M0,
-                           n_iters=cfg.pcg_max_iters)
-    v, rels = jax.lax.scan(irls_step, res0.x, None, length=cfg.n_irls)
-    return v, rels
+    fixed-iteration PCG (compatibility wrapper over make_scanned_program)."""
+    run = make_scanned_program(g.src, g.dst, cfg, block_plan, ell_plan)
+    return run(g.c, g.c_s, g.c_t)

@@ -17,16 +17,48 @@ This keeps the paper's structure exactly — "precondition with the
 partition-local subsystem, refactor cheaply once per IRLS iteration" — in a
 TPU-native dense-batched form.  A plain (point) Jacobi and a Chebyshev
 polynomial preconditioner are provided as cheaper/collective-free options.
+
+Strategies are looked up through ``REGISTRY`` (name → factory) so new
+preconditioners plug into the IRLS drivers without touching them: register
+with ``@register("name")`` a factory ``(rw, matvec, cfg, block_plan) →
+apply_fn | None`` (None = unpreconditioned CG).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .incidence import DeviceGraph
 from .laplacian import Reweighted
+
+# factory signature: (rw, matvec, cfg, block_plan) -> apply_fn | None
+PrecondFactory = Callable[..., Optional[Callable[[jax.Array], jax.Array]]]
+
+REGISTRY: Dict[str, PrecondFactory] = {}
+
+
+def register(name: str):
+    """Register a preconditioner factory under ``cfg.precond == name``."""
+    def deco(fn: PrecondFactory) -> PrecondFactory:
+        REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def make_preconditioner(name: str, rw: Reweighted, matvec, cfg,
+                        block_plan: Optional["BlockPlan"] = None):
+    """Resolve ``name`` through REGISTRY and build the per-iteration apply.
+
+    Returns a callable ``x → M⁻¹x`` or None (identity).  Raises ValueError
+    on unknown names, listing what is registered."""
+    try:
+        factory = REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown preconditioner {name!r}; "
+                         f"registered: {sorted(REGISTRY)}") from None
+    return factory(rw, matvec, cfg, block_plan)
 
 
 class BlockPlan(NamedTuple):
@@ -188,3 +220,39 @@ def make_chebyshev_apply(matvec: Callable[[jax.Array], jax.Array],
         return z / dh
 
     return apply
+
+
+# ---------------------------------------------------------------------------
+# Registry entries (the former if/elif chain of the IRLS drivers)
+# ---------------------------------------------------------------------------
+
+@register("none")
+def _make_none(rw, matvec, cfg, block_plan):
+    return None
+
+
+@register("jacobi")
+def _make_jacobi(rw, matvec, cfg, block_plan):
+    diag = rw.diag
+    return lambda x: jacobi_apply(diag, x)
+
+
+@register("chebyshev")
+def _make_chebyshev(rw, matvec, cfg, block_plan):
+    return make_chebyshev_apply(matvec, rw.diag, cfg.cheby_degree)
+
+
+@register("block_jacobi")
+def _make_block_jacobi(rw, matvec, cfg, block_plan):
+    """Block Jacobi needs a partition plan; without one (e.g. a driver that
+    skipped partitioning) it degrades to point Jacobi, matching the scanned
+    driver's historical behaviour."""
+    if block_plan is None:
+        return _make_jacobi(rw, matvec, cfg, block_plan)
+    M = factorize_blocks(block_plan, rw,
+                         getattr(cfg, "explicit_block_inverse", False))
+    if getattr(cfg, "use_pallas", False) and M.inv is not None:
+        from repro.kernels import ops as kops
+        return lambda x: scatter_blocks(
+            M.plan, kops.block_diag_matvec(M.inv, gather_blocks(M.plan, x)))
+    return lambda x: apply_block_jacobi(M, x)

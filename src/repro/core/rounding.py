@@ -13,10 +13,15 @@
 
 Both return a boolean indicator over non-terminal nodes (True = source side)
 plus the achieved cut value.
+
+Procedures are looked up through ``REGISTRY`` (name → rounder) so new
+strategies plug into the solver drivers without touching them: register with
+``@register("name")`` a callable ``(instance, voltages, **kw) →
+RoundingResult``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Callable, Dict, NamedTuple, Tuple
 
 import numpy as np
 
@@ -33,6 +38,30 @@ class RoundingResult(NamedTuple):
     in_source: np.ndarray   # bool[n]
     cut_value: float
     meta: dict
+
+
+# rounder signature: (instance, voltages, **kw) -> RoundingResult
+Rounder = Callable[..., "RoundingResult"]
+
+REGISTRY: Dict[str, Rounder] = {}
+
+
+def register(name: str):
+    """Register a rounding procedure under ``rounding == name``."""
+    def deco(fn: Rounder) -> Rounder:
+        REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def round_voltages(name: str, instance, v, **kw) -> "RoundingResult":
+    """Resolve ``name`` through REGISTRY and round the voltage vector."""
+    try:
+        rounder = REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown rounding {name!r}; "
+                         f"registered: {sorted(REGISTRY)}") from None
+    return rounder(instance, v, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +108,7 @@ def sweep_cut_jax(src, dst, w, s_w, t_w, v):
     return in_source, jnp.where(use0, i0_val, best_val)
 
 
+@register("sweep")
 def sweep_cut(instance: STInstance, v: np.ndarray) -> RoundingResult:
     g = instance.graph
     ind, val = jax.jit(sweep_cut_jax)(
@@ -176,6 +206,7 @@ def coarsen(instance: STInstance, v: np.ndarray, gamma0: float,
     return coarse, labels, contour_ids, st_cross
 
 
+@register("two_level")
 def two_level(instance: STInstance, v: np.ndarray,
               margin: float = 0.05) -> RoundingResult:
     """The paper's two-level rounding: coarsen by polarization, solve the

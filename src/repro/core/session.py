@@ -1,0 +1,428 @@
+"""Unified solver session API: ``Problem`` + ``MinCutSession`` + ``SolveResult``.
+
+The paper's pipeline (partition → reorder → IRLS with warm-started
+block-Jacobi PCG → rounding) splits into two kinds of state with very
+different lifetimes:
+
+* **topology-level** — the k-way partition, the node reordering, the
+  block/ELL plans, the halo layout.  Built ONCE per graph topology; reused
+  across every solve on that graph (``Problem``).
+* **numeric** — edge/terminal weights, voltages, the per-iteration
+  reweighted systems.  Fresh per solve (``MinCutSession.solve``).
+
+``MinCutSession`` holds the compiled steppers keyed on
+``(IRLSConfig, backend)`` on top of one ``Problem`` and runs
+IRLS → rounding → ``SolveResult`` uniformly for three backends:
+
+  backend     driver                          warm_from   solve_batch
+  ─────────   ─────────────────────────────   ─────────   ───────────
+  "host"      per-iteration jitted stepper    yes         no
+              (adaptive PCG stop, full
+              diagnostics; paper Table 2)
+  "scanned"   one jitted lax.scan program     no          yes (vmap)
+              (fixed PCG schedule)
+  "sharded"   shard_map SPMD program over     no          no
+              the device mesh (§3.3)
+
+This is the serving-path design of FlowImprove-style workloads: a SEQUENCE
+of same-topology instances where only weights change — the second solve
+skips partitioning, plan construction and compilation entirely, and can
+warm-start from the previous voltages (``warm_from=previous_result``).
+
+``pirmcut()`` (core/__init__.py) remains the one-shot paper-facing wrapper.
+See docs/API.md for the full reference.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, NamedTuple, Optional, Sequence, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import laplacian as lap
+from . import precond as pc
+from . import rounding as rd
+from .incidence import DeviceGraph
+from .irls import (IRLSConfig, IRLSDiagnostics, _Stepper,
+                   make_scanned_program, run_host_loop)
+from .rounding import RoundingResult
+from repro.graphs.structures import EdgeList, STInstance, permute_instance
+
+
+class Weights(NamedTuple):
+    """A same-topology weight assignment, in ORIGINAL node/edge order.
+
+    c   : float[m]  non-terminal edge weights (same edge order as the
+                    Problem's instance)
+    c_s : float[n]  terminal-source weights
+    c_t : float[n]  terminal-sink weights
+    """
+
+    c: np.ndarray
+    c_s: np.ndarray
+    c_t: np.ndarray
+
+
+WeightsLike = Union["Weights", STInstance, tuple]
+
+
+def as_weights(w: WeightsLike) -> Weights:
+    """Coerce an STInstance / (c, c_s, c_t) triple into ``Weights``."""
+    if isinstance(w, Weights):
+        return w
+    if isinstance(w, STInstance):
+        return Weights(c=np.asarray(w.graph.weight),
+                       c_s=np.asarray(w.s_weight),
+                       c_t=np.asarray(w.t_weight))
+    c, c_s, c_t = w
+    return Weights(c=np.asarray(c), c_s=np.asarray(c_s), c_t=np.asarray(c_t))
+
+
+class Problem:
+    """One-time topology state: instance + partition labels + plans.
+
+    Build once per graph topology with ``Problem.build``; every
+    ``MinCutSession`` (and every weight vector) on that topology reuses it.
+    Plans are constructed lazily and cached — a session that never uses the
+    ELL layout never pays for the ELL plan.
+    """
+
+    def __init__(self, instance: STInstance, n_blocks: int,
+                 labels: np.ndarray, labels_sorted: np.ndarray,
+                 perm: Optional[np.ndarray], inv: Optional[np.ndarray],
+                 inst_r: STInstance):
+        self.instance = instance          # original node order
+        self.n_blocks = int(n_blocks)
+        self.labels = labels              # original order (halo/sharded reuse)
+        self.labels_sorted = labels_sorted
+        self.perm = perm                  # new_id = perm[old_id]; None = id
+        self.inv = inv                    # old_id = inv[new_id]
+        self.inst_r = inst_r              # reordered instance (solver frame)
+        self._graphs: Dict[str, DeviceGraph] = {}
+        self._block_plan = None
+        self._ell_plan = None
+
+    @classmethod
+    def build(cls, instance: STInstance, n_blocks: int = 16,
+              labels: Optional[np.ndarray] = None, seed: int = 0) -> "Problem":
+        """Partition (unless ``labels`` given) and reorder the instance.
+
+        ``n_blocks <= 1`` skips partitioning and reordering entirely (the
+        point-Jacobi / Chebyshev regimes need neither).
+        """
+        from repro.graphs import partition as gp
+
+        n = instance.n
+        if n_blocks > 1:
+            if labels is None:
+                labels = gp.partition_kway(instance.graph, n_blocks, seed=seed)
+            labels = np.asarray(labels, dtype=np.int64)
+            perm = gp.partition_order(labels)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(n)
+            inst_r = permute_instance(instance, perm)
+            labels_sorted = np.sort(labels)
+        else:
+            labels = np.zeros(n, dtype=np.int64)
+            labels_sorted = labels
+            perm = inv = None
+            inst_r = instance
+        return cls(instance, n_blocks, labels, labels_sorted, perm, inv,
+                   inst_r)
+
+    # -- frames ---------------------------------------------------------------
+    def to_original(self, v: np.ndarray) -> np.ndarray:
+        """Reordered (solver) frame → original node order."""
+        return v[self.perm] if self.perm is not None else v
+
+    def to_reordered(self, v: np.ndarray) -> np.ndarray:
+        """Original node order → reordered (solver) frame."""
+        return np.asarray(v)[self.inv] if self.inv is not None else np.asarray(v)
+
+    def check_weights(self, weights: WeightsLike) -> Weights:
+        """Coerce + validate a weight override against this topology."""
+        w = as_weights(weights)
+        n, m = self.instance.n, self.instance.graph.m
+        if (w.c.shape[0], w.c_s.shape[0], w.c_t.shape[0]) != (m, n, n):
+            raise ValueError(
+                f"weights do not match the Problem topology: got "
+                f"c[{w.c.shape[0]}], c_s[{w.c_s.shape[0]}], "
+                f"c_t[{w.c_t.shape[0]}]; expected c[{m}], c_s[{n}], c_t[{n}]")
+        return w
+
+    # -- cached plans ---------------------------------------------------------
+    def device_graph(self, dtype=jnp.float32,
+                     weights: Optional[WeightsLike] = None) -> DeviceGraph:
+        """Device-resident (reordered) graph; the index arrays are uploaded
+        once and shared across every weight vector."""
+        key = str(jnp.dtype(dtype))
+        base = self._graphs.get(key)
+        if base is None:
+            from .incidence import device_graph_from_instance
+            base = device_graph_from_instance(self.inst_r, dtype=dtype)
+            self._graphs[key] = base
+        if weights is None:
+            return base
+        w = self.check_weights(weights)
+        return DeviceGraph(
+            src=base.src, dst=base.dst,
+            c=jnp.asarray(w.c, dtype=dtype),
+            c_s=jnp.asarray(self.to_reordered(w.c_s), dtype=dtype),
+            c_t=jnp.asarray(self.to_reordered(w.c_t), dtype=dtype),
+        )
+
+    def block_plan(self) -> pc.BlockPlan:
+        if self._block_plan is None:
+            g = self.inst_r.graph
+            self._block_plan = pc.build_block_plan(
+                g.src, g.dst, self.labels_sorted, max(1, self.n_blocks))
+        return self._block_plan
+
+    def ell_plan(self) -> lap.EllPlan:
+        if self._ell_plan is None:
+            g = self.inst_r.graph
+            self._ell_plan = lap.build_ell_plan(g.src, g.dst, g.n)
+        return self._ell_plan
+
+    def instance_with(self, weights: Optional[WeightsLike]) -> STInstance:
+        """Original-order instance carrying ``weights`` (for rounding /
+        oracles); the Problem's own instance when weights is None."""
+        if weights is None:
+            return self.instance
+        w = self.check_weights(weights)
+        g = self.instance.graph
+        return STInstance(
+            graph=EdgeList(src=g.src, dst=g.dst,
+                           weight=np.asarray(w.c), n=g.n),
+            s_weight=np.asarray(w.c_s), t_weight=np.asarray(w.c_t))
+
+
+class SolveResult(NamedTuple):
+    """Everything a solve produced, in ORIGINAL node order."""
+
+    voltages: np.ndarray                  # x^(T), original node order
+    cut: Optional[RoundingResult]         # None when rounding=None
+    diagnostics: Optional[IRLSDiagnostics]  # host backend only
+    residuals: Optional[np.ndarray]       # scanned/sharded PCG residual trace
+    timings: Dict[str, float]             # per-phase seconds
+    backend: str
+
+    @property
+    def cut_value(self) -> float:
+        return self.cut.cut_value if self.cut is not None else float("nan")
+
+
+class MinCutSession:
+    """Compiled-solver cache over one ``Problem``.
+
+    Steppers/programs are keyed on ``(IRLSConfig, backend)``; the first
+    solve per key pays plan construction + compilation, every later solve
+    runs at steady-state speed.  ``solve(weights=...)`` re-solves the same
+    topology under new weights; ``solve(warm_from=prev)`` continues from a
+    previous result's voltages (host backend).
+    """
+
+    BACKENDS = ("host", "scanned", "sharded")
+
+    def __init__(self, problem: Union[Problem, STInstance],
+                 cfg: IRLSConfig = IRLSConfig(), backend: str = "host",
+                 mesh=None, schedule: str = "halo", precond_bs: int = 128):
+        if isinstance(problem, STInstance):
+            n_blocks = cfg.n_blocks if cfg.precond == "block_jacobi" else 1
+            problem = Problem.build(problem, n_blocks=n_blocks)
+        self.problem = problem
+        self.cfg = cfg
+        if backend not in self.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"known: {self.BACKENDS}")
+        self.backend = backend
+        self.mesh = mesh
+        self.schedule = schedule
+        self.precond_bs = precond_bs
+        self._steppers: Dict[tuple, object] = {}   # compiled-driver cache
+        self._sharded_weights: Dict[tuple, object] = {}
+
+    # -- public API -----------------------------------------------------------
+    def solve(self, weights: Optional[WeightsLike] = None,
+              warm_from: Optional[Union[SolveResult, np.ndarray]] = None,
+              rounding: Optional[str] = "two_level",
+              backend: Optional[str] = None,
+              cfg: Optional[IRLSConfig] = None,
+              collect_voltages: bool = False) -> SolveResult:
+        """IRLS → rounding → SolveResult.
+
+        weights   — same-topology weight override (Weights / STInstance /
+                    (c, c_s, c_t)), ORIGINAL order; None = Problem weights.
+        warm_from — previous SolveResult (or original-order voltage array)
+                    to continue from; host backend only.
+        rounding  — name in ``rounding.REGISTRY`` ("two_level", "sweep"),
+                    or None to skip rounding.
+        """
+        backend = backend or self.backend
+        cfg = cfg or self.cfg
+        if backend not in self.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"known: {self.BACKENDS}")
+        if warm_from is not None and backend != "host":
+            raise ValueError("warm_from is only supported on the host "
+                             "backend (scanned/sharded run a fixed cold "
+                             "schedule)")
+        timings: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        if backend == "host":
+            v, diag, rels = self._solve_host(cfg, weights, warm_from,
+                                             collect_voltages, timings)
+        elif backend == "scanned":
+            v, diag, rels = self._solve_scanned(cfg, weights, timings)
+        else:
+            v, diag, rels = self._solve_sharded(cfg, weights, timings)
+        timings["irls"] = time.perf_counter() - t0 - timings.get("setup", 0.0)
+
+        cut = None
+        if rounding is not None:
+            t1 = time.perf_counter()
+            cut = rd.round_voltages(rounding, self.problem.instance_with(weights), v)
+            timings["rounding"] = time.perf_counter() - t1
+        timings["total"] = time.perf_counter() - t0
+        return SolveResult(voltages=v, cut=cut, diagnostics=diag,
+                           residuals=rels, timings=timings, backend=backend)
+
+    def solve_batch(self, weights_batch: Sequence[WeightsLike],
+                    rounding: Optional[str] = "two_level",
+                    cfg: Optional[IRLSConfig] = None) -> List[SolveResult]:
+        """Solve MANY same-topology instances in one vmapped scanned program
+        — the batched serving path (segmentation frames, FlowImprove
+        populations).  One compile per batch length; rounding runs per
+        instance on host afterwards.
+        """
+        cfg = cfg or self.cfg
+        prob = self.problem
+        dtype = jnp.dtype(cfg.dtype)
+        t0 = time.perf_counter()
+        run = self._get_scanned(cfg, dtype, batched=True)
+        ws = [prob.check_weights(w) for w in weights_batch]
+        C = jnp.stack([jnp.asarray(w.c, dtype=dtype) for w in ws])
+        CS = jnp.stack([jnp.asarray(prob.to_reordered(w.c_s), dtype=dtype)
+                        for w in ws])
+        CT = jnp.stack([jnp.asarray(prob.to_reordered(w.c_t), dtype=dtype)
+                        for w in ws])
+        V, RELS = run(C, CS, CT)
+        V = np.asarray(V)
+        t_irls = time.perf_counter() - t0
+        out = []
+        for i, w in enumerate(ws):
+            v = prob.to_original(V[i])
+            cut = None
+            t1 = time.perf_counter()
+            if rounding is not None:
+                cut = rd.round_voltages(rounding, prob.instance_with(w), v)
+            out.append(SolveResult(
+                voltages=v, cut=cut, diagnostics=None,
+                residuals=np.asarray(RELS[i]),
+                timings={"irls": t_irls / len(ws),
+                         "rounding": time.perf_counter() - t1},
+                backend="scanned"))
+        return out
+
+    # -- backend drivers ------------------------------------------------------
+    def _plans_for(self, cfg: IRLSConfig):
+        block_plan = None
+        if cfg.precond == "block_jacobi":
+            # the partition is Problem-level state; a cfg asking for a
+            # different block count would silently run the wrong
+            # preconditioner, so refuse instead
+            if cfg.n_blocks != self.problem.n_blocks:
+                raise ValueError(
+                    f"cfg.n_blocks={cfg.n_blocks} does not match the "
+                    f"Problem's partition (n_blocks={self.problem.n_blocks}); "
+                    f"build the Problem with the matching n_blocks")
+            block_plan = self.problem.block_plan()
+        ell_plan = self.problem.ell_plan() if cfg.layout == "ell" else None
+        return block_plan, ell_plan
+
+    def _device_weights(self, weights, dtype):
+        """Weights → device (c, c_s, c_t) triple in the REORDERED frame."""
+        if weights is None:
+            return None
+        g = self.problem.device_graph(dtype, weights)
+        return (g.c, g.c_s, g.c_t)
+
+    def _solve_host(self, cfg, weights, warm_from, collect_voltages, timings):
+        prob = self.problem
+        dtype = jnp.dtype(cfg.dtype)
+        key = (cfg, "host")
+        stepper = self._steppers.get(key)
+        if stepper is None:
+            t = time.perf_counter()
+            block_plan, ell_plan = self._plans_for(cfg)
+            stepper = _Stepper(prob.device_graph(dtype), cfg, block_plan,
+                               ell_plan)
+            self._steppers[key] = stepper
+            timings["setup"] = time.perf_counter() - t
+        else:
+            timings["setup"] = 0.0
+        v0 = None
+        if warm_from is not None:
+            w = (warm_from.voltages if isinstance(warm_from, SolveResult)
+                 else warm_from)
+            v0 = prob.to_reordered(np.asarray(w))
+        v, diag = run_host_loop(stepper, cfg, prob.instance.n, dtype, v0=v0,
+                                collect_voltages=collect_voltages,
+                                weights=self._device_weights(weights, dtype))
+        diag.setup_time = timings["setup"]
+        return prob.to_original(np.asarray(v)), diag, None
+
+    def _get_scanned(self, cfg, dtype, batched: bool):
+        key = (cfg, "scanned", batched)
+        run = self._steppers.get(key)
+        if run is None:
+            block_plan, ell_plan = self._plans_for(cfg)
+            g0 = self.problem.device_graph(dtype)
+            raw = make_scanned_program(g0.src, g0.dst, cfg, block_plan,
+                                       ell_plan)
+            run = jax.jit(jax.vmap(raw) if batched else raw)
+            self._steppers[key] = run
+        return run
+
+    def _solve_scanned(self, cfg, weights, timings):
+        prob = self.problem
+        dtype = jnp.dtype(cfg.dtype)
+        t = time.perf_counter()
+        have = (cfg, "scanned", False) in self._steppers
+        run = self._get_scanned(cfg, dtype, batched=False)
+        timings["setup"] = 0.0 if have else time.perf_counter() - t
+        g = prob.device_graph(dtype, weights)
+        v, rels = run(g.c, g.c_s, g.c_t)
+        return prob.to_original(np.asarray(v)), None, np.asarray(rels)
+
+    def _solve_sharded(self, cfg, weights, timings):
+        from repro.distributed.solver import ShardedSolver
+
+        prob = self.problem
+        key = (cfg, "sharded", self.schedule)
+        solver = self._steppers.get(key)
+        if solver is None:
+            t = time.perf_counter()
+            labels = prob.labels if prob.n_blocks > 1 else None
+            solver = ShardedSolver(prob.instance_with(weights), cfg,
+                                   mesh=self.mesh, schedule=self.schedule,
+                                   labels=labels, precond_bs=self.precond_bs)
+            self._steppers[key] = solver
+            self._sharded_weights[key] = weights is not None
+            timings["setup"] = time.perf_counter() - t
+        elif weights is not None or self._sharded_weights.get(key):
+            # same compiled program, refreshed plan weight arrays.  Refill
+            # whenever an override is in play (never trust object identity —
+            # callers may mutate weight arrays in place) and once more when
+            # dropping back to the Problem's own weights.
+            t = time.perf_counter()
+            solver.update_weights(prob.instance_with(weights))
+            self._sharded_weights[key] = weights is not None
+            timings["setup"] = time.perf_counter() - t
+        else:
+            timings["setup"] = 0.0
+        v, rels = solver.solve()
+        return np.asarray(v), None, np.asarray(rels)

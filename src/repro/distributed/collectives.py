@@ -14,6 +14,31 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 SOLVER_AXIS = "shard"
 
 
+def shard_map(body, mesh: Mesh, in_specs, out_specs, axis_names=None):
+    """Version-portable ``shard_map``.
+
+    Newer JAX exposes ``jax.shard_map`` (with ``check_vma``/``axis_names``);
+    older releases only have ``jax.experimental.shard_map.shard_map`` (with
+    ``check_rep``/``auto``).  Replication checking is disabled in both — the
+    solver bodies mix replicated scalars and sharded arrays freely.
+    ``axis_names`` restricts manual mode to those axes (the pipeline's
+    pod-only shard_map); None means manual over the whole mesh.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": False}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {"check_rep": False}
+    if axis_names is not None:
+        # partial manual: leave the remaining mesh axes to the auto sharder
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
+
 def flat_mesh(devices=None) -> Mesh:
     """1-D mesh over all (given) devices with axis name 'shard'."""
     if devices is None:

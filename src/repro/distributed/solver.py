@@ -26,7 +26,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.irls import IRLSConfig
 from repro.core.pcg import pcg_fixed_iters
-from .collectives import SOLVER_AXIS, flat_mesh
+from .collectives import SOLVER_AXIS, flat_mesh, shard_map
 from .spmv import HaloPlan, build_halo_plan, build_psum_plan, \
     halo_exchange, make_halo_matvec, psum_matvec
 
@@ -158,12 +158,19 @@ class ShardedSolver:
         self.mesh = mesh if mesh is not None else flat_mesh()
         self.schedule = schedule
         self.p = int(np.prod(self.mesh.devices.shape))
+        self._labels = labels
+        self._precond_bs = precond_bs
         if plans is not None:
             if schedule == "halo":
                 self.plan, self.block_plan = plans
             else:
                 (self.plan,) = plans
         elif schedule == "halo":
+            if labels is None:
+                # partition here (not inside build_halo_plan) so the labels
+                # survive for same-topology plan refills (update_weights)
+                from repro.graphs import partition as gp
+                self._labels = labels = gp.partition_kway(instance.graph, self.p)
             self.plan = build_halo_plan(instance, self.p, labels=labels)
             self.block_plan = build_halo_block_plan(self.plan, precond_bs)
         elif schedule == "psum":
@@ -171,6 +178,30 @@ class ShardedSolver:
         else:
             raise ValueError(schedule)
         self._fn = self._build_halo() if schedule == "halo" else self._build_psum()
+
+    def update_weights(self, instance):
+        """Refill the plan's weight arrays for a SAME-TOPOLOGY instance.
+
+        The partition labels and the compiled SPMD program are reused — only
+        the host-side plan fill is redone (identical shapes, so the jit cache
+        hits).  The expensive phases (k-way partition, lowering, compile) are
+        skipped entirely; this is the session API's sharded serving path.
+        """
+        if self.schedule == "halo":
+            new_plan = build_halo_plan(instance, self.p, labels=self._labels)
+            if (new_plan.nl, new_plan.b_sh, new_plan.heads.shape) != \
+                    (self.plan.nl, self.plan.b_sh, self.plan.heads.shape):
+                raise ValueError("update_weights requires the same topology "
+                                 "(plan shapes changed)")
+            self.plan = new_plan
+            self.block_plan = build_halo_block_plan(new_plan, self._precond_bs)
+        else:
+            new_plan = build_psum_plan(instance, self.p)
+            if (new_plan.n_pad, new_plan.src.shape) != \
+                    (self.plan.n_pad, self.plan.src.shape):
+                raise ValueError("update_weights requires the same topology "
+                                 "(plan shapes changed)")
+            self.plan = new_plan
 
     # -- halo schedule --------------------------------------------------------
     def _build_halo(self):
@@ -263,10 +294,9 @@ class ShardedSolver:
             v, rels = jax.lax.scan(scan_step, v0, None, length=cfg.n_irls)
             return v[None], rels
 
-        fn = jax.shard_map(body, mesh=self.mesh,
-                           in_specs=(P(SOLVER_AXIS),) * 14,
-                           out_specs=(P(SOLVER_AXIS), P()),
-                           check_vma=False)
+        fn = shard_map(body, mesh=self.mesh,
+                       in_specs=(P(SOLVER_AXIS),) * 14,
+                       out_specs=(P(SOLVER_AXIS), P()))
         self._raw_body = fn
         return jax.jit(fn)
 
@@ -317,11 +347,10 @@ class ShardedSolver:
             v, rels = jax.lax.scan(scan_step, v, None, length=cfg.n_irls)
             return v, rels
 
-        fn = jax.shard_map(body, mesh=self.mesh,
-                           in_specs=(P(SOLVER_AXIS), P(SOLVER_AXIS),
-                                     P(SOLVER_AXIS), P(), P()),
-                           out_specs=(P(), P()),
-                           check_vma=False)
+        fn = shard_map(body, mesh=self.mesh,
+                       in_specs=(P(SOLVER_AXIS), P(SOLVER_AXIS),
+                                 P(SOLVER_AXIS), P(), P()),
+                       out_specs=(P(), P()))
         return jax.jit(fn)
 
     # -- execution --------------------------------------------------------------

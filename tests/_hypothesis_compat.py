@@ -1,0 +1,69 @@
+"""Make ``hypothesis`` optional for the tier-1 suite.
+
+When hypothesis is installed the real ``given``/``settings``/``strategies``
+are re-exported unchanged.  Without it (offline/minimal containers) a tiny
+deterministic fallback runs each property test on a fixed sample of the
+strategy's domain: the endpoints, a few evenly spaced interior points and a
+few seeded pseudo-random draws.  That keeps the properties exercised (and
+the suite collectable) at a fraction of hypothesis's coverage — install
+hypothesis for the real thing (see requirements.txt extras).
+
+Only the slice of the API the test suite uses is shimmed:
+``st.integers(lo, hi)``, ``@given(*strategies)`` over plain (non-fixture)
+arguments, and ``@settings(max_examples=..., deadline=...)``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal containers
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Integers:
+        def __init__(self, min_value: int, max_value: int):
+            self.lo = int(min_value)
+            self.hi = int(max_value)
+
+        def examples(self, k: int, rng: np.random.Generator):
+            span = self.hi - self.lo
+            pts = [self.lo, self.hi, self.lo + span // 2, self.lo + span // 3]
+            while len(pts) < k:
+                pts.append(int(rng.integers(self.lo, self.hi + 1)))
+            # dedupe, keep order, trim
+            seen, out = set(), []
+            for p in pts:
+                if p not in seen:
+                    seen.add(p)
+                    out.append(p)
+            return out[:k]
+
+    class st:  # noqa: N801 - mimics `strategies as st`
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: the wrapper must take no parameters, otherwise pytest
+            # reads the strategy arguments as fixtures
+            def wrapper():
+                k = getattr(wrapper, "_max_examples", None) or \
+                    getattr(fn, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(0)
+                samples = [s.examples(k, rng) for s in strategies]
+                for drawn in zip(*samples):
+                    fn(*drawn)
+            for attr in ("__module__", "__name__", "__qualname__", "__doc__"):
+                setattr(wrapper, attr, getattr(fn, attr))
+            return wrapper
+        return deco

@@ -1,7 +1,7 @@
 """Partitioner + graph substrate tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.graphs import generators as gen
 from repro.graphs import partition as gp

@@ -1,0 +1,185 @@
+"""Session API: backend parity, plan/stepper reuse, registries."""
+import numpy as np
+import pytest
+
+from repro.core import (IRLSConfig, MinCutSession, Problem, Weights,
+                        max_flow, pirmcut, solve, two_level)
+from repro.core import precond as pc
+from repro.core import rounding as rd
+
+
+CFG = IRLSConfig(n_irls=15, n_blocks=4, pcg_max_iters=80)
+
+
+def _weights_of(inst, scale=1.0):
+    return Weights(np.asarray(inst.graph.weight) * scale,
+                   np.asarray(inst.s_weight), np.asarray(inst.t_weight))
+
+
+# ---------------------------------------------------------------------------
+# parity: solve vs solve_scanned vs session backends
+# ---------------------------------------------------------------------------
+
+def test_solve_vs_scanned_voltage_objective_parity(grid_instance):
+    """Host driver and scanned driver agree on voltages and on the achieved
+    (fractional) objective for a fixed schedule on a small grid."""
+    from repro.core import solve_scanned
+    from repro.core.incidence import (device_graph_from_instance,
+                                      l1_objective)
+
+    # fixed schedule so the two drivers run the same numerics: host driver
+    # with tol=0 runs pcg to the iteration cap like the scanned one
+    cfg = IRLSConfig(n_irls=10, pcg_max_iters=40, pcg_tol=0.0,
+                     precond="jacobi")
+    v_host, _ = solve(grid_instance, cfg)
+    g = device_graph_from_instance(grid_instance)
+    v_scan, _ = solve_scanned(g, cfg)
+    v_scan = np.asarray(v_scan)
+    np.testing.assert_allclose(v_host, v_scan, atol=5e-5)
+    f_host = float(l1_objective(g, v_host))
+    f_scan = float(l1_objective(g, v_scan))
+    assert f_host == pytest.approx(f_scan, rel=1e-4)
+
+
+def test_session_backends_match_legacy_solve(grid_instance):
+    """Host and scanned session backends land within 1e-4 relative delta of
+    the legacy core.solve path's cut (the sharded backend is covered in
+    test_distributed.py — it needs a multi-device subprocess)."""
+    v_ref, _ = solve(grid_instance, CFG)
+    cut_ref = two_level(grid_instance, v_ref).cut_value
+
+    sess = MinCutSession(Problem.build(grid_instance, n_blocks=CFG.n_blocks),
+                         CFG)
+    for backend in ("host", "scanned"):
+        res = sess.solve(backend=backend)
+        assert res.cut_value == pytest.approx(cut_ref, rel=1e-4), backend
+
+
+def test_session_backends_match_legacy_solve_road(road_instance):
+    v_ref, _ = solve(road_instance, CFG)
+    cut_ref = two_level(road_instance, v_ref).cut_value
+    sess = MinCutSession(road_instance, CFG)
+    for backend in ("host", "scanned"):
+        res = sess.solve(backend=backend)
+        assert res.cut_value == pytest.approx(cut_ref, rel=1e-4), backend
+
+
+def test_pirmcut_wrapper_matches_session(grid_instance):
+    res, v, diag = pirmcut(grid_instance, CFG)
+    sess_res = MinCutSession(grid_instance, CFG).solve()
+    assert res.cut_value == pytest.approx(sess_res.cut_value, rel=1e-6)
+    np.testing.assert_allclose(v, sess_res.voltages, atol=1e-6)
+    assert diag.pcg_iters  # host diagnostics present
+
+
+# ---------------------------------------------------------------------------
+# plan / stepper reuse
+# ---------------------------------------------------------------------------
+
+def test_second_solve_skips_partition_and_plans(grid_instance, monkeypatch):
+    from repro.graphs import partition as gp
+
+    calls = {"kway": 0}
+    real = gp.partition_kway
+
+    def counting(*a, **kw):
+        calls["kway"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(gp, "partition_kway", counting)
+    prob = Problem.build(grid_instance, n_blocks=4)
+    assert calls["kway"] == 1
+    sess = MinCutSession(prob, CFG)
+    r1 = sess.solve()
+    r2 = sess.solve()
+    # partition ran exactly once (at Problem.build), never inside solve
+    assert calls["kway"] == 1
+    # one compiled stepper serves both solves; the second pays zero setup
+    assert len(sess._steppers) == 1
+    assert r1.timings["setup"] > 0.0
+    assert r2.timings["setup"] == 0.0
+    assert r1.cut_value == pytest.approx(r2.cut_value, rel=1e-9)
+    # and the steady-state solve is strictly cheaper than the cold one
+    assert r2.timings["total"] < r1.timings["total"]
+
+
+def test_weight_update_reuses_stepper(grid_instance):
+    sess = MinCutSession(grid_instance, CFG)
+    r1 = sess.solve()
+    w2 = _weights_of(grid_instance, scale=1.5)
+    r2 = sess.solve(weights=w2)
+    assert len(sess._steppers) == 1            # same compiled stepper
+    # scaling all internal edges by 1.5 changes the optimum
+    assert r2.cut_value != pytest.approx(r1.cut_value, rel=1e-6)
+    # cross-check against a from-scratch solve on the scaled instance
+    inst2 = sess.problem.instance_with(w2)
+    exact2 = max_flow(inst2).value
+    assert r2.cut_value == pytest.approx(exact2, rel=1e-3)
+
+
+def test_warm_from_previous_result(road_instance):
+    sess = MinCutSession(road_instance, CFG)
+    r1 = sess.solve()
+    r2 = sess.solve(warm_from=r1)
+    # warm continuation stays at the converged cut and spends (far) fewer
+    # PCG iterations than the cold solve
+    assert r2.cut_value == pytest.approx(r1.cut_value, rel=1e-4)
+    assert sum(r2.diagnostics.pcg_iters) <= sum(r1.diagnostics.pcg_iters)
+    with pytest.raises(ValueError):
+        sess.solve(warm_from=r1, backend="scanned")
+
+
+def test_solve_batch_matches_individual(grid_instance):
+    cfg = IRLSConfig(n_irls=10, n_blocks=4, pcg_max_iters=50)
+    sess = MinCutSession(grid_instance, cfg)
+    ws = [_weights_of(grid_instance, s) for s in (1.0, 1.3)]
+    batch = sess.solve_batch(ws, cfg=cfg)
+    assert len(batch) == 2
+    for w, res in zip(ws, batch):
+        single = sess.solve(weights=w, backend="scanned", cfg=cfg)
+        assert res.cut_value == pytest.approx(single.cut_value, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_precond_registry_complete():
+    for name in ("none", "jacobi", "block_jacobi", "chebyshev"):
+        assert name in pc.REGISTRY
+    with pytest.raises(ValueError, match="unknown preconditioner"):
+        pc.make_preconditioner("nope", None, None, None)
+
+
+def test_rounding_registry_pluggable(grid_instance):
+    assert set(rd.REGISTRY) >= {"sweep", "two_level"}
+    with pytest.raises(ValueError, match="unknown rounding"):
+        rd.round_voltages("nope", grid_instance, np.zeros(grid_instance.n))
+
+    @rd.register("_all_source")
+    def _all_source(instance, v):
+        ind = np.ones(instance.n, dtype=bool)
+        return rd.RoundingResult(ind, instance.cut_value(ind),
+                                 {"method": "_all_source"})
+
+    try:
+        res = MinCutSession(grid_instance, CFG).solve(rounding="_all_source")
+        assert res.cut.meta["method"] == "_all_source"
+    finally:
+        del rd.REGISTRY["_all_source"]
+
+
+def test_mismatched_n_blocks_rejected(grid_instance):
+    """A cfg asking for a different block count than the Problem's partition
+    must refuse instead of silently running the wrong preconditioner."""
+    sess = MinCutSession(Problem.build(grid_instance, n_blocks=4), CFG)
+    with pytest.raises(ValueError, match="n_blocks"):
+        sess.solve(cfg=IRLSConfig(n_irls=3, n_blocks=8))
+
+
+def test_unknown_backend_rejected(grid_instance):
+    with pytest.raises(ValueError, match="unknown backend"):
+        MinCutSession(grid_instance, CFG, backend="gpu-cluster")
+    sess = MinCutSession(grid_instance, CFG)
+    with pytest.raises(ValueError, match="unknown backend"):
+        sess.solve(backend="nope")
