@@ -1,17 +1,22 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness — one module per paper table/figure (+ serving).
 
   PYTHONPATH=src python -m benchmarks.run           # all
-  PYTHONPATH=src python -m benchmarks.run fig1 table3
+  PYTHONPATH=src python -m benchmarks.run fig1 table3 serve
 
-Prints ``name,us_per_call,derived`` CSV (one row per benchmark) and writes
-full JSON payloads to experiments/bench/.
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark), writes
+full JSON payloads to experiments/bench/, and records each row as a
+repo-root ``BENCH_<name>.json`` (deliberately timestamp-free so the files
+are diffable commit to commit — the cross-PR perf trajectory).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
 
-from . import phases, polarization, quality, roofline, scaling, speedup, warm_start
+from . import (phases, polarization, quality, roofline, scaling, serve,
+               speedup, warm_start)
 
 BENCHES = {
     "fig1": warm_start.run,
@@ -21,7 +26,26 @@ BENCHES = {
     "table3": speedup.run,
     "table4": quality.run,
     "roofline": roofline.run,
+    "serve": serve.run,
 }
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_NON_TRAJECTORY_KEYS = ("timestamp", "date", "time")
+
+
+def write_root_payload(row: dict, root: str = REPO_ROOT) -> str:
+    """Write one benchmark row as repo-root ``BENCH_<name>.json``.
+
+    Everything the bench returned goes in, minus wall-clock timestamps, so
+    diffs between commits show only measurement changes (the timing fields
+    themselves still vary run to run, like any measurement).
+    """
+    payload = {k: v for k, v in row.items() if k not in _NON_TRAJECTORY_KEYS}
+    path = os.path.join(root, f"BENCH_{row['name']}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -33,6 +57,7 @@ def main() -> None:
             row = BENCHES[n]()
             print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"",
                   flush=True)
+            write_root_payload(row)
         except Exception as e:  # pragma: no cover
             failed.append(n)
             traceback.print_exc()

@@ -1,0 +1,97 @@
+"""Serving engine benchmark: offered load vs latency/throughput.
+
+Replays Poisson multi-tenant traffic (mixed grid/road topologies, random-
+walk weight sequences — the ``repro.launch.mincut_serve`` workload) against
+a ``MinCutServer`` at several offered loads, after a warmup pass that
+absorbs session build + bucket compiles.  Reports solves/sec and p50/p99
+end-to-end latency per load point — the saturation curve a capacity plan
+reads off — plus the batch-size distribution the micro-batcher achieved.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import save_json
+
+BENCH_NAME = "serve"
+
+
+def _weights(inst, scale):
+    from repro.core import Weights
+    return Weights(np.asarray(inst.graph.weight) * scale,
+                   np.asarray(inst.s_weight), np.asarray(inst.t_weight))
+
+
+def _replay(server, instances, keys, n_requests, rate, drift, rng):
+    """Submit Poisson traffic; returns (futures, wall seconds)."""
+    scales = np.ones(len(keys))
+    futures = []
+    t0 = time.perf_counter()
+    for _ in range(n_requests):
+        tenant = int(rng.integers(len(keys)))
+        scales[tenant] *= float(np.exp(rng.normal(0.0, drift)))
+        futures.append(server.submit(keys[tenant],
+                                     _weights(instances[tenant],
+                                              scales[tenant])))
+        time.sleep(float(rng.exponential(1.0 / rate)))
+    for f in futures:
+        f.result(timeout=600.0)
+    return futures, time.perf_counter() - t0
+
+
+def run(side=10, n_topos=2, n_requests=32, rates=(50.0, 400.0),
+        n_irls=10, pcg_iters=30, max_batch=8, max_wait_ms=5.0, seed=0):
+    from repro.core import IRLSConfig
+    from repro.launch.mincut_serve import build_topologies
+    from repro.serve import MinCutServer, ServeMetrics
+
+    instances = build_topologies(n_topos, side, seed)
+    cfg = IRLSConfig(n_irls=n_irls, pcg_max_iters=pcg_iters,
+                     precond="jacobi", n_blocks=1)
+    rng = np.random.default_rng(seed)
+    points = []
+    with MinCutServer(cfg=cfg, capacity=n_topos + 1, max_batch=max_batch,
+                      max_wait_ms=max_wait_ms, seed=seed) as server:
+        keys = [server.register(inst) for inst in instances]
+        # warmup: builds every session and compiles the common buckets
+        _replay(server, instances, keys, max(2 * max_batch, 8),
+                max(rates), 0.0, rng)
+        for rate in rates:
+            server.metrics = ServeMetrics()       # fresh window per load
+            _, wall = _replay(server, instances, keys, n_requests, rate,
+                              0.05, rng)
+            s = server.metrics.snapshot()
+            points.append({
+                "offered_rate": float(rate),
+                "solves_per_sec": n_requests / wall,
+                "p50_ms": s["total_p50_ms"], "p99_ms": s["total_p99_ms"],
+                "queue_p50_ms": s["queue_p50_ms"],
+                "irls_p50_ms": s["irls_p50_ms"],
+                "rounding_p50_ms": s["rounding_p50_ms"],
+                "mean_batch_size": s["mean_batch_size"],
+                "batches": s["batches"],
+            })
+        cache_stats = server.cache.stats.snapshot()
+
+    peak = max(points, key=lambda p: p["solves_per_sec"])
+    payload = {
+        "side": side, "n_topos": n_topos, "n_requests": n_requests,
+        "cfg": {"n_irls": n_irls, "pcg_max_iters": pcg_iters},
+        "max_batch": max_batch, "max_wait_ms": max_wait_ms,
+        "load_points": points, "cache": cache_stats,
+    }
+    save_json("serve", payload)
+    return {
+        "name": BENCH_NAME,
+        "us_per_call": 1e6 / max(peak["solves_per_sec"], 1e-9),
+        "derived": f"peak {peak['solves_per_sec']:.1f} solves/s @ "
+                   f"{peak['offered_rate']:.0f} req/s offered; "
+                   f"p50={peak['p50_ms']:.1f}ms p99={peak['p99_ms']:.1f}ms "
+                   f"mean_batch={peak['mean_batch_size']:.1f}",
+        "solves_per_sec": peak["solves_per_sec"],
+        "p50_ms": peak["p50_ms"],
+        "p99_ms": peak["p99_ms"],
+        "load_points": points,
+    }

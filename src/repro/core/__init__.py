@@ -15,7 +15,8 @@ from .incidence import DeviceGraph, device_graph_from_instance
 from .irls import IRLSConfig, IRLSDiagnostics, solve, solve_scanned
 from .maxflow import MaxFlowResult, max_flow, min_cut_indicator, min_cut_value
 from .rounding import RoundingResult, round_voltages, sweep_cut, two_level
-from .session import MinCutSession, Problem, SolveResult, Weights, as_weights
+from .session import (MinCutSession, Problem, SolveResult, Weights,
+                      as_weights, topology_fingerprint)
 from .cheeger import CheegerEstimate, cheeger_lambda2, phi_of_cut
 
 

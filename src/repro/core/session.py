@@ -34,6 +34,7 @@ See docs/API.md for the full reference.
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from typing import Dict, List, NamedTuple, Optional, Sequence, Union
 
@@ -67,6 +68,35 @@ class Weights(NamedTuple):
 
 
 WeightsLike = Union["Weights", STInstance, tuple]
+
+
+def check_weights_for(instance: STInstance, weights: WeightsLike) -> Weights:
+    """Coerce + validate a weight assignment against ``instance``'s topology
+    (shape check only — no Problem needs to be built)."""
+    w = as_weights(weights)
+    n, m = instance.n, instance.graph.m
+    if (w.c.shape[0], w.c_s.shape[0], w.c_t.shape[0]) != (m, n, n):
+        raise ValueError(
+            f"weights do not match the topology: got "
+            f"c[{w.c.shape[0]}], c_s[{w.c_s.shape[0]}], "
+            f"c_t[{w.c_t.shape[0]}]; expected c[{m}], c_s[{n}], c_t[{n}]")
+    return w
+
+
+def topology_fingerprint(instance: STInstance) -> str:
+    """Content hash of the graph TOPOLOGY (n + oriented edge list).
+
+    Weights are deliberately excluded: two instances that differ only in
+    edge/terminal weights share a fingerprint, and therefore share every
+    topology-level artifact (partition, plans, compiled steppers).  This is
+    the cache key of the serving layer (``repro.serve``).
+    """
+    g = instance.graph
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(g.n).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(g.src, dtype=np.int64)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(g.dst, dtype=np.int64)).tobytes())
+    return h.hexdigest()
 
 
 def as_weights(w: WeightsLike) -> Weights:
@@ -104,6 +134,15 @@ class Problem:
         self._graphs: Dict[str, DeviceGraph] = {}
         self._block_plan = None
         self._ell_plan = None
+        self._fingerprint: Optional[str] = None
+
+    @property
+    def fingerprint(self) -> str:
+        """Topology content hash (see ``topology_fingerprint``); weights and
+        the partition do not contribute."""
+        if self._fingerprint is None:
+            self._fingerprint = topology_fingerprint(self.instance)
+        return self._fingerprint
 
     @classmethod
     def build(cls, instance: STInstance, n_blocks: int = 16,
@@ -144,14 +183,7 @@ class Problem:
 
     def check_weights(self, weights: WeightsLike) -> Weights:
         """Coerce + validate a weight override against this topology."""
-        w = as_weights(weights)
-        n, m = self.instance.n, self.instance.graph.m
-        if (w.c.shape[0], w.c_s.shape[0], w.c_t.shape[0]) != (m, n, n):
-            raise ValueError(
-                f"weights do not match the Problem topology: got "
-                f"c[{w.c.shape[0]}], c_s[{w.c_s.shape[0]}], "
-                f"c_t[{w.c_t.shape[0]}]; expected c[{m}], c_s[{n}], c_t[{n}]")
-        return w
+        return check_weights_for(self.instance, weights)
 
     # -- cached plans ---------------------------------------------------------
     def device_graph(self, dtype=jnp.float32,
@@ -292,23 +324,41 @@ class MinCutSession:
 
     def solve_batch(self, weights_batch: Sequence[WeightsLike],
                     rounding: Optional[str] = "two_level",
-                    cfg: Optional[IRLSConfig] = None) -> List[SolveResult]:
+                    cfg: Optional[IRLSConfig] = None,
+                    pad_to: Optional[int] = None) -> List[SolveResult]:
         """Solve MANY same-topology instances in one vmapped scanned program
         — the batched serving path (segmentation frames, FlowImprove
         populations).  One compile per batch length; rounding runs per
         instance on host afterwards.
+
+        ``pad_to`` pads the batch up to that length by repeating the last
+        weight vector, so callers can quantize batch lengths into a bounded
+        set of buckets (the micro-batcher uses powers of two) and the
+        per-batch-length compile cache stays bounded too.  Only the real
+        (unpadded) results are returned.
         """
+        ws = [self.problem.check_weights(w) for w in weights_batch]
+        if not ws:
+            # empty batch: nothing to stack, nothing to compile
+            return []
         cfg = cfg or self.cfg
         prob = self.problem
         dtype = jnp.dtype(cfg.dtype)
         t0 = time.perf_counter()
         run = self._get_scanned(cfg, dtype, batched=True)
-        ws = [prob.check_weights(w) for w in weights_batch]
-        C = jnp.stack([jnp.asarray(w.c, dtype=dtype) for w in ws])
+        n_real = len(ws)
+        if pad_to is not None:
+            if pad_to < n_real:
+                raise ValueError(
+                    f"pad_to={pad_to} is smaller than the batch ({n_real})")
+            ws_run = ws + [ws[-1]] * (pad_to - n_real)
+        else:
+            ws_run = ws
+        C = jnp.stack([jnp.asarray(w.c, dtype=dtype) for w in ws_run])
         CS = jnp.stack([jnp.asarray(prob.to_reordered(w.c_s), dtype=dtype)
-                        for w in ws])
+                        for w in ws_run])
         CT = jnp.stack([jnp.asarray(prob.to_reordered(w.c_t), dtype=dtype)
-                        for w in ws])
+                        for w in ws_run])
         V, RELS = run(C, CS, CT)
         V = np.asarray(V)
         t_irls = time.perf_counter() - t0

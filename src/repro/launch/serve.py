@@ -1,83 +1,21 @@
-"""Batched LM serving driver: prefill a batch of prompts, then decode.
+"""DEPRECATED — moved to ``repro.launch.lm_serve``.
 
-The serving counterpart of launch/train.py — the same code path the
-``prefill_32k`` / ``decode_32k`` dry-run cells lower, executed for real on
-this host with a reduced config:
-
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \\
-      --batch 4 --prompt-len 64 --gen 32
-
-Reports prefill latency and steady-state decode throughput, and greedy-
-decodes from the synthetic token stream (the tokens are synthetic, so the
-"text" is ids — the plumbing is what's demonstrated: batched requests, KV
-cache reuse, cache donation between steps).
+This module is the LM (transformer) serving driver; it was renamed so the
+min-cut serving engine's driver (``repro.launch.mincut_serve``) is
+unambiguous.  Importing or running this shim forwards to
+``repro.launch.lm_serve`` with a DeprecationWarning.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
+from .lm_serve import main  # noqa: F401  (re-export)
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    import jax
-    import jax.numpy as jnp
-    from repro.configs import registry
-    from repro.data.lm import token_batch
-    from repro.models import transformer as tr
-
-    entry = registry.get(args.arch)
-    assert entry.family == "lm", "serving driver is for LM archs"
-    cfg = entry.make_reduced() if args.reduced else entry.make_config()
-    print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params (reduced)"
-          if args.reduced else f"model {cfg.name}")
-
-    params = tr.init_params(cfg, jax.random.PRNGKey(args.seed))
-    B, P, N = args.batch, args.prompt_len, args.gen
-    prompts = jnp.asarray(token_batch(cfg.vocab, B, P, seed=args.seed))
-
-    # prefill reserves cache capacity for the generated continuation
-    @jax.jit
-    def prefill_fn(p, toks):
-        return tr.prefill(p, toks, cfg, pad_cache_to=P + N)
-
-    decode_fn = jax.jit(
-        lambda p, c, t, i: tr.decode_step(p, c, t, i, cfg),
-        donate_argnums=(1,))
-
-    t0 = time.perf_counter()
-    logits, cache = prefill_fn(params, prompts)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-    # greedy decode
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    outs = [tok]
-    t1 = time.perf_counter()
-    for step in range(N - 1):
-        pos = jnp.asarray(P + step, jnp.int32)
-        logits, cache = decode_fn(params, cache, tok, pos)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        outs.append(tok)
-    tok.block_until_ready()
-    t_decode = time.perf_counter() - t1
-
-    gen = jnp.stack(outs, axis=1)
-    print(f"prefill: {B}x{P} tokens in {t_prefill*1e3:.0f} ms "
-          f"({B*P/t_prefill/1e3:.1f}k tok/s incl. compile)")
-    print(f"decode : {N-1} steps in {t_decode*1e3:.0f} ms "
-          f"({B*(N-1)/max(t_decode,1e-9):.0f} tok/s, batch {B})")
-    for b in range(min(B, 2)):
-        print(f"req{b}: prompt[-8:]={prompts[b,-8:].tolist()} "
-              f"→ gen[:12]={gen[b,:12].tolist()}")
-
+warnings.warn(
+    "repro.launch.serve has moved: use `python -m repro.launch.lm_serve` "
+    "for LM serving, or `python -m repro.launch.mincut_serve` for the "
+    "min-cut serving engine",
+    DeprecationWarning, stacklevel=2)
 
 if __name__ == "__main__":
     main()

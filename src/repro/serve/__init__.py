@@ -1,0 +1,24 @@
+"""Min-cut serving engine: micro-batched request queue over a session cache.
+
+The layer between the solver core (``repro.core``) and traffic:
+
+    MinCutServer      — async ``submit(topology, weights) -> Future``
+                        front-end (engine.py)
+    MicroBatcher      — groups pending requests by topology fingerprint,
+                        pads to power-of-two buckets, flushes on
+                        max-batch / max-wait-ms triggers (batcher.py)
+    SessionCache      — LRU of built ``Problem``/``MinCutSession`` pairs
+                        keyed on topology content hash, with eviction
+                        stats (cache.py)
+    ServeMetrics      — per-request latency percentiles with a
+                        queue/irls/rounding breakdown, throughput
+                        counters, text dump (metrics.py)
+    ServerOverloaded  — admission-control rejection (backpressure)
+
+Traffic driver: ``python -m repro.launch.mincut_serve``.  Reference:
+docs/API.md "Serving".
+"""
+from .batcher import MicroBatch, MicroBatcher, bucket_size
+from .cache import AdmissionController, CacheStats, ServerOverloaded, SessionCache
+from .engine import MinCutServer
+from .metrics import ServeMetrics, percentile

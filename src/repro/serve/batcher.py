@@ -1,0 +1,99 @@
+"""Micro-batcher: group pending requests, pad to power-of-two buckets.
+
+The scanned backend compiles one vmapped program PER BATCH LENGTH, so an
+engine that flushed whatever happened to be pending would recompile on every
+new length it sees.  The batcher bounds that: a flush of k requests is
+padded (by ``MinCutSession.solve_batch(pad_to=...)``) up to
+``bucket_size(k)`` — the next power of two, capped at ``max_batch`` — so
+the compile cache holds at most ``log2(max_batch) + 1`` programs per
+``(topology, cfg)`` group.
+
+Grouping key is caller-defined (the engine uses
+``(topology_fingerprint, cfg, rounding)`` — only requests that can legally
+share one vmapped program batch together).  Flush policy per group:
+
+* size trigger — ``max_batch`` pending requests flush immediately;
+* deadline trigger — the OLDEST pending request never waits more than
+  ``max_wait_ms`` beyond its arrival before its group flushes.
+
+The batcher is a pure data structure driven by explicit ``now`` timestamps;
+the engine's worker thread owns the clock.  That keeps it deterministic and
+directly unit-testable.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, Hashable, List, NamedTuple, Optional, Tuple
+
+
+def bucket_size(k: int, max_batch: int) -> int:
+    """Next power of two ≥ k, capped at ``max_batch``."""
+    if k < 1:
+        raise ValueError(f"batch of {k} requests cannot be bucketed")
+    b = 1
+    while b < k:
+        b <<= 1
+    return min(b, max_batch)
+
+
+class MicroBatch(NamedTuple):
+    """One flushed group: execute ``requests`` padded up to ``bucket``."""
+
+    key: Hashable
+    requests: List[Any]
+    bucket: int
+
+
+class MicroBatcher:
+    """Deadline/size-triggered request grouper (see module docstring)."""
+
+    def __init__(self, max_batch: int = 8, max_wait_ms: float = 2.0):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        # group key -> list of (request, arrival time); insertion-ordered so
+        # deadline scans see oldest groups first
+        self._groups: "OrderedDict[Hashable, List[Tuple[Any, float]]]" = \
+            OrderedDict()
+
+    @property
+    def pending(self) -> int:
+        return sum(len(g) for g in self._groups.values())
+
+    def add(self, key: Hashable, request: Any, now: float) -> None:
+        self._groups.setdefault(key, []).append((request, now))
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest time any group must flush, or None when empty."""
+        oldest = [g[0][1] for g in self._groups.values() if g]
+        return min(oldest) + self.max_wait_s if oldest else None
+
+    def _take(self, key: Hashable, k: int) -> MicroBatch:
+        group = self._groups[key]
+        chunk = [r for r, _ in group[:k]]
+        del group[:k]
+        if not group:
+            del self._groups[key]
+        return MicroBatch(key=key, requests=chunk,
+                          bucket=bucket_size(len(chunk), self.max_batch))
+
+    def ready(self, now: float) -> List[MicroBatch]:
+        """Flush every group that hit its size or deadline trigger."""
+        out: List[MicroBatch] = []
+        for key in list(self._groups):
+            while key in self._groups and \
+                    len(self._groups[key]) >= self.max_batch:
+                out.append(self._take(key, self.max_batch))
+            if key in self._groups and \
+                    now - self._groups[key][0][1] >= self.max_wait_s:
+                out.append(self._take(key, self.max_batch))
+        return out
+
+    def flush_all(self) -> List[MicroBatch]:
+        """Drain everything regardless of deadlines (engine shutdown)."""
+        out: List[MicroBatch] = []
+        for key in list(self._groups):
+            while key in self._groups:
+                out.append(self._take(key, self.max_batch))
+        return out

@@ -1,0 +1,142 @@
+"""Topology/session cache + admission control for the serving engine.
+
+Two bounded resources sit between ``MinCutServer.submit`` and the solver:
+
+* ``SessionCache`` — an LRU of built ``(Problem, MinCutSession)`` pairs
+  keyed on the topology content hash (``core.session.topology_fingerprint``).
+  The expensive per-topology state (k-way partition, plans, compiled
+  steppers) is what gets evicted; the raw registered instances are kept in a
+  side registry (cheap: plain numpy arrays) so an evicted topology can be
+  rebuilt on the next request — at rebuild cost, which the stats make
+  visible (``hits`` / ``misses`` / ``evictions`` / ``rebuilds``).
+* ``AdmissionController`` — backpressure: a hard cap on requests in flight
+  (submitted, not yet completed).  ``submit`` beyond the cap raises
+  ``ServerOverloaded`` instead of letting the queue grow without bound.
+
+Both are thread-safe: ``submit`` runs on caller threads while the engine's
+worker thread executes batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.session import MinCutSession, topology_fingerprint
+from repro.graphs.structures import STInstance
+
+
+class ServerOverloaded(RuntimeError):
+    """Raised by ``submit`` when admission control rejects a request."""
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0        # builds: first-ever + rebuilds after eviction
+    rebuilds: int = 0      # misses on a key that was previously cached
+    evictions: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class SessionCache:
+    """LRU cache of ``MinCutSession`` objects keyed on topology fingerprint.
+
+    ``build`` is the factory the engine supplies (instance → session); the
+    cache owns lifetimes and stats, not policy.
+    """
+
+    def __init__(self, capacity: int,
+                 build: Callable[[STInstance], MinCutSession]):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._build = build
+        self._instances: Dict[str, STInstance] = {}    # never evicted
+        self._sessions: "OrderedDict[str, MinCutSession]" = OrderedDict()
+        self._ever_cached: set = set()
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+
+    def register(self, instance: STInstance) -> str:
+        """Fingerprint + remember an instance; returns the topology key."""
+        key = topology_fingerprint(instance)
+        with self._lock:
+            self._instances.setdefault(key, instance)
+        return key
+
+    def known(self, key: str) -> bool:
+        with self._lock:
+            return key in self._instances
+
+    def instance(self, key: str) -> STInstance:
+        with self._lock:
+            inst = self._instances.get(key)
+        if inst is None:
+            raise KeyError(f"unknown topology key {key!r}; register the "
+                           f"instance (or submit it directly) first")
+        return inst
+
+    def get(self, key: str) -> MinCutSession:
+        """Session for ``key``, building (and possibly evicting) on miss."""
+        with self._lock:
+            sess = self._sessions.get(key)
+            if sess is not None:
+                self.stats.hits += 1
+                self._sessions.move_to_end(key)
+                return sess
+            inst = self._instances.get(key)
+            if inst is None:
+                raise KeyError(f"unknown topology key {key!r}; register the "
+                               f"instance (or submit it directly) first")
+            self.stats.misses += 1
+            if key in self._ever_cached:
+                self.stats.rebuilds += 1
+        # build OUTSIDE the lock: partition + compile can take seconds and
+        # must not block submitters.  Only the worker thread builds, so a
+        # duplicate concurrent build cannot happen.
+        sess = self._build(inst)
+        with self._lock:
+            self._sessions[key] = sess
+            self._sessions.move_to_end(key)
+            self._ever_cached.add(key)
+            while len(self._sessions) > self.capacity:
+                self._sessions.popitem(last=False)
+                self.stats.evictions += 1
+        return sess
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._sessions)
+
+    def cached_keys(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(self._sessions)
+
+
+class AdmissionController:
+    """In-flight request cap (submitted − completed ≤ ``max_queue``)."""
+
+    def __init__(self, max_queue: int):
+        self.max_queue = int(max_queue)
+        self._in_flight = 0
+        self._lock = threading.Lock()
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._in_flight
+
+    def try_admit(self) -> bool:
+        with self._lock:
+            if self._in_flight >= self.max_queue:
+                return False
+            self._in_flight += 1
+            return True
+
+    def release(self) -> None:
+        with self._lock:
+            self._in_flight -= 1

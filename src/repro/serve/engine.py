@@ -1,0 +1,248 @@
+"""``MinCutServer`` — async request front-end over the session API.
+
+The serving pipeline (one background worker thread):
+
+  submit(topo, weights) ──► admission control ──► inbox queue
+                                                     │ worker drains
+                                                     ▼
+                         MicroBatcher groups by (topology, cfg, rounding),
+                         flushes on max-batch / max-wait-ms triggers
+                                                     │ MicroBatch
+                                                     ▼
+                         SessionCache LRU  ──►  MinCutSession.solve_batch
+                         (Problem + compiled      (one vmapped scanned
+                          steppers per topology)   program, pow2-padded)
+                                                     │ SolveResults
+                                                     ▼
+                         futures resolve; ServeMetrics records the
+                         queue/irls/rounding/total breakdown
+
+``submit`` is non-blocking and thread-safe; it returns a
+``concurrent.futures.Future[SolveResult]``.  Topologies are identified by
+content hash (``topology_fingerprint``) — submit an ``STInstance`` directly
+(registered on first sight) or pre-``register`` it and pass the key.
+
+Requests may override ``cfg``/``rounding`` per call; only requests with
+identical ``(topology, cfg, rounding)`` share a batch, so an override can
+never change another request's numerics.  Malformed weights are rejected
+synchronously at ``submit`` (shape-checked against the registered
+topology), so one request can never poison its co-batched neighbours;
+errors raised during batch execution (e.g. a cfg whose partition geometry
+doesn't match the server's) land on every future of that batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Union
+
+from repro.core.irls import IRLSConfig
+from repro.core.session import (MinCutSession, Problem, SolveResult, Weights,
+                                check_weights_for)
+from repro.graphs.structures import STInstance
+
+from .batcher import MicroBatch, MicroBatcher
+from .cache import AdmissionController, ServerOverloaded, SessionCache
+from .metrics import ServeMetrics
+
+_DEFAULT = object()      # "use the server default" sentinel (None = skip)
+
+
+@dataclasses.dataclass
+class _Request:
+    topo_key: str
+    weights: Weights
+    cfg: IRLSConfig
+    rounding: Optional[str]
+    future: Future
+    t_submit: float
+
+    @property
+    def group_key(self):
+        return (self.topo_key, self.cfg, self.rounding)
+
+
+class MinCutServer:
+    """Micro-batched min-cut serving engine (see module docstring).
+
+    cfg         — default solver config (per-request override via submit)
+    capacity    — LRU capacity of the Problem/session cache (topologies)
+    max_batch   — flush trigger + padding cap; one micro-batch never
+                  exceeds this many requests
+    max_wait_ms — deadline trigger: max batcher residency of the oldest
+                  pending request
+    max_queue   — admission cap on in-flight requests (backpressure)
+    rounding    — default rounding registry name (None = voltages only)
+    """
+
+    def __init__(self, cfg: IRLSConfig = IRLSConfig(n_irls=20, n_blocks=1,
+                                                    precond="jacobi"),
+                 capacity: int = 8, max_batch: int = 8,
+                 max_wait_ms: float = 2.0, max_queue: int = 256,
+                 rounding: Optional[str] = "two_level", seed: int = 0):
+        self.cfg = cfg
+        self.rounding = rounding
+        self.seed = seed
+        self.metrics = ServeMetrics()
+        self.cache = SessionCache(capacity, self._build_session)
+        self.admission = AdmissionController(max_queue)
+        self._batcher = MicroBatcher(max_batch=max_batch,
+                                     max_wait_ms=max_wait_ms)
+        self._inbox: "queue.Queue[_Request]" = queue.Queue()
+        self._stop_event = threading.Event()
+        # makes the stopped-check + enqueue atomic against stop(): without
+        # it a request put between the worker's final drain and its exit
+        # would be accepted but never resolve
+        self._submit_lock = threading.Lock()
+        self._stopped = False
+        self._worker = threading.Thread(target=self._loop,
+                                        name="mincut-serve-worker",
+                                        daemon=True)
+        self._worker.start()
+
+    # -- public API -----------------------------------------------------------
+    def register(self, instance: STInstance) -> str:
+        """Register a topology; returns its content-hash key."""
+        return self.cache.register(instance)
+
+    def submit(self, topo: Union[str, STInstance], weights,
+               cfg: Optional[IRLSConfig] = None,
+               rounding=_DEFAULT) -> "Future[SolveResult]":
+        """Enqueue one solve; returns a future resolving to a SolveResult.
+
+        ``topo`` — a key from ``register`` or an ``STInstance`` (registered
+        on the fly).  ``weights`` — anything ``as_weights`` accepts, in
+        ORIGINAL node/edge order for that topology.  Shape mismatches are
+        rejected here, synchronously — a malformed request must never reach
+        a batch where it would poison its co-batched neighbours.
+        """
+        if isinstance(topo, str):
+            if not self.cache.known(topo):
+                raise KeyError(f"unknown topology key {topo!r}; register() "
+                               f"its instance first")
+            key = topo
+        else:
+            key = self.register(topo)
+        w = check_weights_for(self.cache.instance(key), weights)
+        if not self.admission.try_admit():
+            self.metrics.record_reject()
+            raise ServerOverloaded(
+                f"{self.admission.max_queue} requests already in flight")
+        now = time.perf_counter()
+        req = _Request(topo_key=key, weights=w,
+                       cfg=cfg or self.cfg,
+                       rounding=self.rounding if rounding is _DEFAULT
+                       else rounding,
+                       future=Future(), t_submit=now)
+        with self._submit_lock:
+            if self._stopped or self._stop_event.is_set():
+                self.admission.release()
+                raise RuntimeError("MinCutServer is stopped")
+            self.metrics.record_submit(now)
+            self._inbox.put(req)
+        return req.future
+
+    def solve_many(self, topo, weights_list, timeout: Optional[float] = None
+                   ) -> List[SolveResult]:
+        """Convenience: submit a burst and wait for all results in order."""
+        futures = [self.submit(topo, w) for w in weights_list]
+        return [f.result(timeout=timeout) for f in futures]
+
+    def stats(self) -> Dict[str, object]:
+        out = self.metrics.snapshot()
+        out["cache"] = self.cache.stats.snapshot()
+        out["in_flight"] = self.admission.in_flight
+        return out
+
+    def stop(self, wait: bool = True) -> None:
+        """Drain pending requests, then stop the worker.  Idempotent."""
+        with self._submit_lock:
+            self._stop_event.set()
+        if wait and self._worker.is_alive():
+            self._worker.join()
+        self._stopped = True
+
+    def __enter__(self) -> "MinCutServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- worker ----------------------------------------------------------------
+    def _build_session(self, instance: STInstance) -> MinCutSession:
+        n_blocks = (self.cfg.n_blocks if self.cfg.precond == "block_jacobi"
+                    else 1)
+        prob = Problem.build(instance, n_blocks=n_blocks, seed=self.seed)
+        return MinCutSession(prob, self.cfg, backend="scanned")
+
+    def _poll_timeout(self) -> float:
+        deadline = self._batcher.next_deadline()
+        if deadline is None:
+            return 0.05
+        return max(0.0, min(deadline - time.perf_counter(), 0.05))
+
+    def _drain_inbox(self, timeout: float) -> int:
+        got = 0
+        try:
+            if timeout > 0:
+                req = self._inbox.get(timeout=timeout)
+            else:
+                req = self._inbox.get_nowait()
+            while True:
+                self._batcher.add(req.group_key, req, time.perf_counter())
+                got += 1
+                req = self._inbox.get_nowait()
+        except queue.Empty:
+            pass
+        return got
+
+    def _loop(self) -> None:
+        while True:
+            stopping = self._stop_event.is_set()
+            self._drain_inbox(0.0 if stopping else self._poll_timeout())
+            for batch in self._batcher.ready(time.perf_counter()):
+                self._execute(batch)
+            if stopping and self._inbox.empty():
+                for batch in self._batcher.flush_all():
+                    self._execute(batch)
+                if self._inbox.empty():
+                    return
+
+    def _execute(self, batch: MicroBatch) -> None:
+        reqs: List[_Request] = batch.requests
+        topo_key, cfg, rounding = batch.key
+        t_exec = time.perf_counter()
+        try:
+            sess = self.cache.get(topo_key)
+            results = sess.solve_batch([r.weights for r in reqs],
+                                       rounding=rounding, cfg=cfg,
+                                       pad_to=batch.bucket)
+        except Exception as e:
+            now = time.perf_counter()
+            for r in reqs:
+                self.admission.release()
+                # set_running_or_notify_cancel returns False for a future
+                # the caller already cancelled — resolving it would raise
+                # InvalidStateError and kill the worker thread
+                if r.future.set_running_or_notify_cancel():
+                    self.metrics.record_request({}, now, failed=True)
+                    r.future.set_exception(e)
+                else:
+                    self.metrics.record_cancelled()
+            return
+        self.metrics.record_batch(len(reqs), batch.bucket)
+        now = time.perf_counter()
+        for r, res in zip(reqs, results):
+            self.admission.release()
+            if not r.future.set_running_or_notify_cancel():
+                self.metrics.record_cancelled()
+                continue
+            timings = dict(res.timings)
+            timings["queue"] = t_exec - r.t_submit
+            timings["total"] = now - r.t_submit
+            res = res._replace(timings=timings)
+            self.metrics.record_request(timings, now)
+            r.future.set_result(res)

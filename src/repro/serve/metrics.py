@@ -1,0 +1,143 @@
+"""Serving metrics: per-request latency breakdown, throughput, batch shapes.
+
+Per completed request the engine records a phase breakdown (seconds):
+
+  queue    — submit → batch execution start (micro-batcher residency)
+  irls     — per-request share of the vmapped scanned program
+  rounding — host rounding of this request's voltages
+  total    — submit → future resolution
+
+``percentile`` / ``snapshot`` reduce those samples to p50/p90/p99 (reported
+in ms), plus throughput (completed solves/sec over the active window),
+counter totals and the observed batch-size distribution.  ``dump`` renders
+the text report the CLI and the serve benchmark print.
+
+Thread-safe; recording is append-to-list under a lock so the hot path stays
+trivial, and all reductions happen at read time.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PHASES = ("queue", "irls", "rounding", "total")
+
+
+def percentile(samples: List[float], p: float) -> float:
+    """p-th percentile of ``samples`` (nan when empty)."""
+    if not samples:
+        return float("nan")
+    return float(np.percentile(np.asarray(samples, dtype=np.float64), p))
+
+
+class ServeMetrics:
+    """Counters + latency samples for one ``MinCutServer``."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self.rejected = 0
+        self.cancelled = 0
+        self.batches = 0
+        self.batch_sizes: List[int] = []
+        self.bucket_sizes: List[int] = []
+        self._samples: Dict[str, List[float]] = {ph: [] for ph in PHASES}
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- recording (engine hot path) ------------------------------------------
+    def record_submit(self, now: float) -> None:
+        with self._lock:
+            self.submitted += 1
+            if self._t_first is None:
+                self._t_first = now
+
+    def record_reject(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def record_cancelled(self) -> None:
+        with self._lock:
+            self.cancelled += 1
+
+    def record_batch(self, size: int, bucket: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.batch_sizes.append(int(size))
+            self.bucket_sizes.append(int(bucket))
+
+    def record_request(self, timings: Dict[str, float], now: float,
+                       failed: bool = False) -> None:
+        with self._lock:
+            if failed:
+                self.failed += 1
+            else:
+                self.completed += 1
+                for ph in PHASES:
+                    if ph in timings:
+                        self._samples[ph].append(float(timings[ph]))
+            self._t_last = now
+
+    # -- reductions ------------------------------------------------------------
+    def latency_ms(self, phase: str, p: float) -> float:
+        with self._lock:
+            samples = list(self._samples[phase])
+        return percentile(samples, p) * 1e3
+
+    def solves_per_sec(self) -> float:
+        with self._lock:
+            if not self.completed or self._t_first is None \
+                    or self._t_last is None:
+                return 0.0
+            window = self._t_last - self._t_first
+            return self.completed / window if window > 0 else float("inf")
+
+    def mean_batch_size(self) -> float:
+        with self._lock:
+            return (float(np.mean(self.batch_sizes))
+                    if self.batch_sizes else float("nan"))
+
+    def max_batch_size(self) -> int:
+        with self._lock:
+            return max(self.batch_sizes) if self.batch_sizes else 0
+
+    def snapshot(self) -> Dict[str, object]:
+        """Everything, as a plain JSON-serializable dict."""
+        with self._lock:
+            samples = {ph: list(v) for ph, v in self._samples.items()}
+            counts = dict(submitted=self.submitted, completed=self.completed,
+                          failed=self.failed, rejected=self.rejected,
+                          cancelled=self.cancelled, batches=self.batches,
+                          batch_sizes=list(self.batch_sizes),
+                          bucket_sizes=list(self.bucket_sizes))
+        out: Dict[str, object] = dict(counts)
+        out["solves_per_sec"] = self.solves_per_sec()
+        out["mean_batch_size"] = self.mean_batch_size()
+        for ph in PHASES:
+            for p in (50, 90, 99):
+                out[f"{ph}_p{p}_ms"] = percentile(samples[ph], p) * 1e3
+        return out
+
+    def dump(self) -> str:
+        """Human-readable text report."""
+        s = self.snapshot()
+        lines = [
+            "serve metrics",
+            f"  requests : {s['submitted']} submitted, "
+            f"{s['completed']} completed, {s['failed']} failed, "
+            f"{s['rejected']} rejected, {s['cancelled']} cancelled",
+            f"  batches  : {s['batches']} "
+            f"(mean size {s['mean_batch_size']:.2f}, "
+            f"max {max(s['batch_sizes']) if s['batch_sizes'] else 0})",
+            f"  rate     : {s['solves_per_sec']:.1f} solves/sec",
+            "  latency (ms)        p50        p90        p99",
+        ]
+        for ph in PHASES:
+            lines.append(f"    {ph:<10}  {s[f'{ph}_p50_ms']:>9.2f}  "
+                         f"{s[f'{ph}_p90_ms']:>9.2f}  "
+                         f"{s[f'{ph}_p99_ms']:>9.2f}")
+        return "\n".join(lines)

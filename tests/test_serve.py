@@ -1,0 +1,222 @@
+"""Serving engine: batcher/cache units, engine end-to-end, bench emission."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (IRLSConfig, MinCutSession, Problem, Weights,
+                        topology_fingerprint)
+from repro.serve import (MicroBatcher, MinCutServer, ServerOverloaded,
+                         SessionCache, bucket_size)
+
+from conftest import tiny_instance
+
+CFG = IRLSConfig(n_irls=8, pcg_max_iters=30, precond="jacobi", n_blocks=1)
+
+
+def _weights(inst, scale=1.0):
+    return Weights(np.asarray(inst.graph.weight) * scale,
+                   np.asarray(inst.s_weight), np.asarray(inst.t_weight))
+
+
+# ---------------------------------------------------------------------------
+# fingerprint
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_ignores_weights_not_topology(grid_instance, road_instance):
+    fp = topology_fingerprint(grid_instance)
+    # same topology, scaled weights → same fingerprint
+    scaled = Problem.build(grid_instance, n_blocks=1).instance_with(
+        _weights(grid_instance, 3.0))
+    assert topology_fingerprint(scaled) == fp
+    # different topology → different fingerprint
+    assert topology_fingerprint(road_instance) != fp
+    assert Problem.build(grid_instance, n_blocks=1).fingerprint == fp
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher (pure, clock-driven)
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_pow2_capped():
+    assert [bucket_size(k, 8) for k in (1, 2, 3, 4, 5, 7, 8, 9, 20)] == \
+        [1, 2, 4, 4, 8, 8, 8, 8, 8]
+
+
+def test_batcher_size_trigger_flushes_full_batches():
+    b = MicroBatcher(max_batch=4, max_wait_ms=1e6)
+    for i in range(9):
+        b.add("g", i, now=0.0)
+    out = b.ready(now=0.0)
+    assert [len(x.requests) for x in out] == [4, 4]   # 9th waits for deadline
+    assert all(x.bucket == 4 for x in out)
+    assert b.pending == 1
+
+
+def test_batcher_deadline_trigger_and_grouping():
+    b = MicroBatcher(max_batch=8, max_wait_ms=10.0)
+    b.add("a", "a0", now=0.0)
+    b.add("b", "b0", now=0.005)
+    assert b.ready(now=0.005) == []            # neither trigger hit
+    assert b.next_deadline() == pytest.approx(0.010)
+    out = b.ready(now=0.011)                   # only "a" is past deadline
+    assert [(x.key, x.requests) for x in out] == [("a", ["a0"])]
+    assert b.pending == 1
+    out = b.flush_all()
+    assert [(x.key, x.requests, x.bucket) for x in out] == [("b", ["b0"], 1)]
+    assert b.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# session cache
+# ---------------------------------------------------------------------------
+
+def test_session_cache_lru_eviction_and_rebuild():
+    insts = [tiny_instance(n=8, seed=s) for s in range(3)]
+    built = []
+    cache = SessionCache(capacity=2,
+                         build=lambda inst: built.append(inst) or object())
+    keys = [cache.register(i) for i in insts]
+    assert len(set(keys)) == 3
+    cache.get(keys[0]); cache.get(keys[1])
+    assert cache.stats.misses == 2 and cache.stats.evictions == 0
+    cache.get(keys[0])                          # refresh LRU order: 1 is LRU
+    assert cache.stats.hits == 1
+    cache.get(keys[2])                          # evicts keys[1]
+    assert cache.stats.evictions == 1
+    assert set(cache.cached_keys()) == {keys[0], keys[2]}
+    cache.get(keys[1])                          # rebuild after eviction
+    assert cache.stats.rebuilds == 1 and cache.stats.misses == 4
+    with pytest.raises(KeyError, match="unknown topology"):
+        cache.get("deadbeef")
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end
+# ---------------------------------------------------------------------------
+
+def test_server_microbatches_concurrent_topologies(grid_instance,
+                                                   road_instance):
+    """Concurrent submissions across 2 topologies are micro-batched (observed
+    batch size > 1 under load) and every result matches a single-request
+    solve on the same weights to ≤ 1e-4."""
+    with MinCutServer(cfg=CFG, capacity=4, max_batch=4,
+                      max_wait_ms=250.0) as srv:
+        keys = [srv.register(grid_instance), srv.register(road_instance)]
+        futs = []
+        for inst, key in zip((grid_instance, road_instance), keys):
+            futs.append([srv.submit(key, _weights(inst, 1.0 + 0.1 * i))
+                         for i in range(5)])
+        results = [[f.result(timeout=600.0) for f in fs] for fs in futs]
+        assert srv.metrics.max_batch_size() > 1
+        assert srv.metrics.completed == 10
+        stats = srv.stats()
+    assert stats["cache"]["misses"] == 2         # one build per topology
+
+    for inst, res_list in zip((grid_instance, road_instance), results):
+        sess = MinCutSession(Problem.build(inst, n_blocks=1), CFG,
+                             backend="scanned")
+        for i, res in enumerate(res_list):
+            single = sess.solve(weights=_weights(inst, 1.0 + 0.1 * i))
+            assert res.cut_value == pytest.approx(single.cut_value, rel=1e-4)
+            # voltages only loosely: unpinned plateau values wander ~1e-2
+            # between XLA lowerings of different batch shapes; a frame or
+            # permutation bug would show up as O(1) differences
+            np.testing.assert_allclose(res.voltages, single.voltages,
+                                       atol=0.1)
+            assert res.timings["queue"] >= 0.0
+            assert res.timings["total"] >= res.timings["queue"]
+
+
+def test_server_lru_eviction_under_capacity_pressure():
+    """capacity=1 with alternating topologies evicts and rebuilds."""
+    insts = [tiny_instance(n=8, seed=s) for s in (0, 1)]
+    with MinCutServer(cfg=CFG, capacity=1, max_batch=2,
+                      max_wait_ms=1.0) as srv:
+        for rounds in range(2):
+            for inst in insts:
+                srv.submit(inst, _weights(inst)).result(timeout=600.0)
+        stats = srv.stats()
+    assert stats["cache"]["evictions"] >= 2
+    assert stats["cache"]["rebuilds"] >= 1
+    assert stats["completed"] == 4
+
+
+def test_server_admission_control_rejects_over_cap(grid_instance):
+    with MinCutServer(cfg=CFG, max_batch=4, max_wait_ms=500.0,
+                      max_queue=3) as srv:
+        key = srv.register(grid_instance)
+        futs = [srv.submit(key, _weights(grid_instance)) for _ in range(3)]
+        with pytest.raises(ServerOverloaded):
+            srv.submit(key, _weights(grid_instance))
+        assert srv.metrics.rejected == 1
+        for f in futs:
+            f.result(timeout=600.0)
+        # in-flight drained → admission reopens
+        srv.submit(key, _weights(grid_instance)).result(timeout=600.0)
+    assert srv.metrics.completed == 4
+
+
+def test_server_unknown_key_and_stopped_submit(grid_instance):
+    srv = MinCutServer(cfg=CFG)
+    with pytest.raises(KeyError, match="unknown topology"):
+        srv.submit("no-such-key", _weights(grid_instance))
+    srv.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        srv.submit(grid_instance, _weights(grid_instance))
+
+
+def test_server_bad_weights_rejected_at_submit(grid_instance):
+    """Shape mismatches are rejected synchronously — a malformed request
+    must never reach a batch where it would poison co-batched requests."""
+    with MinCutServer(cfg=CFG, max_batch=2, max_wait_ms=1.0) as srv:
+        key = srv.register(grid_instance)
+        with pytest.raises(ValueError, match="topology"):
+            srv.submit(key, Weights(np.ones(3), np.ones(4), np.ones(4)))
+        assert srv.admission.in_flight == 0      # no admission slot leaked
+        good = srv.submit(key, _weights(grid_instance))
+        assert np.isfinite(good.result(timeout=600.0).cut_value)
+        assert srv.metrics.failed == 0 and srv.metrics.completed == 1
+
+
+def test_server_cancelled_future_skipped_not_fatal(grid_instance):
+    """A caller-cancelled future must not kill the worker thread."""
+    with MinCutServer(cfg=CFG, max_batch=4, max_wait_ms=100.0) as srv:
+        key = srv.register(grid_instance)
+        doomed = srv.submit(key, _weights(grid_instance))
+        assert doomed.cancel()                   # still pending in batcher
+        after = srv.submit(key, _weights(grid_instance, 1.2))
+        assert np.isfinite(after.result(timeout=600.0).cut_value)
+        assert srv.metrics.cancelled == 1
+        assert srv.admission.in_flight == 0
+
+
+def test_server_stop_flushes_pending(grid_instance):
+    srv = MinCutServer(cfg=CFG, max_batch=64, max_wait_ms=60_000.0)
+    key = srv.register(grid_instance)
+    futs = [srv.submit(key, _weights(grid_instance, 1.0 + 0.2 * i))
+            for i in range(3)]
+    srv.stop()                     # deadline far away: stop must flush
+    for f in futs:
+        assert np.isfinite(f.result(timeout=1.0).cut_value)
+
+
+# ---------------------------------------------------------------------------
+# serve benchmark → repo-root BENCH_serve.json
+# ---------------------------------------------------------------------------
+
+def test_serve_benchmark_emits_root_payload(tmp_path):
+    from benchmarks import run as bench_run
+    from benchmarks import serve as bench_serve
+
+    row = bench_serve.run(side=6, n_topos=2, n_requests=8, rates=(200.0,),
+                          n_irls=4, pcg_iters=10, max_batch=4,
+                          max_wait_ms=5.0)
+    path = bench_run.write_root_payload(row, root=str(tmp_path))
+    assert os.path.basename(path) == "BENCH_serve.json"
+    payload = json.loads(open(path).read())
+    assert payload["name"] == "serve"
+    assert payload["solves_per_sec"] > 0
+    assert payload["p50_ms"] > 0 and payload["p99_ms"] >= payload["p50_ms"]
+    assert "timestamp" not in payload

@@ -132,12 +132,33 @@ def test_warm_from_previous_result(road_instance):
 def test_solve_batch_matches_individual(grid_instance):
     cfg = IRLSConfig(n_irls=10, n_blocks=4, pcg_max_iters=50)
     sess = MinCutSession(grid_instance, cfg)
-    ws = [_weights_of(grid_instance, s) for s in (1.0, 1.3)]
+    ws = [_weights_of(grid_instance, s) for s in (1.0, 1.3, 0.7)]
     batch = sess.solve_batch(ws, cfg=cfg)
-    assert len(batch) == 2
+    assert len(batch) == 3
     for w, res in zip(ws, batch):
         single = sess.solve(weights=w, backend="scanned", cfg=cfg)
-        assert res.cut_value == pytest.approx(single.cut_value, rel=1e-5)
+        assert res.cut_value == pytest.approx(single.cut_value, rel=1e-4)
+        np.testing.assert_allclose(res.voltages, single.voltages, atol=1e-4)
+
+
+def test_solve_batch_empty_fast_path(grid_instance):
+    sess = MinCutSession(grid_instance, CFG)
+    assert sess.solve_batch([]) == []
+    assert sess._steppers == {}            # no program compiled for nothing
+
+
+def test_solve_batch_padded_bucket_returns_only_real_results(grid_instance):
+    cfg = IRLSConfig(n_irls=10, n_blocks=4, pcg_max_iters=50)
+    sess = MinCutSession(grid_instance, cfg)
+    ws = [_weights_of(grid_instance, s) for s in (1.0, 1.4, 0.8)]
+    padded = sess.solve_batch(ws, cfg=cfg, pad_to=4)
+    assert len(padded) == 3                # pad results are dropped
+    unpadded = sess.solve_batch(ws, cfg=cfg)
+    for a, b in zip(padded, unpadded):
+        assert a.cut_value == pytest.approx(b.cut_value, rel=1e-6)
+        np.testing.assert_allclose(a.voltages, b.voltages, atol=1e-6)
+    with pytest.raises(ValueError, match="pad_to"):
+        sess.solve_batch(ws, cfg=cfg, pad_to=2)
 
 
 # ---------------------------------------------------------------------------
