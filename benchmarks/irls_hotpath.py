@@ -1,0 +1,135 @@
+"""Solver-core hot-path benchmark: time-to-cut-quality on the scanned path.
+
+Every workload (single solves, ``solve_batch``, the serving engine) runs the
+scanned IRLS program, so this file IS the solver-core perf trajectory
+(repo-root ``BENCH_irls.json``, diffable commit to commit).  It measures,
+per topology family (2D segmentation grid, road network, 26-connected
+MRI-like 3D grid), steady-state wall-clock per solve for three variants:
+
+  fixed_unfused  — the rigid ``n_irls × pcg_max_iters`` schedule with the
+                   legacy separate reweight/fill/diag/rhs passes (the
+                   pre-adaptive hot path; the baseline).
+  fixed_fused    — same schedule, per-iteration system built by the fused
+                   single edge sweep (isolates the kernel fusion win).
+  adaptive_fused — fused sweep + convergence-masked early exit +
+                   Eisenstat–Walker inner tolerances (the serving default).
+
+"Equal cut quality" is enforced, not assumed: each variant's rounded cut is
+compared against the fixed baseline's and the payload records the relative
+difference (must stay ≤ 1e-3 for the speedup to count).  PCG iteration
+totals come from the scanned program's own spend trace.
+
+  PYTHONPATH=src python -m benchmarks.irls_hotpath            # full
+  PYTHONPATH=src python -m benchmarks.irls_hotpath --smoke    # CI gate
+  PYTHONPATH=src python -m benchmarks.run irls                # harness
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import grid3d_instance, grid_instance, road_instance, save_json
+
+BENCH_NAME = "irls"
+
+QUALITY_RTOL = 1e-3     # max rel. cut-value difference vs the fixed baseline
+
+
+def _variants(n_irls: int, pcg_iters: int):
+    from repro.core import IRLSConfig
+
+    base = dict(n_irls=n_irls, pcg_max_iters=pcg_iters, precond="jacobi",
+                n_blocks=1, layout="ell")
+    return {
+        "fixed_unfused": IRLSConfig(**base, fuse_edge_sweep=False),
+        "fixed_fused": IRLSConfig(**base, fuse_edge_sweep=True),
+        "adaptive_fused": IRLSConfig(**base, fuse_edge_sweep=True,
+                                     irls_tol=1e-3, adaptive_tol=True),
+    }
+
+
+def _time_variant(sess, cfg, repeat: int):
+    """Steady-state seconds per solve (min over ``repeat``), the rounded cut
+    value and the total PCG iterations actually spent."""
+    res = sess.solve(cfg=cfg)                       # warmup: compile + plans
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        sess.solve(cfg=cfg, rounding=None)          # pure solver core
+        times.append(time.perf_counter() - t0)
+    return min(times), float(res.cut_value), int(res.pcg_iters.sum())
+
+
+def run(smoke: bool = False, repeat: int = 5, n_irls: int = 50,
+        pcg_iters: int = 50, seed: int = 0):
+    from repro.core import MinCutSession, Problem
+
+    if smoke:
+        repeat, n_irls, pcg_iters = 2, 10, 15
+        topos = [("grid", grid_instance(side=10, seed=seed)),
+                 ("road", road_instance(side=10, seed=seed))]
+    else:
+        topos = [("grid", grid_instance(side=32, seed=seed)),
+                 ("road", road_instance(side=36, seed=seed)),
+                 ("mri", grid3d_instance(side=8, seed=seed))]
+
+    variants = _variants(n_irls, pcg_iters)
+    rows = []
+    for name, inst in topos:
+        sess = MinCutSession(Problem.build(inst, n_blocks=1),
+                             variants["fixed_unfused"], backend="scanned")
+        row = {"topology": name, "n": int(inst.n), "m": int(inst.graph.m),
+               "solves": 0}
+        for vname, cfg in variants.items():
+            t, cut, iters = _time_variant(sess, cfg, repeat)
+            row[vname] = {"s_per_solve": t, "cut_value": cut,
+                          "pcg_iters": iters}
+            row["solves"] += repeat + 1             # timed + warmup
+        base = row["fixed_unfused"]
+        for vname in ("fixed_fused", "adaptive_fused"):
+            v = row[vname]
+            v["speedup"] = base["s_per_solve"] / max(v["s_per_solve"], 1e-12)
+            v["cut_rel_diff"] = (abs(v["cut_value"] - base["cut_value"])
+                                 / max(abs(base["cut_value"]), 1e-30))
+            v["quality_ok"] = bool(v["cut_rel_diff"] <= QUALITY_RTOL)
+        rows.append(row)
+
+    payload = {
+        "cfg": {"n_irls": n_irls, "pcg_max_iters": pcg_iters,
+                "repeat": repeat, "smoke": smoke,
+                "quality_rtol": QUALITY_RTOL},
+        "topologies": rows,
+    }
+    save_json("irls_hotpath", payload)
+
+    adls = [r["adaptive_fused"] for r in rows]
+    derived = " ".join(
+        f"{r['topology']} {r['adaptive_fused']['speedup']:.1f}x"
+        f"{'' if r['adaptive_fused']['quality_ok'] else '(QUALITY MISS)'}"
+        for r in rows) + " (adaptive+fused vs fixed unfused, equal cut)"
+    return {
+        "name": BENCH_NAME,
+        "us_per_call": 1e6 * float(np.mean([a["s_per_solve"] for a in adls])),
+        "derived": derived,
+        "solves": sum(r["solves"] for r in rows),
+        "topologies": rows,
+        "cfg": payload["cfg"],
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny instances + short schedule (the CI gate); "
+                         "still writes the repo-root BENCH_irls.json payload")
+    args = ap.parse_args()
+
+    from .run import write_root_payload
+
+    row = run(smoke=args.smoke)
+    path = write_root_payload(row)
+    print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    print(f"wrote {path}")

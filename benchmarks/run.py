@@ -15,8 +15,8 @@ import os
 import sys
 import traceback
 
-from . import (phases, polarization, quality, roofline, scaling, serve,
-               speedup, warm_start)
+from . import (irls_hotpath, phases, polarization, quality, roofline,
+               scaling, serve, speedup, warm_start)
 
 BENCHES = {
     "fig1": warm_start.run,
@@ -27,6 +27,7 @@ BENCHES = {
     "table4": quality.run,
     "roofline": roofline.run,
     "serve": serve.run,
+    "irls": irls_hotpath.run,
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -14,8 +14,30 @@ Two drivers are provided:
   preconditioner is refactorized between iterations, residual/objective
   diagnostics are collected.  This is the reference/production single-host
   path, and is what the paper measures per-phase (Table 2).
-* ``solve_scanned`` — one jitted ``lax.scan`` over IRLS iterations with a
-  fixed PCG schedule — the form the distributed dry-run lowers and compiles.
+* ``solve_scanned`` — one jitted ``lax.scan`` over IRLS iterations — the form
+  the distributed dry-run lowers and compiles, and the batched serving hot
+  path (``jax.vmap`` over same-topology weight vectors).
+
+The scanned driver runs one of two schedules:
+
+* **fixed** (``irls_tol == 0`` and ``adaptive_tol == False``) — the paper's
+  rigid ``n_irls × pcg_max_iters`` program, every instance pays the full
+  budget (deterministic HLO; what the roofline/dry-run analyses consume).
+* **adaptive** (any of the knobs below set) — a convergence-masked program
+  that stays static-shape and jit/vmap-safe: the scan carries a per-instance
+  ``done`` mask driven by the relative change of the fractional cut value
+  (``irls_tol``), converged instances freeze (their PCG warm start is
+  already below tolerance, so the masked inner loop exits immediately —
+  vmapped batches stop paying for finished instances), and the inner PCG
+  tolerance follows an Eisenstat–Walker-style schedule (``adaptive_tol``:
+  loose early while the reweighting is far from fixed-point, tightening to
+  ``pcg_tol`` as the outer iteration converges).
+
+Both drivers build the per-iteration system through ONE dispatch helper
+(``_iteration_system``): reweight→ELL-values→diagonal→RHS either as a fused
+single sweep over the edge data (``fuse_edge_sweep``, kernels/edge_reweight
+on TPU / the jnp fallback elsewhere) or as the legacy separate passes, with
+``use_pallas`` honored uniformly (host and scanned alike).
 
 Both are thin compatibility entry points over the session API
 (core/session.py): ``Problem`` holds the one-time partition/plan setup and
@@ -43,7 +65,7 @@ import numpy as np
 from . import laplacian as lap
 from . import precond as pc
 from .incidence import DeviceGraph, device_graph_from_instance, l1_objective, smoothed_objective
-from .pcg import pcg, pcg_fixed_iters
+from .pcg import pcg, pcg_fixed_iters, pcg_masked
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +85,29 @@ class IRLSConfig:
     layout: str = "coo"               # coo | ell  (matvec layout)
     dtype: str = "float32"
     use_pallas: bool = False          # route matvec/reweight through kernels/
+    # -- adaptive early-exit hot path (see docs/API.md "Performance tuning").
+    # All zero/False reproduces the fixed paper schedule exactly.
+    irls_tol: float = 0.0             # rel. fractional-cut change that marks
+                                      # an instance converged; 0 = run all T
+    irls_patience: int = 2            # consecutive sub-irls_tol iterations
+                                      # required before freezing (guards the
+                                      # slow-convergence tail: one flat
+                                      # reading is not convergence evidence)
+    adaptive_tol: bool = False        # Eisenstat–Walker inner tolerance:
+                                      # loose PCG early, tight late
+                                      # (monotone non-increasing, so a
+                                      # productive step can never loosen the
+                                      # next one back into a no-op)
+    pcg_loose_tol: float = 0.1        # loosest inner tolerance adaptive_tol
+                                      # may use (first/far-from-fixed-point)
+    pcg_tight_tol: float = 1e-6       # tight end of the adaptive SCANNED
+                                      # schedule — matches the residual level
+                                      # the fixed 50-iteration budget actually
+                                      # reaches (the paper's 1e-3 is measured
+                                      # against ‖b‖, which the ε-regularized
+                                      # terminal conductances inflate)
+    fuse_edge_sweep: bool = True      # build the per-iteration system in one
+                                      # edge sweep (ELL layout only)
 
 
 @dataclasses.dataclass
@@ -85,15 +130,77 @@ def _eps_at(cfg: IRLSConfig, l: int) -> float:
     return cfg.eps
 
 
+def eps_schedule_array(cfg: IRLSConfig) -> np.ndarray:
+    """ε for iterations 1..T as an array — the scanned driver consumes it as
+    a scan input so host/scanned numerics agree under ``eps_schedule``."""
+    return np.asarray([_eps_at(cfg, l) for l in range(1, cfg.n_irls + 1)])
+
+
+def _adaptive(cfg: IRLSConfig) -> bool:
+    """Does this config run the convergence-masked (early-exit) schedule?"""
+    return cfg.irls_tol > 0.0 or cfg.adaptive_tol
+
+
+def _fused(cfg: IRLSConfig, ell_plan: Optional[lap.EllPlan]) -> bool:
+    return cfg.fuse_edge_sweep and cfg.layout == "ell" and ell_plan is not None
+
+
+def _ell_matvec(cfg: IRLSConfig, ell_plan: lap.EllPlan, vals, diag):
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return lambda v: kops.ell_spmv(ell_plan.cols, vals, diag, v)
+    return lambda v: lap.matvec_ell(ell_plan.cols, vals, diag, v)
+
+
 def _make_matvec(g: DeviceGraph, rw: lap.Reweighted, cfg: IRLSConfig,
                  ell_plan: Optional[lap.EllPlan]):
     if cfg.layout == "ell":
         vals, diag = lap.fill_ell(ell_plan, rw)
-        if cfg.use_pallas:
-            from repro.kernels import ops as kops
-            return lambda v: kops.ell_spmv(ell_plan.cols, vals, diag, v)
-        return lambda v: lap.matvec_ell(ell_plan.cols, vals, diag, v)
+        return _ell_matvec(cfg, ell_plan, vals, diag)
     return lambda v: lap.matvec_coo(g, rw, v)
+
+
+def _reweight(g: DeviceGraph, v, eps, cfg: IRLSConfig) -> lap.Reweighted:
+    """THE reweight dispatch — every driver (host and scanned) routes here,
+    so ``cfg.use_pallas`` means the same thing on every backend."""
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        return kops.edge_reweight(g, v, eps)
+    return lap.reweight(g, v, eps)
+
+
+def _iteration_system(g: DeviceGraph, cfg: IRLSConfig,
+                      ell_plan: Optional[lap.EllPlan], c_ell, v, eps):
+    """Build one IRLS iteration's system: returns ``(matvec, b, rw)``.
+
+    Fused path (ELL layout + ``fuse_edge_sweep``): reweight → ELL value fill
+    → diagonal → RHS in ONE sweep over the edge data (Pallas kernel under
+    ``use_pallas``, the jnp fused fallback otherwise).  ``c_ell`` is the
+    once-per-solve slot-major weight stage (``lap.ell_edge_weights``); pass
+    None to build it here (host stepper — still one scatter per iteration,
+    exactly what the legacy ``fill_ell`` cost).  The per-edge conductances
+    are only gathered back when the preconditioner assembles blocks.
+
+    Unfused path: the legacy separate passes (reweight, fill, rhs).
+    """
+    if not _fused(cfg, ell_plan):
+        rw = _reweight(g, v, eps, cfg)
+        return _make_matvec(g, rw, cfg, ell_plan), lap.rhs(rw), rw
+    if c_ell is None:
+        c_ell = lap.ell_edge_weights(ell_plan, g.c)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        vals, diag, r_s, r_t = kops.fused_ell_sweep(
+            ell_plan.cols, c_ell, g.c_s, g.c_t, v, eps)
+    else:
+        vals, diag, r_s, r_t = lap.fused_ell_sweep(
+            ell_plan.cols, c_ell, g.c_s, g.c_t, v, eps)
+    # always recover the per-edge conductances: any REGISTRY preconditioner
+    # may index rw.r (block_jacobi does), and the gather is one m-element
+    # read against the sweep's 2m — not worth a name-based special case
+    r = lap.edge_r_from_vals(ell_plan, vals)
+    rw = lap.Reweighted(r=r, r_s=r_s, r_t=r_t, diag=diag)
+    return _ell_matvec(cfg, ell_plan, vals, diag), r_s, rw
 
 
 class _Stepper:
@@ -114,28 +221,37 @@ class _Stepper:
         self.ell_plan = ell_plan
         self._jit_step = jax.jit(self._step_impl, static_argnames=("first",))
 
-    def _step(self, v, eps, *, first: bool, weights=None):
+    def stage_edge_weights(self, weights=None):
+        """Slot-major ELL weight stage for the fused sweep — computed ONCE
+        per solve (the weights are fixed across the IRLS loop) and threaded
+        through every step, so the per-iteration sweep stays scatter-free.
+        None when the config doesn't run the fused path."""
+        if not _fused(self.cfg, self.ell_plan):
+            return None
+        c = weights[0] if weights is not None else self.g.c
+        return lap.ell_edge_weights(self.ell_plan, c)
+
+    def _step(self, v, eps, *, first: bool, weights=None, tol=None,
+              c_ell=None):
         c, c_s, c_t = (weights if weights is not None
                        else (self.g.c, self.g.c_s, self.g.c_t))
-        return self._jit_step(v, eps, c, c_s, c_t, first=first)
+        tol = self.cfg.pcg_tol if tol is None else tol
+        return self._jit_step(v, eps, tol, c, c_s, c_t, c_ell, first=first)
 
-    def _step_impl(self, v, eps, c, c_s, c_t, *, first: bool):
+    def _step_impl(self, v, eps, tol, c, c_s, c_t, c_ell, *, first: bool):
         cfg = self.cfg
         g = DeviceGraph(src=self.g.src, dst=self.g.dst, c=c, c_s=c_s, c_t=c_t)
         if first:
             rw = lap.initial_weights(g)
+            matvec = _make_matvec(g, rw, cfg, self.ell_plan)
+            b = lap.rhs(rw)
         else:
-            if cfg.use_pallas:
-                from repro.kernels import ops as kops
-                rw = kops.edge_reweight(g, v, eps)
-            else:
-                rw = lap.reweight(g, v, eps)
-        matvec = _make_matvec(g, rw, cfg, self.ell_plan)
-        b = lap.rhs(rw)
+            matvec, b, rw = _iteration_system(g, cfg, self.ell_plan, c_ell,
+                                              v, eps)
         apply_M = pc.make_preconditioner(cfg.precond, rw, matvec, cfg,
                                          self.block_plan)
         x0 = v if (cfg.warm_start and not first) else jnp.zeros_like(v)
-        res = pcg(matvec, b, x0=x0, precond=apply_M, tol=cfg.pcg_tol,
+        res = pcg(matvec, b, x0=x0, precond=apply_M, tol=tol,
                   max_iters=cfg.pcg_max_iters, record_history=True)
         s_eps = smoothed_objective(g, res.x, eps)
         frac_cut = l1_objective(g, res.x)
@@ -151,24 +267,52 @@ def run_host_loop(stepper: _Stepper, cfg: IRLSConfig, n: int, dtype,
     (the FlowImprove sequence regime).  ``weights`` — optional device
     ``(c, c_s, c_t)`` triple (REORDERED frame) overriding the stepper's
     baked-in weights.  Returns (device voltages, diag).
+
+    Adaptive knobs (host flavor of the scanned early exit): ``irls_tol > 0``
+    breaks out of the loop once the fractional cut value's relative change
+    drops below it; ``adaptive_tol`` feeds a per-iteration inner tolerance
+    (traced argument — no recompilation) to the stepper's PCG.
     """
     diag = IRLSDiagnostics(pcg_iters=[], pcg_residuals=[], objective=[],
                            l1_objective=[],
                            voltages=[] if collect_voltages else None)
     t1 = time.perf_counter()
+    tol_l = cfg.pcg_loose_tol if cfg.adaptive_tol else cfg.pcg_tol
+    c_ell = stepper.stage_edge_weights(weights)   # one scatter per SOLVE
     if v0 is None:
         v = jnp.zeros((n,), dtype=dtype)
         # x⁰: WLS with W⁰ = C (cold start by definition)
         v, iters, rel, s_eps, frac = stepper._step(v, cfg.eps, first=True,
-                                                   weights=weights)
+                                                   weights=weights, tol=tol_l)
         _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
     else:
         v = jnp.asarray(v0, dtype=dtype)
+    small = 0
     for l in range(1, cfg.n_irls + 1):
         eps_l = _eps_at(cfg, l)
         v, iters, rel, s_eps, frac = stepper._step(v, eps_l, first=False,
-                                                   weights=weights)
+                                                   weights=weights, tol=tol_l,
+                                                   c_ell=c_ell)
         _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
+        fr = diag.l1_objective
+        if len(fr) < 2:
+            continue
+        change = abs(fr[-1] - fr[-2]) / max(abs(fr[-2]), 1e-30)
+        if cfg.adaptive_tol:
+            # Eisenstat–Walker, monotone: solve only as accurately as the
+            # outer iteration deserves, never loosen back into a no-op
+            tol_l = min(tol_l, float(np.clip(0.5 * change, cfg.pcg_tol,
+                                             cfg.pcg_loose_tol)))
+        if cfg.irls_tol > 0:
+            # a loosely solved step that didn't move the objective is not
+            # convergence evidence (a cap-saturated one is — no more
+            # accuracy left to buy at this budget); one flat reading isn't
+            # either: demand irls_patience of them in a row
+            solved = (float(rel) <= cfg.pcg_tol * 1.001
+                      or int(iters) >= cfg.pcg_max_iters)
+            small = small + 1 if (change <= cfg.irls_tol and solved) else 0
+            if small >= cfg.irls_patience:
+                break                  # converged: stop paying for matvecs
     v.block_until_ready()
     diag.irls_time = time.perf_counter() - t1
     return v, diag
@@ -213,7 +357,7 @@ def _record(diag, v, iters, rel, s_eps, frac, collect_voltages):
 
 
 # ---------------------------------------------------------------------------
-# Fully-scanned variant (fixed schedule; what the dry-run lowers)
+# Fully-scanned variant (fixed or convergence-masked adaptive schedule)
 # ---------------------------------------------------------------------------
 
 def _scanned_precond(cfg: IRLSConfig, rw, matvec,
@@ -234,32 +378,124 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
                          ell_plan: Optional[lap.EllPlan] = None):
     """Build the weight-parameterized scanned IRLS program.
 
-    Returns ``run(c, c_s, c_t) → (v, rels)`` with the topology (src/dst and
-    plans) closed over — one jit of ``run`` serves every same-topology
-    weight vector, and ``jax.vmap(run)`` batches many instances (the
-    ``MinCutSession.solve_batch`` serving path).  Static control flow end to
-    end: scan over T IRLS iterations, each a fixed-iteration PCG.
+    Returns ``run(c, c_s, c_t) → (v, rels, iters)`` with the topology
+    (src/dst and plans) closed over — one jit of ``run`` serves every
+    same-topology weight vector, and ``jax.vmap(run)`` batches many
+    instances (the ``MinCutSession.solve_batch`` serving path).  ``rels``
+    and ``iters`` are the per-IRLS-iteration final PCG residual and the PCG
+    iterations actually spent (masked to 0 once an instance is done).
+
+    Static shapes end to end; control flow depends on the schedule:
+
+    * fixed (default knobs): scan over T iterations × ``pcg_fixed_iters``
+      (no residual history — one reduction per PCG step) — the
+      deterministic-HLO form the dry-run/roofline consume.
+    * adaptive (``irls_tol``/``adaptive_tol``): scan over T iterations
+      carrying a per-instance ``done`` mask; each iteration runs
+      ``pcg_masked`` (early exit, masked updates) under an
+      Eisenstat–Walker inner tolerance.  A converged instance's voltages
+      freeze, so its next warm-started PCG exits immediately — under
+      ``vmap`` the batch stops paying for finished instances.
+
+    The ε continuation (``cfg.eps_schedule``) is precomputed into a scan
+    input array, so scanned and host numerics agree.
     """
+    adaptive = _adaptive(cfg)
+
     def run(c, c_s, c_t):
         g = DeviceGraph(src=src, dst=dst, c=c, c_s=c_s, c_t=c_t)
-
-        def irls_step(v, _):
-            rw = lap.reweight(g, v, cfg.eps)
-            matvec = _make_matvec(g, rw, cfg, ell_plan)
-            b = lap.rhs(rw)
-            apply_M = _scanned_precond(cfg, rw, matvec, block_plan)
-            x0 = v if cfg.warm_start else jnp.zeros_like(v)
-            res = pcg_fixed_iters(matvec, b, x0=x0, precond=apply_M,
-                                  n_iters=cfg.pcg_max_iters)
-            return res.x, res.rel_res
+        eps_sched = jnp.asarray(eps_schedule_array(cfg), dtype=c.dtype)
+        # stage the edge weights slot-major ONCE per solve; every IRLS
+        # iteration is then a scatter-free fused sweep
+        c_ell = (lap.ell_edge_weights(ell_plan, c)
+                 if _fused(cfg, ell_plan) else None)
 
         rw0 = lap.initial_weights(g)
         matvec0 = _make_matvec(g, rw0, cfg, ell_plan)
         apply_M0 = _scanned_precond(cfg, rw0, matvec0, block_plan)
-        res0 = pcg_fixed_iters(matvec0, lap.rhs(rw0), precond=apply_M0,
-                               n_iters=cfg.pcg_max_iters)
-        v, rels = jax.lax.scan(irls_step, res0.x, None, length=cfg.n_irls)
-        return v, rels
+        b0 = lap.rhs(rw0)
+        if adaptive:
+            tol0 = (cfg.pcg_loose_tol if cfg.adaptive_tol
+                    else cfg.pcg_tight_tol)
+            res0 = pcg_masked(matvec0, b0, precond=apply_M0, tol=tol0,
+                              max_iters=cfg.pcg_max_iters)
+        else:
+            res0 = pcg_fixed_iters(matvec0, b0, precond=apply_M0,
+                                   n_iters=cfg.pcg_max_iters,
+                                   record_history=False)
+        v0 = res0.x
+
+        if not adaptive:
+            def irls_step(v, eps_l):
+                matvec, b, rw = _iteration_system(g, cfg, ell_plan, c_ell,
+                                                  v, eps_l)
+                apply_M = _scanned_precond(cfg, rw, matvec, block_plan)
+                x0 = v if cfg.warm_start else jnp.zeros_like(v)
+                res = pcg_fixed_iters(matvec, b, x0=x0, precond=apply_M,
+                                      n_iters=cfg.pcg_max_iters,
+                                      record_history=False)
+                return res.x, res.rel_res
+
+            v, rels = jax.lax.scan(irls_step, v0, eps_sched)
+            iters = jnp.full((cfg.n_irls,), cfg.pcg_max_iters, jnp.int32)
+            return v, rels, iters
+
+        def irls_step(carry, eps_l):
+            v, frac_prev, tol_prev, small, done = carry
+            matvec, b, rw = _iteration_system(g, cfg, ell_plan, c_ell,
+                                              v, eps_l)
+            apply_M = _scanned_precond(cfg, rw, matvec, block_plan)
+            x0 = v if cfg.warm_start else jnp.zeros_like(v)
+            # a done lane's PCG must be a no-op, not a discarded solve:
+            # tol=∞ makes the masked loop exit at entry (0 iterations)
+            tol_l = jnp.where(done, jnp.asarray(jnp.inf, c.dtype), tol_prev)
+            res = pcg_masked(matvec, b, x0=x0, precond=apply_M, tol=tol_l,
+                             max_iters=cfg.pcg_max_iters)
+            # done lanes freeze: their state must not drift while other
+            # instances of a vmapped batch keep iterating
+            v_new = jnp.where(done, v, res.x)
+            frac = l1_objective(g, v_new)
+            change = (jnp.abs(frac - frac_prev)
+                      / jnp.maximum(jnp.abs(frac_prev), 1e-30))
+            if cfg.adaptive_tol:
+                # Eisenstat–Walker, monotone: solve only as accurately as
+                # the outer iteration currently deserves, but never loosen
+                # back — a productive step must not turn the next one into
+                # a no-op whose flat reading corrupts the convergence signal
+                tol_next = jnp.minimum(tol_prev,
+                                       jnp.clip(0.5 * change,
+                                                cfg.pcg_tight_tol,
+                                                cfg.pcg_loose_tol))
+                tol_next = jnp.where(done, tol_prev, tol_next)
+            else:
+                tol_next = tol_prev
+            if cfg.irls_tol > 0.0:
+                # "no objective movement" only counts as convergence when
+                # the inner system was solved to the TIGHT tolerance (a
+                # cap-saturated step also counts — the fixed baseline
+                # spends the same budget and stops there too), and one flat
+                # reading isn't enough: demand irls_patience in a row
+                solved = jnp.logical_or(
+                    res.rel_res <= cfg.pcg_tight_tol * 1.001,
+                    res.iters >= cfg.pcg_max_iters)
+                qual = jnp.logical_and(change <= cfg.irls_tol, solved)
+                small_new = jnp.where(done, small,
+                                      jnp.where(qual, small + 1, 0))
+                done_new = jnp.logical_or(done,
+                                          small_new >= cfg.irls_patience)
+            else:
+                small_new = small
+                done_new = done
+            spent = jnp.where(done, 0, res.iters).astype(jnp.int32)
+            return ((v_new, frac, tol_next, small_new, done_new),
+                    (res.rel_res, spent))
+
+        frac0 = l1_objective(g, v0)
+        carry0 = (v0, frac0, jnp.asarray(tol0, c.dtype),
+                  jnp.asarray(0, jnp.int32), jnp.asarray(False))
+        (v, _, _, _, _), (rels, iters) = jax.lax.scan(irls_step, carry0,
+                                                      eps_sched)
+        return v, rels, iters
 
     return run
 
@@ -267,7 +503,8 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
 def solve_scanned(g: DeviceGraph, cfg: IRLSConfig,
                   block_plan: Optional[pc.BlockPlan] = None,
                   ell_plan: Optional[lap.EllPlan] = None):
-    """One jit-able program: scan over T IRLS iterations, each running a
-    fixed-iteration PCG (compatibility wrapper over make_scanned_program)."""
+    """One jit-able program: scan over T IRLS iterations (compatibility
+    wrapper over make_scanned_program; returns ``(v, rels)``)."""
     run = make_scanned_program(g.src, g.dst, cfg, block_plan, ell_plan)
-    return run(g.c, g.c_s, g.c_t)
+    v, rels, _ = run(g.c, g.c_s, g.c_t)
+    return v, rels

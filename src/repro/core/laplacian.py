@@ -98,12 +98,18 @@ class EllPlan(NamedTuple):
     slot_rows : int32[2m]    destination row of each directed edge copy
     slot_cols : int32[2m]    destination lane of each directed edge copy
     edge_id   : int32[2m]    originating undirected edge id of each copy
+    edge_row  : int32[m]     row of the FIRST slot of each undirected edge
+    edge_lane : int32[m]     lane of that slot (per-edge gather-back map:
+                             ``r_e = -vals[edge_row, edge_lane]`` recovers the
+                             conductances from a fused-sweep value matrix)
     """
 
     cols: jax.Array
     slot_rows: jax.Array
     slot_cols: jax.Array
     edge_id: jax.Array
+    edge_row: jax.Array
+    edge_lane: jax.Array
 
     @property
     def n(self) -> int:
@@ -135,11 +141,15 @@ def build_ell_plan(src, dst, n: int, pad_to_multiple: int = 8) -> EllPlan:
     lane = np.arange(2 * m) - starts[rows]
     colmat = np.zeros((n, k), dtype=np.int32)
     colmat[rows, lane] = cols
+    # first slot of each undirected edge (gather-back map for fused sweeps)
+    _, first = np.unique(eid, return_index=True)
     return EllPlan(
         cols=jnp.asarray(colmat),
         slot_rows=jnp.asarray(rows, dtype=jnp.int32),
         slot_cols=jnp.asarray(lane, dtype=jnp.int32),
         edge_id=jnp.asarray(eid, dtype=jnp.int32),
+        edge_row=jnp.asarray(rows[first], dtype=jnp.int32),
+        edge_lane=jnp.asarray(lane[first], dtype=jnp.int32),
     )
 
 
@@ -165,6 +175,62 @@ def matvec_ell(cols: jax.Array, vals: jax.Array, diag: jax.Array,
     """
     gathered = v[cols]  # [n, k]
     return diag * v + jnp.sum(vals * gathered, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-sweep reweight (reweight → ELL values → diagonal → RHS)
+# ---------------------------------------------------------------------------
+
+def ell_edge_weights(plan: EllPlan, c: jax.Array) -> jax.Array:
+    """Scatter the edge weights ``c`` into the static ELL slots (once per
+    SOLVE, not per IRLS iteration — the weights are fixed across the loop).
+
+    This is the only scatter the fused path performs: with ``c_ell`` staged
+    slot-major, every subsequent IRLS iteration is a pure row-parallel sweep
+    (no races, no segment_sum), which is what lets the Pallas kernel fuse
+    reweight, value fill, diagonal and RHS into one pass over the edge data.
+    Padded slots keep c = 0 → r = 0.
+    """
+    ce = jnp.zeros((plan.n, plan.k), dtype=c.dtype)
+    return ce.at[plan.slot_rows, plan.slot_cols].set(c[plan.edge_id])
+
+
+def fused_ell_sweep(cols: jax.Array, c_ell: jax.Array, c_s: jax.Array,
+                    c_t: jax.Array, v: jax.Array, eps):
+    """One edge sweep builds the WHOLE per-iteration system (eq. 4 → eq. 8).
+
+    Per ELL slot (u, lane) holding edge e = (u, x):
+
+        z = c_e (v[u] − v[x]);  r_e = c_e² / sqrt(z² + ε²);  vals = −r_e
+
+    plus the terminal conductances and the L̃ diagonal as row reductions:
+
+        diag[u] = Σ_lane r + r_s[u] + r_t[u];   rhs = r_s
+
+    Returns ``(vals[n,k], diag[n], r_s[n], r_t[n])``.  Each undirected edge
+    is evaluated twice (once per direction) but z² is symmetric, so both
+    copies get the same r — that redundancy is what removes the cross-block
+    scatter and makes the sweep embarrassingly row-parallel.  This is the
+    jnp fallback every backend can run; the Pallas kernel
+    (kernels/edge_reweight.fused_ell_sweep_pallas) computes the identical
+    contraction with explicit VMEM tiling.
+    """
+    z = c_ell * (v[:, None] - v[cols])
+    r = (c_ell * c_ell) * jax.lax.rsqrt(z * z + eps * eps)
+    z_s = c_s * (1.0 - v)
+    z_t = c_t * v
+    r_s = jnp.where(c_s > 0,
+                    (c_s * c_s) * jax.lax.rsqrt(z_s * z_s + eps * eps), 0.0)
+    r_t = jnp.where(c_t > 0,
+                    (c_t * c_t) * jax.lax.rsqrt(z_t * z_t + eps * eps), 0.0)
+    diag = jnp.sum(r, axis=1) + r_s + r_t
+    return -r, diag, r_s, r_t
+
+
+def edge_r_from_vals(plan: EllPlan, vals: jax.Array) -> jax.Array:
+    """Recover per-edge conductances r[m] from a fused-sweep value matrix
+    (one gather; only needed when the preconditioner assembles blocks)."""
+    return -vals[plan.edge_row, plan.edge_lane]
 
 
 def dense_reduced_laplacian(g: DeviceGraph, rw: Reweighted) -> jax.Array:

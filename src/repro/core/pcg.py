@@ -8,6 +8,24 @@ device (one fused program; jit/shard_map friendly).  Supports:
 * hard iteration cap (paper: 50 at scale, 300 in the §5.2 study),
 * a residual-history trace (fixed-length buffer) for the Fig-1 benchmark.
 
+Residual bookkeeping is hoisted onto squared norms: the stopping test is
+``‖r‖² ≤ tol²·‖b‖²`` so the no-history path pays exactly one extra
+reduction per iteration (the ``r·r`` vdot) and zero square roots — the
+sqrt only happens when a history entry is recorded or at the very end.
+
+Three variants share the same update rule:
+
+* ``pcg``             — tolerance + cap ``while_loop`` (host driver).
+* ``pcg_masked``      — fixed-shape early exit with EXPLICITLY masked
+  updates: once a lane converges its state stops changing, so under
+  ``jax.vmap`` a batch stops paying for finished instances (the batch
+  runs max-over-lanes iterations, not ``max_iters``) and per-lane results
+  are bit-identical whether solved alone or co-batched.  ``tol`` may be a
+  traced scalar — the adaptive IRLS driver feeds it per iteration.
+* ``pcg_fixed_iters`` — static ``lax.scan`` schedule (the dry-run form);
+  ``record_history=False`` drops the per-iteration norm reduction from
+  the program entirely.
+
 The matvec and the preconditioner are passed as closures so the same code
 path serves the single-host (ELL / Pallas), the oracle (dense) and the
 sharded (shard_map collective) implementations.
@@ -37,31 +55,33 @@ def pcg(matvec: Callable[[jax.Array], jax.Array],
     """Solve ``A x = b`` with A SPD given through ``matvec``.
 
     ``precond`` applies M⁻¹ (identity when None).  ``x0`` enables warm starts.
+    ``tol`` may be a traced scalar (adaptive inner tolerances).
     """
     if precond is None:
         precond = lambda r: r
     x = jnp.zeros_like(b) if x0 is None else x0
 
-    b_norm = jnp.linalg.norm(b)
+    bb = jnp.vdot(b, b)
     # guard: b == 0 ⇒ x = 0 is exact; avoid dividing by zero
-    b_norm = jnp.where(b_norm > 0, b_norm, 1.0)
+    bb = jnp.where(bb > 0, bb, 1.0)
+    tol2 = jnp.asarray(tol, b.dtype) ** 2 * bb
 
     r = b - matvec(x)
     z = precond(r)
     p = z
     rz = jnp.vdot(r, z)
-    res0 = jnp.linalg.norm(r) / b_norm
+    rr = jnp.vdot(r, r)
 
     hist_len = max_iters + 1 if record_history else 1
     history = jnp.full((hist_len,), jnp.nan, dtype=b.dtype)
-    history = history.at[0].set(res0)
+    history = history.at[0].set(jnp.sqrt(rr / bb))
 
     def cond(state):
-        _, _, _, _, rel, it, _ = state
-        return jnp.logical_and(rel > tol, it < max_iters)
+        _, _, _, _, rr, it, _ = state
+        return jnp.logical_and(rr > tol2, it < max_iters)
 
     def body(state):
-        x, r, p, rz, rel, it, hist = state
+        x, r, p, rz, rr, it, hist = state
         Ap = matvec(p)
         pAp = jnp.vdot(p, Ap)
         alpha = rz / jnp.where(pAp != 0, pAp, 1.0)
@@ -71,22 +91,78 @@ def pcg(matvec: Callable[[jax.Array], jax.Array],
         rz_new = jnp.vdot(r, z)
         beta = rz_new / jnp.where(rz != 0, rz, 1.0)
         p = z + beta * p
-        rel = jnp.linalg.norm(r) / b_norm
+        rr = jnp.vdot(r, r)
         it = it + 1
         if record_history:
-            hist = hist.at[it].set(rel)
-        return x, r, p, rz_new, rel, it, hist
+            hist = hist.at[it].set(jnp.sqrt(rr / bb))
+        return x, r, p, rz_new, rr, it, hist
 
-    state = (x, r, p, rz, res0, jnp.asarray(0, jnp.int32), history)
-    x, r, p, rz, rel, it, history = jax.lax.while_loop(cond, body, state)
-    return PCGResult(x=x, iters=it, rel_res=rel, history=history)
+    state = (x, r, p, rz, rr, jnp.asarray(0, jnp.int32), history)
+    x, r, p, rz, rr, it, history = jax.lax.while_loop(cond, body, state)
+    return PCGResult(x=x, iters=it, rel_res=jnp.sqrt(rr / bb),
+                     history=history)
 
 
-def pcg_fixed_iters(matvec, b, x0=None, precond=None, n_iters: int = 50):
+def pcg_masked(matvec, b, x0=None, precond=None, tol=1e-3,
+               max_iters: int = 50) -> PCGResult:
+    """Fixed-shape masked-update PCG with early exit (no history buffer).
+
+    Same update rule as ``pcg`` but every state update is explicitly gated
+    on the lane's own ``active`` flag, so a converged instance's (x, r, p)
+    are frozen rather than merely unread.  Under ``jax.vmap`` the
+    ``while_loop`` runs until EVERY lane converged (or ``max_iters``) —
+    finished lanes ride along as no-ops, which is what makes co-batched
+    results bit-identical to solo solves.  ``tol`` may be a traced scalar.
+    """
+    if precond is None:
+        precond = lambda r: r
+    x = jnp.zeros_like(b) if x0 is None else x0
+
+    bb = jnp.vdot(b, b)
+    bb = jnp.where(bb > 0, bb, 1.0)
+    tol2 = jnp.asarray(tol, b.dtype) ** 2 * bb
+
+    r = b - matvec(x)
+    z = precond(r)
+    p = z
+    rz = jnp.vdot(r, z)
+    rr = jnp.vdot(r, r)
+
+    def cond(state):
+        _, _, _, _, rr, it = state
+        return jnp.logical_and(rr > tol2, it < max_iters)
+
+    def body(state):
+        x, r, p, rz, rr, it = state
+        active = rr > tol2
+        Ap = matvec(p)
+        pAp = jnp.vdot(p, Ap)
+        alpha = jnp.where(active, rz / jnp.where(pAp != 0, pAp, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = precond(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        p = jnp.where(active, z + beta * p, p)
+        rz = jnp.where(active, rz_new, rz)
+        rr = jnp.where(active, jnp.vdot(r, r), rr)
+        it = it + jnp.where(active, 1, 0).astype(jnp.int32)
+        return x, r, p, rz, rr, it
+
+    state = (x, r, p, rz, rr, jnp.asarray(0, jnp.int32))
+    x, r, p, rz, rr, it = jax.lax.while_loop(cond, body, state)
+    return PCGResult(x=x, iters=it, rel_res=jnp.sqrt(rr / bb),
+                     history=jnp.zeros((1,), dtype=b.dtype))
+
+
+def pcg_fixed_iters(matvec, b, x0=None, precond=None, n_iters: int = 50,
+                    record_history: bool = True):
     """PCG with a fixed iteration count via ``lax.scan`` — fully static
     control flow.  This is the variant the dry-run lowers (while_loop also
     compiles under pjit, but a static schedule gives a deterministic HLO for
-    the roofline term extraction)."""
+    the roofline term extraction).  ``record_history=False`` removes the
+    per-iteration residual-norm reduction from the program (the scanned
+    IRLS driver only consumes the FINAL relative residual)."""
     if precond is None:
         precond = lambda r: r
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -106,12 +182,15 @@ def pcg_fixed_iters(matvec, b, x0=None, precond=None, n_iters: int = 50):
         rz_new = jnp.vdot(r, z)
         beta = rz_new / jnp.where(rz != 0, rz, 1.0)
         p = z + beta * p
-        return (x, r, p, rz_new), jnp.linalg.norm(r)
+        y = jnp.linalg.norm(r) if record_history else None
+        return (x, r, p, rz_new), y
 
     (x, r, p, rz), res_hist = jax.lax.scan(step, (x, r, p, rz), None,
                                            length=n_iters)
     b_norm = jnp.linalg.norm(b)
     b_norm = jnp.where(b_norm > 0, b_norm, 1.0)
+    history = (res_hist / b_norm if record_history
+               else jnp.zeros((1,), dtype=b.dtype))
     return PCGResult(x=x, iters=jnp.asarray(n_iters, jnp.int32),
                      rel_res=jnp.linalg.norm(r) / b_norm,
-                     history=res_hist / b_norm)
+                     history=history)

@@ -20,7 +20,10 @@ IRLS → rounding → ``SolveResult`` uniformly for three backends:
               (adaptive PCG stop, full
               diagnostics; paper Table 2)
   "scanned"   one jitted lax.scan program     no          yes (vmap)
-              (fixed PCG schedule)
+              (fixed PCG schedule, or the
+              convergence-masked early-exit
+              one under cfg.irls_tol /
+              cfg.adaptive_tol)
   "sharded"   shard_map SPMD program over     no          no
               the device mesh (§3.3)
 
@@ -241,6 +244,9 @@ class SolveResult(NamedTuple):
     residuals: Optional[np.ndarray]       # scanned/sharded PCG residual trace
     timings: Dict[str, float]             # per-phase seconds
     backend: str
+    pcg_iters: Optional[np.ndarray] = None  # scanned: PCG iterations spent
+                                            # per IRLS iteration (0 once the
+                                            # adaptive mask froze the lane)
 
     @property
     def cut_value(self) -> float:
@@ -303,12 +309,14 @@ class MinCutSession:
                              "backend (scanned/sharded run a fixed cold "
                              "schedule)")
         timings: Dict[str, float] = {}
+        pcg_iters = None
         t0 = time.perf_counter()
         if backend == "host":
             v, diag, rels = self._solve_host(cfg, weights, warm_from,
                                              collect_voltages, timings)
         elif backend == "scanned":
-            v, diag, rels = self._solve_scanned(cfg, weights, timings)
+            v, diag, rels, pcg_iters = self._solve_scanned(cfg, weights,
+                                                           timings)
         else:
             v, diag, rels = self._solve_sharded(cfg, weights, timings)
         timings["irls"] = time.perf_counter() - t0 - timings.get("setup", 0.0)
@@ -320,7 +328,8 @@ class MinCutSession:
             timings["rounding"] = time.perf_counter() - t1
         timings["total"] = time.perf_counter() - t0
         return SolveResult(voltages=v, cut=cut, diagnostics=diag,
-                           residuals=rels, timings=timings, backend=backend)
+                           residuals=rels, timings=timings, backend=backend,
+                           pcg_iters=pcg_iters)
 
     def solve_batch(self, weights_batch: Sequence[WeightsLike],
                     rounding: Optional[str] = "two_level",
@@ -359,7 +368,7 @@ class MinCutSession:
                         for w in ws_run])
         CT = jnp.stack([jnp.asarray(prob.to_reordered(w.c_t), dtype=dtype)
                         for w in ws_run])
-        V, RELS = run(C, CS, CT)
+        V, RELS, ITERS = run(C, CS, CT)
         V = np.asarray(V)
         t_irls = time.perf_counter() - t0
         out = []
@@ -374,7 +383,7 @@ class MinCutSession:
                 residuals=np.asarray(RELS[i]),
                 timings={"irls": t_irls / len(ws),
                          "rounding": time.perf_counter() - t1},
-                backend="scanned"))
+                backend="scanned", pcg_iters=np.asarray(ITERS[i])))
         return out
 
     # -- backend drivers ------------------------------------------------------
@@ -445,8 +454,9 @@ class MinCutSession:
         run = self._get_scanned(cfg, dtype, batched=False)
         timings["setup"] = 0.0 if have else time.perf_counter() - t
         g = prob.device_graph(dtype, weights)
-        v, rels = run(g.c, g.c_s, g.c_t)
-        return prob.to_original(np.asarray(v)), None, np.asarray(rels)
+        v, rels, iters = run(g.c, g.c_s, g.c_t)
+        return (prob.to_original(np.asarray(v)), None, np.asarray(rels),
+                np.asarray(iters))
 
     def _solve_sharded(self, cfg, weights, timings):
         from repro.distributed.solver import ShardedSolver

@@ -333,7 +333,8 @@ class ShardedSolver:
                 mv = lambda x: psum_matvec(x, src, dst, r, r_s + r_t,
                                            n_pad, SOLVER_AXIS)
                 res = pcg_fixed_iters(mv, r_s, x0=x0, precond=lambda x: x / diag,
-                                      n_iters=cfg.pcg_max_iters)
+                                      n_iters=cfg.pcg_max_iters,
+                                      record_history=False)
                 return res.x, res.rel_res
 
             v, _ = solve_wls(jnp.zeros((n_pad,), c.dtype), cfg.eps, True,

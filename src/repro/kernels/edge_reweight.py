@@ -1,6 +1,9 @@
-"""Fused IRLS edge-reweight Pallas TPU kernel (paper eq. 4 → eq. 8).
+"""Fused IRLS edge-sweep Pallas TPU kernels (paper eq. 4 → eq. 8).
 
-One pass over the edge list computes, per edge,
+Two generations of fusion live here:
+
+``edge_reweight_pallas`` — one pass over the COO edge list computes, per
+edge,
 
     z_e = c_e · (v[src_e] − v[dst_e])         (gather, subtract, scale)
     w_e = sqrt(z_e² + ε²)                      (smoothed ℓ1 weight)
@@ -8,11 +11,25 @@ One pass over the edge list computes, per edge,
 
 The unfused jnp path materializes z, w and r separately (3 HBM round trips
 over m-length vectors); the kernel keeps everything in VREGs so the edge
-arrays stream through VMEM exactly once — the reweighting step is then
-bandwidth-bound at 3 reads + 1 write per edge, its roofline minimum.
+arrays stream through VMEM exactly once.  Diagonal assembly still needs a
+segment_sum scatter OUTSIDE the kernel — which is why the hot path moved on
+to the single-sweep kernel below.
 
-Tiling: grid over edge blocks (E = 4096 edges per step); ``v`` stays fully
-VMEM-resident like in ell_spmv (sharded upstream).
+``fused_ell_sweep_pallas`` — the whole per-IRLS-iteration system in ONE
+row-parallel sweep over the slot-major (ELL) edge data: reweight, the ELL
+value fill (vals = −r), the L̃ diagonal (lane reduction + terminal
+conductances) and the RHS (r_s) come out of a single read of
+``cols/c_ell/c_s/c_t/v``.  The edge→slot scatter happens once per SOLVE
+(core/laplacian.ell_edge_weights stages c into ``c_ell``); per iteration
+there is no scatter at all — each undirected edge is evaluated once per
+direction (z² is symmetric, both copies agree), trading ≤2× redundant FLOPs
+for a race-free, perfectly regular (R, k) tile that maps onto the VPU's
+8×128 lane grid.  Replaces four separate passes (reweight, fill_ell, diag
+segment_sum, rhs) of the unfused path.
+
+Tiling: ``edge_reweight`` grids over edge blocks (E = 4096 edges per step);
+``fused_ell_sweep`` grids over row blocks (R = 512 rows, like ell_spmv).
+``v`` stays fully VMEM-resident in both (sharded upstream).
 """
 from __future__ import annotations
 
@@ -21,6 +38,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .ell_spmv import ROWS_PER_BLOCK   # fused sweep shares the SpMV row tile
 
 EDGES_PER_BLOCK = 4096
 
@@ -62,3 +81,62 @@ def edge_reweight_pallas(src: jax.Array, dst: jax.Array, c: jax.Array,
         out_shape=jax.ShapeDtypeStruct((m,), v.dtype),
         interpret=interpret,
     )(src, dst, c, v, eps_arr)
+
+
+def _fused_ell_sweep_kernel(cols_ref, ce_ref, cs_ref, ct_ref, v_ref, eps_ref,
+                            vals_ref, diag_ref, rs_ref, rt_ref):
+    i = pl.program_id(0)
+    cols = cols_ref[...]                  # (R, k) i32
+    ce = ce_ref[...]                      # (R, k) slot-major edge weights
+    v = v_ref[...]                        # (n,)
+    eps = eps_ref[0]
+    rows = v_ref[pl.ds(i * ROWS_PER_BLOCK, ROWS_PER_BLOCK)]       # v[u]
+    z = ce * (rows[:, None] - jnp.take(v, cols, axis=0, fill_value=0))
+    r = (ce * ce) * jax.lax.rsqrt(z * z + eps * eps)
+    vals_ref[...] = -r
+    cs = cs_ref[...]
+    ct = ct_ref[...]
+    z_s = cs * (1.0 - rows)
+    z_t = ct * rows
+    r_s = jnp.where(cs > 0, (cs * cs) * jax.lax.rsqrt(z_s * z_s + eps * eps),
+                    0.0)
+    r_t = jnp.where(ct > 0, (ct * ct) * jax.lax.rsqrt(z_t * z_t + eps * eps),
+                    0.0)
+    rs_ref[...] = r_s
+    rt_ref[...] = r_t
+    diag_ref[...] = jnp.sum(r, axis=1) + r_s + r_t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_ell_sweep_pallas(cols: jax.Array, c_ell: jax.Array,
+                           c_s: jax.Array, c_t: jax.Array, v: jax.Array,
+                           eps: jax.Array, *, interpret: bool = False):
+    """(vals, diag, r_s, r_t) = one sweep over the slot-major edge data
+    (see ref.fused_ell_sweep_ref).  n must be a multiple of ROWS_PER_BLOCK
+    (the ops.py wrapper pads)."""
+    n, k = cols.shape
+    assert n % ROWS_PER_BLOCK == 0, n
+    grid = (n // ROWS_PER_BLOCK,)
+    eps_arr = jnp.asarray([eps], dtype=v.dtype)
+    row_spec = pl.BlockSpec((ROWS_PER_BLOCK,), lambda i: (i,))
+    tile_spec = pl.BlockSpec((ROWS_PER_BLOCK, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        _fused_ell_sweep_kernel,
+        grid=grid,
+        in_specs=[
+            tile_spec,                                  # cols
+            tile_spec,                                  # c_ell
+            row_spec,                                   # c_s
+            row_spec,                                   # c_t
+            pl.BlockSpec((n,), lambda i: (0,)),         # v (VMEM-resident)
+            pl.BlockSpec((1,), lambda i: (0,)),         # eps
+        ],
+        out_specs=[tile_spec, row_spec, row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), v.dtype),      # vals
+            jax.ShapeDtypeStruct((n,), v.dtype),        # diag
+            jax.ShapeDtypeStruct((n,), v.dtype),        # r_s
+            jax.ShapeDtypeStruct((n,), v.dtype),        # r_t
+        ],
+        interpret=interpret,
+    )(cols, c_ell, c_s, c_t, v, eps_arr)

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .block_diag_matmul import block_diag_matvec_pallas
-from .edge_reweight import EDGES_PER_BLOCK, edge_reweight_pallas
+from .edge_reweight import (EDGES_PER_BLOCK, edge_reweight_pallas,
+                            fused_ell_sweep_pallas)
 from .ell_spmv import ROWS_PER_BLOCK, ell_spmv_pallas
 
 
@@ -77,6 +78,24 @@ def edge_reweight(g, v: jax.Array, eps):
     return Reweighted(r=r, r_s=r_s, r_t=r_t, diag=deg + r_s + r_t)
 
 
+def fused_ell_sweep(cols: jax.Array, c_ell: jax.Array, c_s: jax.Array,
+                    c_t: jax.Array, v: jax.Array, eps):
+    """Single-sweep IRLS system build (kernel on TPU / interpret elsewhere):
+    (vals, diag, r_s, r_t) from one pass over the slot-major edge data.
+    Pads the row count to ROWS_PER_BLOCK; padded rows carry c_ell = c_s =
+    c_t = 0 → all outputs 0 there, sliced off before returning."""
+    n = v.shape[0]
+    cols_p = _pad_to(cols, ROWS_PER_BLOCK)
+    ce_p = _pad_to(c_ell, ROWS_PER_BLOCK)
+    cs_p = _pad_to(c_s, ROWS_PER_BLOCK)
+    ct_p = _pad_to(c_t, ROWS_PER_BLOCK)
+    v_p = _pad_to(v, ROWS_PER_BLOCK)
+    vals, diag, r_s, r_t = fused_ell_sweep_pallas(
+        cols_p, ce_p, cs_p, ct_p, v_p, jnp.asarray(eps, v.dtype),
+        interpret=_interpret())
+    return vals[:n], diag[:n], r_s[:n], r_t[:n]
+
+
 def block_diag_matvec(blocks: jax.Array, x: jax.Array) -> jax.Array:
     """Batched block-diagonal matvec; pads bs up to a 128 multiple so the
     MXU matmul dims are hardware-aligned."""
@@ -90,4 +109,4 @@ def block_diag_matvec(blocks: jax.Array, x: jax.Array) -> jax.Array:
 
 
 __all__ = ["ell_spmv", "edge_reweight", "edge_reweight_r",
-           "block_diag_matvec", "ref"]
+           "fused_ell_sweep", "block_diag_matvec", "ref"]

@@ -27,6 +27,27 @@ def edge_reweight_ref(src: jax.Array, dst: jax.Array, c: jax.Array,
     return (c * c) / jnp.sqrt(z * z + eps * eps)
 
 
+def fused_ell_sweep_ref(cols: jax.Array, c_ell: jax.Array, c_s: jax.Array,
+                        c_t: jax.Array, v: jax.Array, eps):
+    """Single-sweep system build (paper eq. 4 → eq. 8): per ELL slot holding
+    edge e = (u, x),  z = c_e (v[u]−v[x]),  r = c_e²/sqrt(z²+ε²), and
+
+        vals = −r,  diag[u] = Σ_lane r + r_s[u] + r_t[u],  rhs = r_s.
+
+    cols: i32[n, k], c_ell: f[n, k] (0 on padded slots), c_s/c_t/v: f[n]
+    → (vals f[n,k], diag f[n], r_s f[n], r_t f[n]).  Semantically identical
+    to core.laplacian.fused_ell_sweep (the jnp production fallback)."""
+    z = c_ell * (v[:, None] - v[cols])
+    r = (c_ell * c_ell) / jnp.sqrt(z * z + eps * eps)
+    z_s = c_s * (1.0 - v)
+    z_t = c_t * v
+    r_s = jnp.where(c_s > 0, (c_s * c_s) / jnp.sqrt(z_s * z_s + eps * eps),
+                    0.0)
+    r_t = jnp.where(c_t > 0, (c_t * c_t) / jnp.sqrt(z_t * z_t + eps * eps),
+                    0.0)
+    return -r, jnp.sum(r, axis=1) + r_s + r_t, r_s, r_t
+
+
 def block_diag_matvec_ref(blocks: jax.Array, x: jax.Array) -> jax.Array:
     """Batched block-diagonal matvec: y[p] = blocks[p] @ x[p].
 

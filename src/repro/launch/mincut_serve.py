@@ -54,6 +54,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-queue", type=int, default=256)
     ap.add_argument("--irls", type=int, default=12)
     ap.add_argument("--pcg-iters", type=int, default=40)
+    ap.add_argument("--irls-tol", type=float, default=1e-3,
+                    help="adaptive early-exit threshold (rel. fractional-cut "
+                         "change); the serving default")
+    ap.add_argument("--fixed-schedule", action="store_true",
+                    help="run the rigid n_irls × pcg_iters schedule instead "
+                         "of the adaptive early-exit one")
     ap.add_argument("--timeout", type=float, default=600.0,
                     help="per-future wait cap, seconds")
     ap.add_argument("--seed", type=int, default=0)
@@ -68,7 +74,9 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
     instances = build_topologies(args.topos, args.side, args.seed)
     cfg = IRLSConfig(n_irls=args.irls, pcg_max_iters=args.pcg_iters,
-                     precond="jacobi", n_blocks=1)
+                     precond="jacobi", n_blocks=1,
+                     irls_tol=0.0 if args.fixed_schedule else args.irls_tol,
+                     adaptive_tol=not args.fixed_schedule)
     server = MinCutServer(cfg=cfg, capacity=args.capacity,
                           max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms,

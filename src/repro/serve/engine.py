@@ -78,8 +78,14 @@ class MinCutServer:
     rounding    — default rounding registry name (None = voltages only)
     """
 
+    # server default: the adaptive early-exit scanned schedule — converged
+    # requests stop paying for matvecs, so co-batched easy instances don't
+    # ride along for the hard ones' full budget (see docs/API.md
+    # "Performance tuning"; irls_tol=0 restores the fixed schedule)
     def __init__(self, cfg: IRLSConfig = IRLSConfig(n_irls=20, n_blocks=1,
-                                                    precond="jacobi"),
+                                                    precond="jacobi",
+                                                    irls_tol=1e-3,
+                                                    adaptive_tol=True),
                  capacity: int = 8, max_batch: int = 8,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  rounding: Optional[str] = "two_level", seed: int = 0):

@@ -45,6 +45,34 @@ def test_edge_reweight_sweep(m, n, eps):
     np.testing.assert_allclose(r, r_ref, rtol=3e-5)
 
 
+@pytest.mark.parametrize("n,k", [(64, 4), (512, 8), (777, 9), (1100, 17)])
+@pytest.mark.parametrize("eps", [1e-6, 1e-2])
+def test_fused_ell_sweep_sweep(n, k, eps):
+    """The single-sweep system-build kernel vs the jnp oracle AND the
+    production jnp fallback (core.laplacian.fused_ell_sweep) — all three
+    must agree on (vals, diag, r_s, r_t)."""
+    from repro.core import laplacian as lap
+
+    rng = np.random.default_rng(n * k)
+    cols = rng.integers(0, n, size=(n, k)).astype(np.int32)
+    c_ell = rng.uniform(0.1, 3.0, size=(n, k)).astype(np.float32)
+    c_ell[rng.uniform(size=(n, k)) < 0.4] = 0.0       # padded slots
+    c_s = rng.uniform(0, 2, size=n).astype(np.float32)
+    c_t = rng.uniform(0, 2, size=n).astype(np.float32)
+    c_s[rng.uniform(size=n) < 0.3] = 0.0              # absent terminals
+    c_t[rng.uniform(size=n) < 0.3] = 0.0
+    v = rng.uniform(0, 1, size=n).astype(np.float32)
+    args = tuple(jnp.asarray(a) for a in (cols, c_ell, c_s, c_t, v))
+    out_k = ops.fused_ell_sweep(*args, eps)
+    out_r = ref.fused_ell_sweep_ref(*args, eps)
+    out_j = lap.fused_ell_sweep(*args, eps)
+    for yk, yr, yj in zip(out_k, out_r, out_j):
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   rtol=3e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(yj), np.asarray(yr),
+                                   rtol=3e-5, atol=1e-6)
+
+
 @pytest.mark.parametrize("p,bs", [(1, 16), (4, 100), (8, 128), (3, 200)])
 @pytest.mark.parametrize("dtype", [jnp.float32])
 def test_block_diag_matvec_sweep(p, bs, dtype):

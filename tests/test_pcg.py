@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.pcg import pcg, pcg_fixed_iters
+from repro.core.pcg import pcg, pcg_fixed_iters, pcg_masked
 from repro.core import precond as pc
 from repro.core import laplacian as lap
 from repro.core.incidence import device_graph_from_instance
@@ -108,3 +108,60 @@ def test_pcg_fixed_iters_matches_pcg():
     r1 = pcg(lambda x: A @ x, b, tol=0.0, max_iters=30)
     r2 = pcg_fixed_iters(lambda x: A @ x, b, n_iters=30)
     np.testing.assert_allclose(r1.x, r2.x, rtol=1e-4, atol=1e-5)
+
+
+def test_pcg_fixed_iters_no_history_same_solution():
+    A = jnp.asarray(_spd(40, 11), jnp.float32)
+    b = jnp.ones(40, jnp.float32)
+    r1 = pcg_fixed_iters(lambda x: A @ x, b, n_iters=25)
+    r2 = pcg_fixed_iters(lambda x: A @ x, b, n_iters=25,
+                         record_history=False)
+    np.testing.assert_allclose(r1.x, r2.x, rtol=0, atol=0)  # identical math
+    assert r1.history.shape == (25,) and r2.history.shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# masked early-exit PCG (the adaptive scanned driver's inner loop)
+# ---------------------------------------------------------------------------
+
+def test_pcg_masked_matches_pcg():
+    A = jnp.asarray(_spd(60, 9), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(60), jnp.float32)
+    r1 = pcg(lambda x: A @ x, b, tol=1e-5, max_iters=500)
+    r2 = pcg_masked(lambda x: A @ x, b, tol=1e-5, max_iters=500)
+    assert int(r1.iters) == int(r2.iters)
+    np.testing.assert_allclose(r1.x, r2.x, rtol=0, atol=0)  # same updates
+
+
+def test_pcg_masked_vmap_batch_matches_solo():
+    """The explicit update masking contract: a converged lane's state stops
+    changing, so co-batched (vmapped) solves are BIT-identical to solo ones
+    even though the batch keeps looping for the slowest lane."""
+    rng = np.random.default_rng(5)
+    As = jnp.asarray(np.stack([_spd(48, s, cond=c)
+                               for s, c in ((0, 5), (1, 2000), (2, 50))]),
+                     jnp.float32)
+    bs = jnp.asarray(rng.standard_normal((3, 48)), jnp.float32)
+    solve = lambda A, b: pcg_masked(lambda x: A @ x, b, tol=1e-5,
+                                    max_iters=400)
+    batch = jax.vmap(solve)(As, bs)
+    solo_iters = []
+    for i in range(3):
+        solo = solve(As[i], bs[i])
+        np.testing.assert_array_equal(np.asarray(batch.x[i]),
+                                      np.asarray(solo.x))
+        assert int(batch.iters[i]) == int(solo.iters)
+        solo_iters.append(int(solo.iters))
+    # the lanes genuinely differ in difficulty (otherwise this tests nothing)
+    assert len(set(solo_iters)) > 1
+
+
+def test_pcg_masked_inf_tol_is_noop():
+    """tol=inf is how the IRLS driver parks done lanes: zero iterations,
+    x0 passed through untouched."""
+    A = jnp.asarray(_spd(20, 3), jnp.float32)
+    b = jnp.ones(20, jnp.float32)
+    x0 = jnp.asarray(np.random.default_rng(0).standard_normal(20), jnp.float32)
+    res = pcg_masked(lambda x: A @ x, b, x0=x0, tol=jnp.inf, max_iters=50)
+    assert int(res.iters) == 0
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(x0))

@@ -12,7 +12,10 @@ from repro.serve import (MicroBatcher, MinCutServer, ServerOverloaded,
 
 from conftest import tiny_instance
 
-CFG = IRLSConfig(n_irls=8, pcg_max_iters=30, precond="jacobi", n_blocks=1)
+# the adaptive early-exit scanned schedule IS the serving default — the
+# whole end-to-end suite runs on it (irls_tol=0 would restore the fixed one)
+CFG = IRLSConfig(n_irls=8, pcg_max_iters=30, precond="jacobi", n_blocks=1,
+                 irls_tol=1e-3, adaptive_tol=True)
 
 
 def _weights(inst, scale=1.0):
