@@ -1,17 +1,11 @@
-"""Shared helpers for the paper-reproduction benchmarks."""
+"""Shared instance builders + timer for the paper-reproduction benchmarks.
+
+Persistence is NOT here: every bench returns its row and
+``benchmarks.run.write_payloads`` is the single writer (experiments/bench
+scratch copy + repo-root BENCH_<name>.json trajectory)."""
 from __future__ import annotations
 
-import json
-import os
 import time
-
-OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
-
-
-def save_json(name: str, payload: dict):
-    os.makedirs(OUT_DIR, exist_ok=True)
-    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
-        json.dump(payload, f, indent=1)
 
 
 def road_instance(side=100, seed=0):

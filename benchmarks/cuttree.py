@@ -1,0 +1,187 @@
+"""Cut-tree benchmark: build throughput, tree quality, query latency.
+
+Per topology family (2D segmentation grid, random-regular FlowImprove
+instance, n ≈ 200) it measures the three claims the subsystem makes:
+
+* **build throughput** — pair solves/sec of the wave-scheduled BATCHED
+  Gusfield build (speculative ``solve_batch`` waves, pow2-padded) vs the
+  same build solving one pair per wave (``batch=False``).  The batched
+  path must win ≥ 3× for the subsystem to have paid for itself.
+* **tree quality** — the exact-solver tree must reproduce the Dinic
+  oracle's ``min_cut(u, v)`` on every sampled pair (``exact_ok``), and the
+  IRLS-built tree after the exact certify/refine pass must stay within
+  ``QUALITY_RTOL`` of it (``quality_ok``); the raw IRLS error is reported
+  next to it so the refine win is visible.
+* **query latency** — µs per ``min_cut`` path-minimum query on the
+  finished tree (the number the ``CutTreeService`` serves at).
+
+  PYTHONPATH=src python -m benchmarks.cuttree            # full
+  PYTHONPATH=src python -m benchmarks.cuttree --smoke    # CI gate
+  PYTHONPATH=src python -m benchmarks.run cuttree        # harness
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+BENCH_NAME = "cuttree"
+
+QUALITY_RTOL = 1e-3     # refined-IRLS tree vs exact tree, sampled pairs
+EXACT_RTOL = 1e-8       # exact tree vs direct Dinic pair solves
+
+
+def _topologies(smoke: bool, seed: int):
+    from repro.graphs import generators as gen
+
+    if smoke:
+        g = gen.grid_2d(6, 6, seed=seed)
+        grid = gen.segmentation_instance(g, (6, 6), seed=seed + 1)
+        reg = gen.flow_improve_instance(
+            gen.random_regular(24, 4, seed=seed + 2), seed=seed + 3)
+    else:
+        g = gen.grid_2d(14, 14, seed=seed)
+        grid = gen.segmentation_instance(g, (14, 14), seed=seed + 1)
+        reg = gen.flow_improve_instance(
+            gen.random_regular(200, 4, seed=seed + 2), seed=seed + 3)
+    return [("grid", grid), ("regular", reg)]
+
+
+def _sampled_rel_err(tree, ref_tree, pairs):
+    errs = []
+    for u, v in pairs:
+        ref = ref_tree.min_cut(u, v)
+        errs.append(abs(tree.min_cut(u, v) - ref) / max(abs(ref), 1e-30))
+    return float(max(errs))
+
+
+def _one(name, inst, cfg, max_batch, n_sample, n_queries, rng):
+    from repro.core import MinCutSession, Problem
+    from repro.core.maxflow import max_flow
+    from repro.core.session import rebind_terminals
+    from repro.cuttree import build_cut_tree
+    from repro.graphs.structures import STInstance
+
+    prob = Problem.build(inst, n_blocks=1)
+    sess = MinCutSession(prob, cfg, backend="scanned")
+
+    # warmup: compile the batch buckets + the single-solve program once so
+    # both timed builds run at steady state
+    build_cut_tree(prob, session=sess, cfg=cfg, max_batch=max_batch)
+    sess.solve(weights=prob.rebind_terminals(0, 1), rounding="sweep")
+
+    tree_b = build_cut_tree(prob, session=sess, cfg=cfg, batch=True,
+                            max_batch=max_batch, refine=True)
+    tree_s = build_cut_tree(prob, session=sess, cfg=cfg, batch=False)
+    t0 = time.perf_counter()
+    tree_e = build_cut_tree(inst, solver="exact")
+    t_exact = time.perf_counter() - t0
+
+    mb, ms = tree_b.meta, tree_s.meta
+    pps_batched = mb["pairs_per_sec"]
+    pps_sequential = ms["pairs_per_sec"]
+
+    pairs = [tuple(int(x) for x in rng.choice(inst.n, 2, replace=False))
+             for _ in range(n_sample)]
+    exact_errs = []
+    for u, v in pairs:
+        w = rebind_terminals(inst, u, v)
+        direct = max_flow(STInstance(graph=inst.graph, s_weight=w.c_s,
+                                     t_weight=w.c_t)).value
+        exact_errs.append(abs(tree_e.min_cut(u, v) - direct)
+                          / max(abs(direct), 1e-30))
+    exact_ok = bool(max(exact_errs) <= EXACT_RTOL)
+    rel_raw = _sampled_rel_err(tree_s, tree_e, pairs)
+    rel_refined = _sampled_rel_err(tree_b, tree_e, pairs)
+    quality_ok = bool(rel_refined <= QUALITY_RTOL)
+
+    qpairs = [tuple(int(x) for x in rng.choice(inst.n, 2, replace=False))
+              for _ in range(n_queries)]
+    t0 = time.perf_counter()
+    tree_b.min_cut_batch(qpairs)
+    query_us = (time.perf_counter() - t0) / len(qpairs) * 1e6
+
+    return {
+        "topology": name, "n": int(inst.n), "m": int(inst.graph.m),
+        "pair_solves": int(mb["n_solves"] + ms["n_solves"]
+                           + tree_e.meta["n_solves"]),
+        "n_pairs": mb["n_pairs"],
+        "batched": {
+            "n_solves": mb["n_solves"], "n_waves": mb["n_waves"],
+            "t_solve_s": mb["t_solve_s"], "pairs_per_sec": pps_batched,
+            "refine_changed_edges": mb["refine_changed_edges"],
+            "t_refine_s": mb["t_refine_s"],
+        },
+        "sequential": {
+            "n_solves": ms["n_solves"], "t_solve_s": ms["t_solve_s"],
+            "pairs_per_sec": pps_sequential,
+        },
+        "batch_speedup": pps_batched / max(pps_sequential, 1e-12),
+        "t_build_exact_s": t_exact,
+        "exact_max_rel_vs_oracle": float(max(exact_errs)),
+        "exact_ok": exact_ok,
+        "irls_max_rel_raw": rel_raw,
+        "irls_max_rel_refined": rel_refined,
+        "quality_ok": quality_ok,
+        "global_min_cut_exact": tree_e.global_min_cut()[0],
+        "global_min_cut_irls": tree_b.global_min_cut()[0],
+        "query_us": query_us,
+        "sampled_pairs": n_sample,
+    }
+
+
+def run(smoke: bool = False, max_batch: int = 64, n_sample: int = 30,
+        n_queries: int = 2000, seed: int = 0):
+    from repro.core import IRLSConfig
+
+    if smoke:
+        max_batch, n_sample, n_queries = 16, 15, 200
+        cfg = IRLSConfig(n_irls=10, pcg_max_iters=25, precond="jacobi",
+                         n_blocks=1, irls_tol=1e-3, adaptive_tol=True)
+    else:
+        cfg = IRLSConfig(n_irls=16, pcg_max_iters=40, precond="jacobi",
+                         n_blocks=1, irls_tol=1e-3, adaptive_tol=True)
+
+    rng = np.random.default_rng(seed)
+    rows = [_one(name, inst, cfg, max_batch, n_sample, n_queries, rng)
+            for name, inst in _topologies(smoke, seed)]
+
+    derived = " ".join(
+        f"{r['topology']} {r['batch_speedup']:.1f}x batch"
+        f"{'' if r['exact_ok'] else '(EXACT MISS)'}"
+        f"{'' if r['quality_ok'] else '(QUALITY MISS)'}"
+        for r in rows) + (
+        f"; refined rel err ≤ "
+        f"{max(r['irls_max_rel_refined'] for r in rows):.1e}; "
+        f"query {np.mean([r['query_us'] for r in rows]):.0f}us")
+    return {
+        "name": BENCH_NAME,
+        "us_per_call": 1e6 * float(np.mean(
+            [r["batched"]["t_solve_s"] / r["batched"]["n_solves"]
+             for r in rows])),
+        "derived": derived,
+        "solves": sum(r["pair_solves"] for r in rows),
+        "topologies": rows,
+        "cfg": {"n_irls": cfg.n_irls, "pcg_max_iters": cfg.pcg_max_iters,
+                "max_batch": max_batch, "n_sample": n_sample,
+                "smoke": smoke, "quality_rtol": QUALITY_RTOL,
+                "exact_rtol": EXACT_RTOL},
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny instances + short schedule (the CI gate); "
+                         "still writes the repo-root BENCH_cuttree.json "
+                         "payload")
+    args = ap.parse_args()
+
+    from .run import write_payloads
+
+    row = run(smoke=args.smoke)
+    path = write_payloads(row)
+    print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    print(f"wrote {path}")

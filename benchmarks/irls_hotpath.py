@@ -29,7 +29,7 @@ import time
 
 import numpy as np
 
-from .common import grid3d_instance, grid_instance, road_instance, save_json
+from .common import grid3d_instance, grid_instance, road_instance
 
 BENCH_NAME = "irls"
 
@@ -95,14 +95,9 @@ def run(smoke: bool = False, repeat: int = 5, n_irls: int = 50,
             v["quality_ok"] = bool(v["cut_rel_diff"] <= QUALITY_RTOL)
         rows.append(row)
 
-    payload = {
-        "cfg": {"n_irls": n_irls, "pcg_max_iters": pcg_iters,
-                "repeat": repeat, "smoke": smoke,
-                "quality_rtol": QUALITY_RTOL},
-        "topologies": rows,
-    }
-    save_json("irls_hotpath", payload)
-
+    cfg_row = {"n_irls": n_irls, "pcg_max_iters": pcg_iters,
+               "repeat": repeat, "smoke": smoke,
+               "quality_rtol": QUALITY_RTOL}
     adls = [r["adaptive_fused"] for r in rows]
     derived = " ".join(
         f"{r['topology']} {r['adaptive_fused']['speedup']:.1f}x"
@@ -114,7 +109,7 @@ def run(smoke: bool = False, repeat: int = 5, n_irls: int = 50,
         "derived": derived,
         "solves": sum(r["solves"] for r in rows),
         "topologies": rows,
-        "cfg": payload["cfg"],
+        "cfg": cfg_row,
     }
 
 
@@ -127,9 +122,9 @@ if __name__ == "__main__":
                          "still writes the repo-root BENCH_irls.json payload")
     args = ap.parse_args()
 
-    from .run import write_root_payload
+    from .run import write_payloads
 
     row = run(smoke=args.smoke)
-    path = write_root_payload(row)
+    path = write_payloads(row)
     print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
     print(f"wrote {path}")

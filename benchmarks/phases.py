@@ -7,7 +7,7 @@ import time
 from repro.core import IRLSConfig, MinCutSession, Problem, sweep_cut, two_level
 from repro.graphs import partition as gp
 
-from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
+from .common import grid3d_instance, grid_instance, road_instance, timer
 
 
 def _one(name, inst, n_blocks=8, n_irls=50):
@@ -43,10 +43,10 @@ def run():
         out["road"] = _one("road", road_instance(72))
         out["grid2d"] = _one("grid2d", grid_instance(48))
         out["grid3d_26conn"] = _one("grid3d", grid3d_instance(10))
-    save_json("table2_phases", out)
     rg = out["grid2d"]
     return {
         "name": "table2_phases",
+        "topologies": out,
         "us_per_call": tt.dt * 1e6 / 3,
         "derived": f"grid2d: irls={rg['t_irls']:.1f}s "
                    f"two_level={rg['t_two_level']:.2f}s "

@@ -6,7 +6,7 @@ import numpy as np
 
 from repro.core import IRLSConfig, MinCutSession
 
-from .common import grid_instance, save_json, timer
+from .common import grid_instance, timer
 
 
 def run(side=64, n_irls=50):
@@ -22,13 +22,10 @@ def run(side=64, n_irls=50):
     for x in diag.voltages:
         frac_pol.append(float(((x <= 0.05) | (x >= 0.95)).mean()))
         deciles.append(np.quantile(x, np.linspace(0, 1, 11)).tolist())
-    payload = {
-        "n": inst.n, "polarized_fraction": frac_pol,
-        "voltage_deciles": deciles, "t_s": t.dt,
-    }
-    save_json("fig2_polarization", payload)
     return {
         "name": "fig2_polarization",
+        "n": inst.n, "polarized_fraction": frac_pol,
+        "voltage_deciles": deciles, "t_s": t.dt,
         "us_per_call": t.dt / max(1, n_irls) * 1e6,
         "derived": f"polarized l=1: {frac_pol[1]:.2f} → l={n_irls}: "
                    f"{frac_pol[-1]:.2f}",

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from repro.core import IRLSConfig, MinCutSession, max_flow, sweep_cut, two_level
 
-from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
+from .common import grid3d_instance, grid_instance, road_instance, timer
 
 
 def _one(inst):
@@ -25,9 +25,9 @@ def run():
         out["road"] = _one(road_instance(72))
         out["grid2d"] = _one(grid_instance(48))
         out["grid3d_26conn"] = _one(grid3d_instance(10))
-    save_json("table4_quality", out)
     return {
         "name": "table4_quality",
+        "topologies": out,
         "us_per_call": tt.dt * 1e6 / 3,
         "derived": " ".join(
             f"{k}: sweep={v['delta_sweep']:.1e} two={v['delta_two_level']:.1e}"

@@ -7,7 +7,7 @@ import glob
 import json
 import os
 
-from .common import save_json, timer
+from .common import timer
 
 DRYRUN_DIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
 
@@ -47,9 +47,9 @@ def run():
     dominants = {}
     for row in out["single"]:
         dominants[row["dominant"]] = dominants.get(row["dominant"], 0) + 1
-    save_json("roofline_table", out)
     return {
         "name": "roofline_table",
+        "tables": out,
         "us_per_call": t.dt * 1e6,
         "derived": f"cells: single={n_single} multi={n_multi} "
                    f"dominant={dominants}",

@@ -1,12 +1,14 @@
-"""Benchmark harness — one module per paper table/figure (+ serving).
+"""Benchmark harness — one module per paper table/figure (+ serving, cut trees).
 
   PYTHONPATH=src python -m benchmarks.run           # all
-  PYTHONPATH=src python -m benchmarks.run fig1 table3 serve
+  PYTHONPATH=src python -m benchmarks.run fig1 table3 serve cuttree
 
-Prints ``name,us_per_call,derived`` CSV (one row per benchmark), writes
-full JSON payloads to experiments/bench/, and records each row as a
-repo-root ``BENCH_<name>.json`` (deliberately timestamp-free so the files
-are diffable commit to commit — the cross-PR perf trajectory).
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark) and persists
+every row through ONE writer (``write_payloads``): the full payload goes to
+``experiments/bench/<name>.json`` (scratch detail, gitignored) and a
+timestamp-free copy to repo-root ``BENCH_<name>.json`` (deliberately
+diffable commit to commit — the cross-PR perf trajectory).  Bench modules
+return their row; they never touch disk themselves.
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import os
 import sys
 import traceback
 
-from . import (irls_hotpath, phases, polarization, quality, roofline,
+from . import (cuttree, irls_hotpath, phases, polarization, quality, roofline,
                scaling, serve, speedup, warm_start)
 
 BENCHES = {
@@ -28,19 +30,28 @@ BENCHES = {
     "roofline": roofline.run,
     "serve": serve.run,
     "irls": irls_hotpath.run,
+    "cuttree": cuttree.run,
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 _NON_TRAJECTORY_KEYS = ("timestamp", "date", "time")
 
 
-def write_root_payload(row: dict, root: str = REPO_ROOT) -> str:
-    """Write one benchmark row as repo-root ``BENCH_<name>.json``.
+def write_payloads(row: dict, root: str = REPO_ROOT,
+                   out_dir: str = OUT_DIR) -> str:
+    """THE benchmark writer — the only place bench payloads touch disk.
 
-    Everything the bench returned goes in, minus wall-clock timestamps, so
-    diffs between commits show only measurement changes (the timing fields
-    themselves still vary run to run, like any measurement).
+    Writes ``row`` verbatim to ``<out_dir>/<name>.json`` (full scratch
+    detail) and minus wall-clock timestamps to ``<root>/BENCH_<name>.json``
+    so diffs between commits show only measurement changes (the timing
+    fields themselves still vary run to run, like any measurement).
+    Returns the repo-root path.
     """
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{row['name']}.json"), "w") as f:
+        json.dump(row, f, indent=1, sort_keys=True)
+        f.write("\n")
     payload = {k: v for k, v in row.items() if k not in _NON_TRAJECTORY_KEYS}
     path = os.path.join(root, f"BENCH_{row['name']}.json")
     with open(path, "w") as f:
@@ -58,7 +69,7 @@ def main() -> None:
             row = BENCHES[n]()
             print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"",
                   flush=True)
-            write_root_payload(row)
+            write_payloads(row)
         except Exception as e:  # pragma: no cover
             failed.append(n)
             traceback.print_exc()

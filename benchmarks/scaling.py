@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core import IRLSConfig, MinCutSession
 
-from .common import grid_instance, save_json, timer
+from .common import grid_instance, timer
 
 _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -66,12 +66,11 @@ def run(side=48):
         times[nb] = t.dt
     # (b) collective bytes per shard count
     comm = {p: _collective_bytes_at(p, side) for p in (2, 4, 8)}
-    payload = {"n": inst.n, "irls_time_vs_blocks": times,
-               "per_shard_costs_vs_p": comm}
-    save_json("fig3_scaling", payload)
     best = min(times, key=times.get)
     return {
         "name": "fig3_scaling",
+        "n": inst.n, "irls_time_vs_blocks": times,
+        "per_shard_costs_vs_p": comm,
         "us_per_call": times[best] * 1e6 / 10,
         "derived": f"best blocks={best} "
                    f"({times[2]/times[best]:.2f}x vs 2 blocks); "

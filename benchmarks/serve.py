@@ -13,8 +13,6 @@ import time
 
 import numpy as np
 
-from .common import save_json
-
 BENCH_NAME = "serve"
 
 
@@ -76,15 +74,12 @@ def run(side=10, n_topos=2, n_requests=32, rates=(50.0, 400.0),
         cache_stats = server.cache.stats.snapshot()
 
     peak = max(points, key=lambda p: p["solves_per_sec"])
-    payload = {
+    return {
+        "name": BENCH_NAME,
         "side": side, "n_topos": n_topos, "n_requests": n_requests,
         "cfg": {"n_irls": n_irls, "pcg_max_iters": pcg_iters},
         "max_batch": max_batch, "max_wait_ms": max_wait_ms,
-        "load_points": points, "cache": cache_stats,
-    }
-    save_json("serve", payload)
-    return {
-        "name": BENCH_NAME,
+        "cache": cache_stats,
         "us_per_call": 1e6 / max(peak["solves_per_sec"], 1e-9),
         "derived": f"peak {peak['solves_per_sec']:.1f} solves/s @ "
                    f"{peak['offered_rate']:.0f} req/s offered; "

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 from repro.core import IRLSConfig, MinCutSession, max_flow
 
-from .common import grid3d_instance, grid_instance, road_instance, save_json, timer
+from .common import grid3d_instance, grid_instance, road_instance, timer
 
 
 def _one(inst, n_blocks=None):
@@ -39,9 +39,9 @@ def run():
         out["road"] = _one(road_instance(120))
         out["grid2d"] = _one(grid_instance(96))
         out["grid3d_26conn"] = _one(grid3d_instance(14))
-    save_json("table3_speedup", out)
     return {
         "name": "table3_speedup",
+        "topologies": out,
         "us_per_call": tt.dt * 1e6 / 3,
         "derived": " ".join(f"{k}:{v['speedup']:.1f}x(d={v['delta']:.1e})"
                             for k, v in out.items()),

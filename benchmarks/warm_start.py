@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.core import IRLSConfig, MinCutSession, Problem
 
-from .common import grid_instance, road_instance, save_json, timer
+from .common import grid_instance, road_instance, timer
 
 
 def _measure(inst, n_irls):
@@ -40,10 +40,9 @@ def run(n_irls=50):
     # polarizes almost immediately — both are reported.
     grid, t_grid = _measure(grid_instance(64), n_irls)
     road, _ = _measure(road_instance(72), n_irls)
-    payload = {"grid2d": grid, "road": road}
-    save_json("fig1_warm_start", payload)
     return {
         "name": "fig1_warm_start",
+        "grid2d": grid, "road": road,
         "us_per_call": t_grid / max(1, n_irls) * 1e6,
         "derived": f"grid: warm={grid['warm_total']}it "
                    f"cold={grid['cold_total']}it "

@@ -16,7 +16,7 @@ from .irls import IRLSConfig, IRLSDiagnostics, solve, solve_scanned
 from .maxflow import MaxFlowResult, max_flow, min_cut_indicator, min_cut_value
 from .rounding import RoundingResult, round_voltages, sweep_cut, two_level
 from .session import (MinCutSession, Problem, SolveResult, Weights,
-                      as_weights, topology_fingerprint)
+                      as_weights, rebind_terminals, topology_fingerprint)
 from .cheeger import CheegerEstimate, cheeger_lambda2, phi_of_cut
 
 

@@ -75,7 +75,7 @@ WeightsLike = Union["Weights", STInstance, tuple]
 
 def check_weights_for(instance: STInstance, weights: WeightsLike) -> Weights:
     """Coerce + validate a weight assignment against ``instance``'s topology
-    (shape check only — no Problem needs to be built)."""
+    (shapes + terminal connectivity — no Problem needs to be built)."""
     w = as_weights(weights)
     n, m = instance.n, instance.graph.m
     if (w.c.shape[0], w.c_s.shape[0], w.c_t.shape[0]) != (m, n, n):
@@ -83,7 +83,61 @@ def check_weights_for(instance: STInstance, weights: WeightsLike) -> Weights:
             f"weights do not match the topology: got "
             f"c[{w.c.shape[0]}], c_s[{w.c_s.shape[0]}], "
             f"c_t[{w.c_t.shape[0]}]; expected c[{m}], c_s[{n}], c_t[{n}]")
+    for name, tw in (("c_s", w.c_s), ("c_t", w.c_t)):
+        if not np.any(np.asarray(tw) > 0):
+            raise ValueError(
+                f"{name} has no positive entry: a terminal with no edge "
+                f"into the graph makes the reduced Laplacian system "
+                f"singular (the IRLS iteration would fail deep inside PCG "
+                f"with NaNs); give at least one node a positive {name} "
+                f"weight — e.g. via rebind_terminals(instance, u, v)")
     return w
+
+
+def rebind_terminals(instance: STInstance, u: int, v: int,
+                     c: Optional[np.ndarray] = None,
+                     strength: Optional[float] = None) -> Weights:
+    """One-hot terminal rebinding: ``Weights`` whose only terminal edges are
+    s—``u`` and t—``v``, each with capacity ``strength``.
+
+    Any ``strength`` ≥ the u-v min cut of the non-terminal graph keeps the
+    terminal edges uncut, so the instance's min cut IS the u-v min cut of the
+    graph under ``c`` (default: the instance's own edge weights).  The
+    default strength is ``1 + min(d_c(u), d_c(v))`` — the weighted degree is
+    already an upper bound on the u-v min cut (cutting the singleton is a
+    candidate), and staying near the graph's own weight scale keeps the IRLS
+    conductances well-conditioned where a huge big-M pin would not.
+
+    The topology is untouched — rebinding a pair is JUST a weight change, so
+    every solve under the returned weights reuses the topology's partition,
+    plans and compiled steppers (``Problem.rebind_terminals`` /
+    ``repro.cuttree.pin_pair`` build all-pairs workloads on this).
+    """
+    n = instance.n
+    u, v = int(u), int(v)
+    if not (0 <= u < n and 0 <= v < n):
+        raise ValueError(f"terminal pair ({u}, {v}) out of range for n={n}")
+    if u == v:
+        raise ValueError(f"terminal pair must be distinct, got ({u}, {v})")
+    default_c = c is None
+    c = np.asarray(instance.graph.weight if default_c else c,
+                   dtype=np.float64)
+    if c.shape[0] != instance.graph.m:
+        raise ValueError(f"c has {c.shape[0]} edges; topology has "
+                         f"{instance.graph.m}")
+    if strength is None:
+        if default_c:
+            deg = instance.graph.weighted_degrees()
+        else:
+            deg = np.zeros(n, dtype=np.float64)
+            np.add.at(deg, np.asarray(instance.graph.src), c)
+            np.add.at(deg, np.asarray(instance.graph.dst), c)
+        strength = 1.0 + min(deg[u], deg[v])
+    c_s = np.zeros(n, dtype=np.float64)
+    c_t = np.zeros(n, dtype=np.float64)
+    c_s[u] = strength
+    c_t[v] = strength
+    return Weights(c=c, c_s=c_s, c_t=c_t)
 
 
 def topology_fingerprint(instance: STInstance) -> str:
@@ -187,6 +241,14 @@ class Problem:
     def check_weights(self, weights: WeightsLike) -> Weights:
         """Coerce + validate a weight override against this topology."""
         return check_weights_for(self.instance, weights)
+
+    def rebind_terminals(self, u: int, v: int,
+                         c: Optional[np.ndarray] = None,
+                         strength: Optional[float] = None) -> Weights:
+        """Weights that re-pin the terminals to the node pair (u, v) — a
+        pure weight change, so solves under them reuse every topology-level
+        artifact of this Problem (see ``rebind_terminals``)."""
+        return rebind_terminals(self.instance, u, v, c=c, strength=strength)
 
     # -- cached plans ---------------------------------------------------------
     def device_graph(self, dtype=jnp.float32,

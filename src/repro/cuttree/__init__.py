@@ -1,0 +1,22 @@
+"""Cut-tree subsystem: all-pairs min cut from n−1 batched pair solves.
+
+The solver stack amortizes everything per TOPOLOGY (partitions, plans,
+compiled steppers — ``topology_fingerprint`` excludes weights) and keeps
+terminals in the weight vectors, so rebinding the cut pair is just a weight
+change.  This package turns that into an all-pairs workload:
+
+    pairs.py     — ``pin_pair`` terminal rebinding (one-hot ``c_s``/``c_t``)
+    gusfield.py  — ``build_cut_tree``: wave-scheduled Gusfield construction
+                   driving ``MinCutSession.solve_batch`` (IRLS, batched,
+                   pow2-padded) or the exact Dinic oracle; optional exact
+                   certify/refine of IRLS-built trees
+    tree.py      — ``CutTree``: path-minimum pair queries, global min cut,
+                   certified partitions, JSON serialization
+
+Serving: ``repro.serve.CutTreeService`` caches finished trees per topology.
+CLI: ``python -m repro.launch.cut_tree``.  Benchmark: ``benchmarks/cuttree``
+(→ repo-root ``BENCH_cuttree.json``).  Reference: docs/API.md "Cut trees".
+"""
+from .gusfield import DEFAULT_CFG, build_cut_tree
+from .pairs import graph_cut_value, pin_pair, pin_pairs
+from .tree import CutTree, pack_side

@@ -14,11 +14,16 @@ The layer between the solver core (``repro.core``) and traffic:
                         queue/irls/rounding breakdown, throughput
                         counters, text dump (metrics.py)
     ServerOverloaded  — admission-control rejection (backpressure)
+    CutTreeService    — all-pairs min-cut queries from per-topology
+                        Gusfield cut trees, built once through the
+                        session cache and served from an LRU (cuttree.py)
 
-Traffic driver: ``python -m repro.launch.mincut_serve``.  Reference:
-docs/API.md "Serving".
+Traffic drivers: ``python -m repro.launch.mincut_serve`` (pair solves),
+``python -m repro.launch.cut_tree`` (cut trees).  Reference: docs/API.md
+"Serving" and "Cut trees".
 """
 from .batcher import MicroBatch, MicroBatcher, bucket_size
 from .cache import AdmissionController, CacheStats, ServerOverloaded, SessionCache
+from .cuttree import CutTreeService
 from .engine import MinCutServer
 from .metrics import ServeMetrics, percentile

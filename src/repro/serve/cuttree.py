@@ -1,0 +1,177 @@
+"""``CutTreeService`` — all-pairs min-cut queries served from cached trees.
+
+The pair-solve cost of a topology is paid ONCE: the service builds a
+Gusfield cut tree (n−1 batched IRLS solves through the shared
+``SessionCache`` machinery, optionally exact-refined) the first time a
+topology is queried, then answers every ``min_cut(u, v)`` /
+``global_min_cut()`` / ``partition(u, v)`` from the finished tree — pure
+array walks, microseconds, no solver in the loop.  Trees live in their own
+LRU keyed on the same topology content hash as the sessions; evicting a
+tree drops ~n²/8 bytes of stored cut sides while the registered instance
+stays, so an evicted topology rebuilds (at build cost) on its next query.
+
+    svc = CutTreeService(capacity=8, solver="irls", refine=True)
+    key = svc.register(instance)
+    svc.min_cut(key, u, v)          # ~µs after the first call built the tree
+    svc.global_min_cut(key)         # (value, certified side)
+    svc.stats()                     # build/query counters + latency p50/p99
+
+Thread-safety matches the rest of ``repro.serve``: callers may query from
+multiple threads; builds are serialized under the service lock.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict, deque
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.irls import IRLSConfig
+from repro.core.session import MinCutSession, Problem
+from repro.cuttree import CutTree, build_cut_tree
+from repro.cuttree.gusfield import DEFAULT_CFG
+from repro.graphs.structures import STInstance
+
+from .cache import CacheStats, SessionCache
+from .metrics import percentile
+
+
+class CutTreeService:
+    """Build-once, query-forever all-pairs min-cut front-end.
+
+    cfg       — IRLS config for tree builds (default: the adaptive
+                early-exit schedule, ``repro.cuttree.DEFAULT_CFG``)
+    capacity  — LRU capacity for BOTH the session cache and the tree cache
+    solver    — "irls" (batched, approximate, optionally refined) or
+                "exact" (Dinic per pair)
+    refine    — exact certify/refine pass after IRLS builds
+    """
+
+    def __init__(self, cfg: Optional[IRLSConfig] = None, capacity: int = 8,
+                 solver: str = "irls", refine: bool = True,
+                 rounding: str = "sweep", max_batch: int = 64,
+                 store_sides: bool = True, seed: int = 0):
+        if solver not in ("irls", "exact"):
+            raise ValueError(f"unknown solver {solver!r}; known: irls, exact")
+        self.cfg = cfg or DEFAULT_CFG
+        self.solver = solver
+        self.refine = bool(refine)
+        self.rounding = rounding
+        self.max_batch = int(max_batch)
+        self.store_sides = bool(store_sides)
+        self.seed = seed
+        self.sessions = SessionCache(capacity, self._build_session)
+        self._trees: "OrderedDict[str, CutTree]" = OrderedDict()
+        self._capacity = int(capacity)
+        self.tree_stats = CacheStats()
+        self._ever_built: set = set()
+        self._lock = threading.RLock()
+        # sliding window: queries are ~µs and unbounded in count, so keep
+        # percentiles over the most recent window instead of growing forever
+        self._query_s: "deque[float]" = deque(maxlen=4096)
+        self._queries = 0
+        self._pair_solves = 0
+        self._build_s_total = 0.0
+
+    # -- topology lifecycle ----------------------------------------------------
+    def register(self, instance: STInstance) -> str:
+        """Register a topology; returns its content-hash key."""
+        return self.sessions.register(instance)
+
+    def _build_session(self, instance: STInstance) -> MinCutSession:
+        prob = Problem.build(instance, n_blocks=1, seed=self.seed)
+        return MinCutSession(prob, self.cfg, backend="scanned")
+
+    def _resolve(self, topo: Union[str, STInstance]) -> str:
+        if isinstance(topo, str):
+            if not self.sessions.known(topo):
+                raise KeyError(f"unknown topology key {topo!r}; register() "
+                               f"its instance first")
+            return topo
+        return self.register(topo)
+
+    def tree(self, topo: Union[str, STInstance]) -> CutTree:
+        """The topology's cut tree, building (and caching) it on first use."""
+        key = self._resolve(topo)
+        with self._lock:
+            t = self._trees.get(key)
+            if t is not None:
+                self.tree_stats.hits += 1
+                self._trees.move_to_end(key)
+                return t
+            self.tree_stats.misses += 1
+            if key in self._ever_built:
+                self.tree_stats.rebuilds += 1
+        # build OUTSIDE the lock — n−1 pair solves take seconds, and a
+        # build for one topology must not block cache-hit queries for
+        # others (same rule as SessionCache.get).  Two threads racing the
+        # same cold key both build; the last insert wins — wasted work,
+        # never a wrong answer.
+        t0 = time.perf_counter()
+        if self.solver == "irls":
+            sess = self.sessions.get(key)
+            t = build_cut_tree(sess.problem, session=sess, cfg=self.cfg,
+                               solver="irls", rounding=self.rounding,
+                               max_batch=self.max_batch,
+                               refine=self.refine,
+                               store_sides=self.store_sides)
+        else:
+            t = build_cut_tree(self.sessions.instance(key), solver="exact",
+                               store_sides=self.store_sides)
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self._build_s_total += dt
+            self._pair_solves += t.meta["n_solves"]
+            self._trees[key] = t
+            self._ever_built.add(key)
+            while len(self._trees) > self._capacity:
+                self._trees.popitem(last=False)
+                self.tree_stats.evictions += 1
+            return t
+
+    # -- queries ---------------------------------------------------------------
+    def _timed(self, fn, *args):
+        t = self.tree(args[0])
+        t0 = time.perf_counter()
+        out = fn(t, *args[1:])
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self._queries += 1
+            self._query_s.append(dt)
+        return out
+
+    def min_cut(self, topo: Union[str, STInstance], u: int, v: int) -> float:
+        """All-pairs min-cut value between u and v, from the cached tree."""
+        return self._timed(lambda t, uu, vv: t.min_cut(uu, vv), topo, u, v)
+
+    def min_cut_batch(self, topo: Union[str, STInstance],
+                      pairs) -> np.ndarray:
+        return self._timed(lambda t, ps: t.min_cut_batch(ps), topo, pairs)
+
+    def partition(self, topo: Union[str, STInstance], u: int,
+                  v: int) -> Tuple[np.ndarray, bool]:
+        """(side, certified) bipartition separating u from v (u's side
+        True); see ``CutTree.partition``."""
+        return self._timed(lambda t, uu, vv: t.partition(uu, vv), topo, u, v)
+
+    def global_min_cut(self, topo: Union[str, STInstance]
+                       ) -> Tuple[float, np.ndarray]:
+        return self._timed(lambda t: t.global_min_cut(), topo)
+
+    # -- introspection ---------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            samples = list(self._query_s)
+            out: Dict[str, object] = {
+                "trees_cached": len(self._trees),
+                "tree_cache": self.tree_stats.snapshot(),
+                "sessions": self.sessions.stats.snapshot(),
+                "queries": self._queries,
+                "pair_solves": self._pair_solves,
+                "build_s_total": self._build_s_total,
+            }
+        for p in (50, 99):
+            out[f"query_p{p}_us"] = percentile(samples, p) * 1e6
+        return out

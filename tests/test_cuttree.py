@@ -1,0 +1,266 @@
+"""Cut-tree subsystem: pair rebinding, Gusfield builder, queries, service."""
+import itertools
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import IRLSConfig, MinCutSession, Problem
+from repro.core.maxflow import max_flow
+from repro.core.session import rebind_terminals
+from repro.cuttree import (CutTree, build_cut_tree, graph_cut_value,
+                           pin_pair, pin_pairs)
+from repro.graphs import generators as gen
+from repro.graphs.structures import STInstance
+from repro.serve import CutTreeService
+
+from conftest import tiny_instance
+
+CFG = IRLSConfig(n_irls=10, pcg_max_iters=30, precond="jacobi", n_blocks=1,
+                 irls_tol=1e-3, adaptive_tol=True)
+
+
+def small_grid():
+    g = gen.grid_2d(6, 6, seed=2)
+    return gen.segmentation_instance(g, (6, 6), seed=3)
+
+
+def direct_pair_cut(inst, u, v):
+    """Exact oracle for one rebound pair (value, source side)."""
+    w = rebind_terminals(inst, u, v)
+    res = max_flow(STInstance(graph=inst.graph, s_weight=w.c_s,
+                              t_weight=w.c_t))
+    return res.value, res.in_source[: inst.n]
+
+
+# ---------------------------------------------------------------------------
+# pair rebinding
+# ---------------------------------------------------------------------------
+
+def test_pin_pair_reuses_topology_plans():
+    """pin_pair output passes the Problem's weight gate and solves through
+    the session WITHOUT rebuilding topology state (same compiled stepper)."""
+    inst = tiny_instance(n=10, seed=0)
+    prob = Problem.build(inst, n_blocks=1)
+    sess = MinCutSession(prob, CFG, backend="scanned")
+    sess.solve(weights=pin_pair(prob, 0, 5), rounding="sweep")
+    n_steppers = len(sess._steppers)
+    res = sess.solve(weights=pin_pair(prob, 2, 7), rounding="sweep")
+    assert len(sess._steppers) == n_steppers     # no new compile per pair
+    assert res.timings["setup"] == 0.0
+    assert np.isfinite(res.cut_value)
+
+
+def test_pin_pairs_matches_pin_pair():
+    inst = tiny_instance(n=10, seed=1)
+    pairs = [(0, 3), (4, 9), (7, 1)]
+    many = pin_pairs(inst, pairs)
+    for (u, v), w in zip(pairs, many):
+        one = pin_pair(inst, u, v)
+        np.testing.assert_array_equal(w.c_s, one.c_s)
+        np.testing.assert_array_equal(w.c_t, one.c_t)
+        assert np.count_nonzero(w.c_s) == 1 and w.c_s[u] > 0
+        assert np.count_nonzero(w.c_t) == 1 and w.c_t[v] > 0
+
+
+# ---------------------------------------------------------------------------
+# exact Gusfield builder: flow equivalence for ALL pairs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(3))
+def test_exact_tree_all_pairs_match_oracle(seed):
+    inst = tiny_instance(n=12, seed=seed)
+    tree = build_cut_tree(inst, solver="exact")
+    assert tree.meta["n_pairs"] == 11 and tree.meta["n_solves"] == 11
+    for u, v in itertools.combinations(range(inst.n), 2):
+        expect, _ = direct_pair_cut(inst, u, v)
+        assert tree.min_cut(u, v) == pytest.approx(expect, rel=1e-8), (u, v)
+
+
+def test_exact_tree_global_min_cut_certified():
+    inst = tiny_instance(n=12, seed=5)
+    tree = build_cut_tree(inst, solver="exact")
+    value, side = tree.global_min_cut()
+    expect = min(direct_pair_cut(inst, u, v)[0]
+                 for u, v in itertools.combinations(range(inst.n), 2))
+    assert value == pytest.approx(expect, rel=1e-8)
+    # the returned partition ACHIEVES the value (certified cut)
+    assert graph_cut_value(inst, side) == pytest.approx(value, rel=1e-8)
+    assert 0 < side.sum() < inst.n
+
+
+def test_exact_tree_partition_separates_pair():
+    inst = tiny_instance(n=12, seed=6)
+    tree = build_cut_tree(inst, solver="exact")
+    for u, v in [(0, 5), (3, 11), (2, 7), (10, 1)]:
+        side, certified = tree.partition(u, v)
+        assert side[u] and not side[v]
+        cut = graph_cut_value(inst, side)
+        if certified:
+            assert cut == pytest.approx(tree.min_cut(u, v), rel=1e-8)
+        else:       # tree split: still a valid separator, value an upper bound
+            assert cut >= tree.min_cut(u, v) - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# IRLS builder: batched waves + exact certify/refine
+# ---------------------------------------------------------------------------
+
+def test_irls_batched_tree_refined_matches_exact():
+    """The IRLS-built tree, after the exact certify/refine pass, reproduces
+    the exact tree's min-cut values on every pair of a small grid."""
+    inst = small_grid()
+    t_ex = build_cut_tree(inst, solver="exact")
+    t_ir = build_cut_tree(inst, cfg=CFG, max_batch=8, refine=True)
+    assert t_ir.meta["batched"] and t_ir.meta["refined"]
+    assert t_ir.meta["n_solves"] >= t_ir.meta["n_pairs"] == inst.n - 1
+    # speculation keeps waves far below one-per-edge
+    assert t_ir.meta["n_waves"] < inst.n - 1
+    worst = max(abs(t_ir.min_cut(u, v) - t_ex.min_cut(u, v))
+                / max(abs(t_ex.min_cut(u, v)), 1e-30)
+                for u, v in itertools.combinations(range(inst.n), 2))
+    assert worst <= 1e-3
+    g_ir, _ = t_ir.global_min_cut()
+    g_ex, _ = t_ex.global_min_cut()
+    assert g_ir == pytest.approx(g_ex, rel=1e-3)
+
+
+def test_irls_sequential_baseline_no_speculation():
+    inst = tiny_instance(n=10, seed=2)
+    tree = build_cut_tree(inst, cfg=CFG, batch=False)
+    assert not tree.meta["batched"]
+    # exactly n−1 solver calls: no speculative waste on the baseline
+    assert tree.meta["n_solves"] == tree.meta["n_pairs"] == 9
+    assert sum(tree.meta["wave_sizes"]) == 9
+
+
+def test_refine_pins_tree_edges_to_oracle():
+    """After certify/refine every TREE edge weight equals the exact min cut
+    of its own pair (whatever the IRLS structure did)."""
+    inst = tiny_instance(n=12, seed=7)
+    tree = build_cut_tree(inst, cfg=CFG, max_batch=8, refine=True)
+    for i, p, w in tree.edges():
+        expect, _ = direct_pair_cut(inst, i, p)
+        assert w == pytest.approx(expect, rel=1e-9), (i, p)
+
+
+# ---------------------------------------------------------------------------
+# CutTree mechanics
+# ---------------------------------------------------------------------------
+
+def test_cut_tree_path_minimum_handmade():
+    #      0
+    #    5/ \2.5
+    #    1   3
+    #   3|
+    #    2
+    tree = CutTree(parent=[0, 0, 1, 0], weight=[np.inf, 5.0, 3.0, 2.5])
+    assert tree.min_cut(2, 0) == 3.0
+    assert tree.min_cut(1, 0) == 5.0
+    assert tree.min_cut(2, 3) == 2.5
+    assert tree.min_cut_edge(2, 1) == (3.0, 2)
+    value, side = tree.global_min_cut()
+    assert value == 2.5
+    np.testing.assert_array_equal(side, [False, False, False, True])
+    part, certified = tree.partition(2, 0)       # no stored sides
+    assert not certified
+    np.testing.assert_array_equal(part, [False, False, True, False])
+    assert tree.min_cut_batch([(2, 0), (2, 3)]).tolist() == [3.0, 2.5]
+
+
+def test_cut_tree_rejects_malformed():
+    with pytest.raises(ValueError, match="cycle"):
+        CutTree(parent=[0, 2, 1], weight=[np.inf, 1.0, 1.0])
+    with pytest.raises(ValueError, match="root"):
+        CutTree(parent=[1, 0], weight=[1.0, 1.0], root=0)
+    tree = CutTree(parent=[0, 0], weight=[np.inf, 1.0])
+    with pytest.raises(ValueError, match="undefined"):
+        tree.min_cut(1, 1)
+    with pytest.raises(ValueError, match="range"):
+        tree.min_cut(0, 2)
+
+
+def test_cut_tree_serialization_roundtrip(tmp_path):
+    inst = tiny_instance(n=10, seed=3)
+    tree = build_cut_tree(inst, solver="exact")
+    path = os.path.join(str(tmp_path), "tree.json")
+    tree.save(path)
+    back = CutTree.load(path)
+    np.testing.assert_array_equal(back.parent, tree.parent)
+    np.testing.assert_array_equal(back.sides, tree.sides)
+    assert back.meta["solver"] == "exact"
+    for u, v in itertools.combinations(range(inst.n), 2):
+        assert back.min_cut(u, v) == tree.min_cut(u, v)
+    # sides survive: partitions stay certified
+    s0, c0 = tree.partition(0, 5)
+    s1, c1 = back.partition(0, 5)
+    assert c0 == c1
+    np.testing.assert_array_equal(s0, s1)
+
+
+# ---------------------------------------------------------------------------
+# CutTreeService
+# ---------------------------------------------------------------------------
+
+def test_service_builds_once_then_serves_from_cache():
+    insts = [tiny_instance(n=10, seed=s) for s in (0, 1)]
+    svc = CutTreeService(cfg=CFG, capacity=2, solver="exact")
+    keys = [svc.register(i) for i in insts]
+    v = svc.min_cut(keys[0], 0, 5)
+    expect, _ = direct_pair_cut(insts[0], 0, 5)
+    assert v == pytest.approx(expect, rel=1e-8)
+    assert svc.tree_stats.misses == 1
+    assert svc.min_cut(keys[0], 0, 5) == v        # served from cache
+    svc.global_min_cut(keys[0])
+    svc.partition(keys[0], 2, 7)
+    assert svc.tree_stats.misses == 1 and svc.tree_stats.hits >= 3
+    stats = svc.stats()
+    assert stats["queries"] == 4
+    assert stats["pair_solves"] == 9
+    assert np.isfinite(stats["query_p50_us"])
+    with pytest.raises(KeyError, match="unknown topology"):
+        svc.min_cut("deadbeef", 0, 1)
+
+
+def test_service_lru_evicts_and_rebuilds_trees():
+    insts = [tiny_instance(n=8, seed=s) for s in range(3)]
+    svc = CutTreeService(cfg=CFG, capacity=2, solver="exact")
+    keys = [svc.register(i) for i in insts]
+    for k in keys:                                # 3 topologies, capacity 2
+        svc.min_cut(k, 0, 3)
+    assert svc.tree_stats.evictions == 1
+    svc.min_cut(keys[0], 0, 3)                    # evicted → rebuild
+    assert svc.tree_stats.rebuilds == 1
+    assert svc.stats()["trees_cached"] == 2
+
+
+def test_service_irls_refined_matches_oracle():
+    inst = tiny_instance(n=12, seed=4)
+    svc = CutTreeService(cfg=CFG, solver="irls", refine=True, max_batch=8)
+    key = svc.register(inst)
+    for u, v in [(0, 7), (3, 10), (5, 1)]:
+        expect, _ = direct_pair_cut(inst, u, v)
+        assert svc.min_cut(key, u, v) == pytest.approx(expect, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# cuttree benchmark → repo-root BENCH_cuttree.json
+# ---------------------------------------------------------------------------
+
+def test_cuttree_benchmark_emits_root_payload(tmp_path):
+    from benchmarks import cuttree as bench_ct
+    from benchmarks import run as bench_run
+
+    row = bench_ct.run(smoke=True, n_sample=5, n_queries=50)
+    path = bench_run.write_payloads(row, root=str(tmp_path),
+                                    out_dir=os.path.join(str(tmp_path), "b"))
+    assert os.path.basename(path) == "BENCH_cuttree.json"
+    payload = json.loads(open(path).read())
+    assert payload["name"] == "cuttree"
+    assert payload["solves"] > 0
+    for t in payload["topologies"]:
+        assert t["pair_solves"] > 0
+        assert t["exact_ok"] and t["quality_ok"]
+        assert t["batched"]["n_waves"] <= t["n_pairs"]
+    assert "timestamp" not in payload

@@ -216,7 +216,8 @@ def test_serve_benchmark_emits_root_payload(tmp_path):
     row = bench_serve.run(side=6, n_topos=2, n_requests=8, rates=(200.0,),
                           n_irls=4, pcg_iters=10, max_batch=4,
                           max_wait_ms=5.0)
-    path = bench_run.write_root_payload(row, root=str(tmp_path))
+    path = bench_run.write_payloads(row, root=str(tmp_path),
+                                    out_dir=os.path.join(str(tmp_path), "b"))
     assert os.path.basename(path) == "BENCH_serve.json"
     payload = json.loads(open(path).read())
     assert payload["name"] == "serve"

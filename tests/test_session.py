@@ -204,3 +204,47 @@ def test_unknown_backend_rejected(grid_instance):
     sess = MinCutSession(grid_instance, CFG)
     with pytest.raises(ValueError, match="unknown backend"):
         sess.solve(backend="nope")
+
+
+# ---------------------------------------------------------------------------
+# weight validation + terminal rebinding
+# ---------------------------------------------------------------------------
+
+def test_zero_terminal_weights_rejected(grid_instance):
+    """All-zero c_s / c_t makes the reduced Laplacian singular — reject with
+    a clear ValueError at check_weights time instead of an opaque NaN deep
+    inside PCG."""
+    prob = Problem.build(grid_instance, n_blocks=1)
+    good = _weights_of(grid_instance)
+    n = grid_instance.n
+    with pytest.raises(ValueError, match="c_s has no positive entry"):
+        prob.check_weights(Weights(good.c, np.zeros(n), good.c_t))
+    with pytest.raises(ValueError, match="c_t has no positive entry"):
+        prob.check_weights(Weights(good.c, good.c_s, np.zeros(n)))
+    # the same gate guards every solve path that takes a weight override
+    sess = MinCutSession(prob, IRLSConfig(n_irls=2, n_blocks=1,
+                                          precond="jacobi"),
+                         backend="scanned")
+    with pytest.raises(ValueError, match="no positive entry"):
+        sess.solve(weights=Weights(good.c, np.zeros(n), good.c_t))
+    with pytest.raises(ValueError, match="no positive entry"):
+        sess.solve_batch([good, Weights(good.c, good.c_s, np.zeros(n))])
+
+
+def test_rebind_terminals_one_hot(grid_instance):
+    """rebind_terminals pins the pair as the ONLY terminal edges, at a
+    strength that upper-bounds the pair's min cut, and passes validation."""
+    from repro.core import rebind_terminals
+
+    prob = Problem.build(grid_instance, n_blocks=1)
+    w = prob.rebind_terminals(3, 17)
+    assert np.count_nonzero(w.c_s) == 1 and w.c_s[3] > 0
+    assert np.count_nonzero(w.c_t) == 1 and w.c_t[17] > 0
+    deg = grid_instance.graph.weighted_degrees()
+    assert w.c_s[3] == pytest.approx(1.0 + min(deg[3], deg[17]))
+    assert w.c_t[17] == w.c_s[3]
+    prob.check_weights(w)                      # passes the terminal gate
+    with pytest.raises(ValueError, match="distinct"):
+        prob.rebind_terminals(3, 3)
+    with pytest.raises(ValueError, match="out of range"):
+        rebind_terminals(grid_instance, 0, grid_instance.n)
