@@ -31,6 +31,7 @@ BENCHES = {
     "serve": serve.run,
     "irls": irls_hotpath.run,
     "cuttree": cuttree.run,
+    "sharded": scaling.run_sharded,
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -12,6 +12,16 @@ derived structurally:
   (b) per-shard collective bytes vs p for the sharded halo solver (lower +
       HLO-walk at p = 2/4/8 in subprocesses) — the communication curve that
       bends the scaling at high p (paper: N-D grids stop scaling at 64).
+
+``run_sharded`` (repo-root ``BENCH_sharded.json``; CI gate via
+``python -m benchmarks.scaling --smoke``) is the DISTRIBUTED ADAPTIVE
+trajectory: on multi-device CPU (forced host device count) it solves grid
+and random-regular families through ``MinCutSession(backend="sharded")``
+under the fixed vs the convergence-masked adaptive schedule, asserting
+equal cuts, recording the total-PCG-iteration reduction the early exit
+buys, and checking — by counting all-reduce/all-gather ops in the lowered
+HLO's PCG loop bodies — that the masked schedule adds ZERO collectives per
+PCG step over the fixed baseline.
 """
 from __future__ import annotations
 
@@ -55,6 +65,117 @@ def _collective_bytes_at(p: int, side: int) -> dict:
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
+QUALITY_RTOL = 1e-3     # max rel. cut difference adaptive vs fixed sharded
+
+
+def _sharded_payload_at(p: int, side: int, n_reg: int, n_irls: int,
+                        pcg_iters: int, timeout: int = 1800) -> dict:
+    """Run the sharded fixed-vs-adaptive comparison in a subprocess with a
+    forced host device count (the parent's jax is already initialized with
+    one device)."""
+    code = textwrap.dedent(f"""
+        import json, time
+        import numpy as np
+        from repro.graphs import generators as gen
+        from repro.core import IRLSConfig, MinCutSession, Problem
+        from repro.distributed.solver import ShardedSolver
+        from repro.launch import hlo_analysis as ha
+
+        T, K, P = {n_irls}, {pcg_iters}, {p}
+        fixed = IRLSConfig(n_irls=T, pcg_max_iters=K)
+        adapt = IRLSConfig(n_irls=T, pcg_max_iters=K,
+                           irls_tol=1e-3, adaptive_tol=True)
+
+        g = gen.grid_2d({side}, {side}, seed=11)
+        fams = [("grid", gen.segmentation_instance(g, ({side}, {side}),
+                                                   seed=12)),
+                ("random_regular",
+                 gen.flow_improve_instance(gen.random_regular({n_reg}, 4,
+                                                              seed=13),
+                                           seed=14))]
+        rows, solves = [], 0
+        for name, inst in fams:
+            sess = MinCutSession(Problem.build(inst, n_blocks=P), fixed,
+                                 backend="sharded", precond_bs=32)
+            rf = sess.solve(cfg=fixed)          # first call pays compile
+            t0 = time.perf_counter(); rf = sess.solve(cfg=fixed)
+            tf = time.perf_counter() - t0
+            ra = sess.solve(cfg=adapt)
+            t0 = time.perf_counter(); ra = sess.solve(cfg=adapt)
+            ta = time.perf_counter() - t0
+            solves += 4
+            itf, ita = int(rf.pcg_iters.sum()), int(ra.pcg_iters.sum())
+            rel = (abs(ra.cut_value - rf.cut_value)
+                   / max(abs(rf.cut_value), 1e-30))
+            rows.append(dict(
+                family=name, n=int(inst.n), m=int(inst.graph.m),
+                cut_fixed=float(rf.cut_value), cut_adaptive=float(ra.cut_value),
+                cut_rel_diff=float(rel),
+                quality_ok=bool(rel <= {QUALITY_RTOL}),
+                pcg_iters_fixed=itf, pcg_iters_adaptive=ita,
+                iter_reduction=float(itf) / max(ita, 1),
+                converged_early=bool(int(ra.pcg_iters[-1]) == 0),
+                s_per_solve_fixed=tf, s_per_solve_adaptive=ta))
+
+        # collectives per PCG step (depth-2 while bodies of the lowered
+        # HLO), fixed vs adaptive — must be IDENTICAL: the masked schedule
+        # rides the same reductions
+        small_f = IRLSConfig(n_irls=3, pcg_max_iters=8)
+        small_a = IRLSConfig(n_irls=3, pcg_max_iters=8,
+                             irls_tol=1e-3, adaptive_tol=True)
+        counts = {{}}
+        for tag, cfg in (("fixed", small_f), ("adaptive", small_a)):
+            s = ShardedSolver(fams[0][1], cfg, schedule="halo",
+                              precond_bs=32)
+            body_rows = ha.while_loop_collectives(
+                s.lower().compile().as_text())
+            counts[tag] = sorted(r["direct"] for r in body_rows
+                                 if r["depth"] >= 2)
+        print(json.dumps(dict(
+            families=rows, solves=solves,
+            pcg_step_collectives=counts,
+            zero_extra_collectives=bool(
+                counts["fixed"] == counts["adaptive"]))))
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={p}",
+               PYTHONPATH=_SRC)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded bench subprocess failed:\n"
+                           f"{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def run_sharded(smoke: bool = False):
+    """Sharded adaptive-early-exit trajectory (BENCH_sharded.json)."""
+    if smoke:
+        p, side, n_reg, n_irls, pcg_iters = 2, 10, 64, 10, 15
+    else:
+        p, side, n_reg, n_irls, pcg_iters = 4, 16, 200, 50, 50
+    payload = _sharded_payload_at(p, side, n_reg, n_irls, pcg_iters)
+    fams = payload["families"]
+    derived = " ".join(
+        f"{f['family']} {f['iter_reduction']:.1f}x"
+        f"{'' if f['quality_ok'] else '(QUALITY MISS)'}"
+        for f in fams)
+    derived += (" PCG-iter reduction adaptive vs fixed, equal cut; "
+                f"0 extra coll/step={payload['zero_extra_collectives']}")
+    return {
+        "name": "sharded",
+        "us_per_call": 1e6 * float(np.mean(
+            [f["s_per_solve_adaptive"] for f in fams])),
+        "derived": derived,
+        "solves": payload["solves"],
+        "families": fams,
+        "pcg_step_collectives": payload["pcg_step_collectives"],
+        "zero_extra_collectives": payload["zero_extra_collectives"],
+        "cfg": {"p": p, "n_irls": n_irls, "pcg_max_iters": pcg_iters,
+                "smoke": smoke, "quality_rtol": QUALITY_RTOL},
+    }
+
+
 def run(side=48):
     inst = grid_instance(side)
     # (a) work reduction vs number of blocks (same solver, same tolerance)
@@ -80,3 +201,21 @@ def run(side=48):
                    f"flops/shard {comm[2].get('flops', 0)/1e6:.1f}→"
                    f"{comm[8].get('flops', 0)/1e6:.1f} MF",
     }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny instances + short schedule (the CI gate); "
+                         "still writes the repo-root BENCH_sharded.json "
+                         "payload")
+    args = ap.parse_args()
+
+    from .run import write_payloads
+
+    row = run_sharded(smoke=args.smoke)
+    path = write_payloads(row)
+    print(f"{row['name']},{row['us_per_call']:.1f},\"{row['derived']}\"")
+    print(f"wrote {path}")

@@ -1,0 +1,121 @@
+"""Backend-neutral IRLS adaptive-schedule state machine (early exit).
+
+One definition of "this instance has converged" shared by all three IRLS
+drivers (host, scanned, sharded) instead of three divergent copies:
+
+* **outer convergence** — the relative change of the fractional cut value
+  ``‖CBx‖₁`` must stay below ``cfg.irls_tol`` for ``cfg.irls_patience``
+  consecutive iterations (one flat reading is not convergence evidence on
+  slowly-creeping instances), and each of those readings only counts when
+  the inner system was actually *solved* (residual at the tight tolerance,
+  or the iteration cap saturated — no more accuracy left to buy at this
+  budget).  A loosely solved step that didn't move the objective is noise.
+* **inner tolerance** (``cfg.adaptive_tol``) — an Eisenstat–Walker-style
+  schedule: solve only as accurately as the outer iteration currently
+  deserves (``0.5 × change``), clipped to ``[tight, cfg.pcg_loose_tol]``
+  and monotone non-increasing, so a productive step can never loosen the
+  next one back into a no-op whose flat reading corrupts the convergence
+  signal.
+* **freezing** — once ``done``, the instance's inner tolerance becomes ∞
+  (``inner_tol``): the masked PCG exits at entry (0 iterations) and the
+  caller keeps the voltages frozen, so under ``jax.vmap`` a batch stops
+  paying for finished lanes and under ``shard_map`` every shard takes the
+  early exit off the SAME psum-reduced scalars (no shard can disagree).
+
+Everything here is elementwise jnp on scalars, so the same ``advance``
+works eagerly in the host Python loop, traced inside the scanned
+``lax.scan`` (vmapped or not), and inside a ``shard_map`` body where
+``frac``/``rel_res``/``iters`` are cross-shard-reduced (replicated)
+scalars.  The ``tight`` argument is the driver's tight inner tolerance:
+``cfg.pcg_tol`` for the host driver (its PCG stops on tolerance anyway),
+``cfg.pcg_tight_tol`` for the scanned/sharded fixed-shape schedules.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdaptiveState(NamedTuple):
+    """Per-instance (per-lane) early-exit state carried across iterations.
+
+    frac  : f[]    last fractional-cut reading ‖CBx‖₁
+    tol   : f[]    current inner (PCG) tolerance
+    small : i32[]  consecutive sub-``irls_tol`` qualified readings
+    done  : bool[] converged — freeze the instance from here on
+    """
+
+    frac: jax.Array
+    tol: jax.Array
+    small: jax.Array
+    done: jax.Array
+
+
+def is_adaptive(cfg) -> bool:
+    """Does this config run the convergence-masked (early-exit) schedule?"""
+    return cfg.irls_tol > 0.0 or cfg.adaptive_tol
+
+
+def initial_tol(cfg, tight: float) -> float:
+    """First inner tolerance: loose while the reweighting is far from its
+    fixed point (``adaptive_tol``), else the driver's tight tolerance."""
+    return cfg.pcg_loose_tol if cfg.adaptive_tol else tight
+
+
+def init_state(cfg, frac0, tight: float, dtype=None) -> AdaptiveState:
+    """State after the initial WLS solve produced ``frac0 = ‖CBx⁰‖₁``."""
+    if dtype is None:
+        dtype = jnp.asarray(frac0).dtype
+    return AdaptiveState(
+        frac=jnp.asarray(frac0, dtype),
+        tol=jnp.asarray(initial_tol(cfg, tight), dtype),
+        small=jnp.asarray(0, jnp.int32),
+        done=jnp.asarray(False),
+    )
+
+
+def inner_tol(state: AdaptiveState, dtype) -> jax.Array:
+    """Tolerance for the NEXT inner solve.  A done instance's PCG must be a
+    no-op, not a discarded solve: ∞ makes the masked loop exit at entry
+    (0 iterations), which is what parks finished lanes at 0 work."""
+    return jnp.where(state.done, jnp.asarray(jnp.inf, dtype), state.tol)
+
+
+def advance(cfg, state: AdaptiveState, frac, rel_res, iters,
+            tight: float) -> AdaptiveState:
+    """Fold one finished IRLS iteration into the state.
+
+    ``frac`` is ‖CBx‖₁ of the (possibly frozen) post-iteration voltages,
+    ``rel_res``/``iters`` the inner solve's final relative residual and
+    iteration count.  Pure elementwise jnp — see module docstring.
+    """
+    change = (jnp.abs(frac - state.frac)
+              / jnp.maximum(jnp.abs(state.frac), 1e-30))
+    if cfg.adaptive_tol:
+        # Eisenstat–Walker, monotone: never loosen back — a productive step
+        # must not turn the next one into a no-op
+        tol_next = jnp.minimum(state.tol,
+                               jnp.clip(0.5 * change, tight,
+                                        cfg.pcg_loose_tol))
+        tol_next = jnp.where(state.done, state.tol, tol_next)
+    else:
+        tol_next = state.tol
+    if cfg.irls_tol > 0.0:
+        # "no objective movement" only counts when the inner system was
+        # solved (tight residual, or cap saturated — the fixed baseline
+        # spends the same budget and stops there too)
+        solved = jnp.logical_or(rel_res <= tight * 1.001,
+                                iters >= cfg.pcg_max_iters)
+        qual = jnp.logical_and(change <= cfg.irls_tol, solved)
+        small_new = jnp.where(state.done, state.small,
+                              jnp.where(qual, state.small + 1, 0))
+        done_new = jnp.logical_or(state.done,
+                                  small_new >= cfg.irls_patience)
+    else:
+        small_new = state.small
+        done_new = state.done
+    frac_new = jnp.where(state.done, state.frac, frac)
+    return AdaptiveState(frac=frac_new, tol=tol_next, small=small_new,
+                         done=done_new)

@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import adaptive as sched
 from . import laplacian as lap
 from . import precond as pc
 from .incidence import DeviceGraph, device_graph_from_instance, l1_objective, smoothed_objective
@@ -137,8 +138,10 @@ def eps_schedule_array(cfg: IRLSConfig) -> np.ndarray:
 
 
 def _adaptive(cfg: IRLSConfig) -> bool:
-    """Does this config run the convergence-masked (early-exit) schedule?"""
-    return cfg.irls_tol > 0.0 or cfg.adaptive_tol
+    """Does this config run the convergence-masked (early-exit) schedule?
+    (Alias of ``adaptive.is_adaptive`` — the shared state machine lives in
+    core/adaptive.py; host, scanned and sharded drivers all run it.)"""
+    return sched.is_adaptive(cfg)
 
 
 def _fused(cfg: IRLSConfig, ell_plan: Optional[lap.EllPlan]) -> bool:
@@ -268,16 +271,22 @@ def run_host_loop(stepper: _Stepper, cfg: IRLSConfig, n: int, dtype,
     ``(c, c_s, c_t)`` triple (REORDERED frame) overriding the stepper's
     baked-in weights.  Returns (device voltages, diag).
 
-    Adaptive knobs (host flavor of the scanned early exit): ``irls_tol > 0``
-    breaks out of the loop once the fractional cut value's relative change
-    drops below it; ``adaptive_tol`` feeds a per-iteration inner tolerance
-    (traced argument — no recompilation) to the stepper's PCG.
+    Adaptive knobs (host flavor of the scanned early exit, driven by the
+    SAME state machine — core/adaptive.py — run eagerly on the recorded
+    diagnostics): ``irls_tol > 0`` breaks out of the loop once the
+    fractional cut value's relative change stays below it; ``adaptive_tol``
+    feeds a per-iteration inner tolerance (traced argument — no
+    recompilation) to the stepper's PCG.
     """
     diag = IRLSDiagnostics(pcg_iters=[], pcg_residuals=[], objective=[],
                            l1_objective=[],
                            voltages=[] if collect_voltages else None)
     t1 = time.perf_counter()
-    tol_l = cfg.pcg_loose_tol if cfg.adaptive_tol else cfg.pcg_tol
+    adaptive = _adaptive(cfg)
+    tight = cfg.pcg_tol          # the host PCG stops on tolerance anyway
+    tol_l = sched.initial_tol(cfg, tight) if adaptive else cfg.pcg_tol
+    st = None                    # AdaptiveState, lazily seeded by the first
+                                 # fractional-cut reading
     c_ell = stepper.stage_edge_weights(weights)   # one scatter per SOLVE
     if v0 is None:
         v = jnp.zeros((n,), dtype=dtype)
@@ -285,34 +294,27 @@ def run_host_loop(stepper: _Stepper, cfg: IRLSConfig, n: int, dtype,
         v, iters, rel, s_eps, frac = stepper._step(v, cfg.eps, first=True,
                                                    weights=weights, tol=tol_l)
         _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
+        if adaptive:
+            st = sched.init_state(cfg, float(frac), tight)
     else:
         v = jnp.asarray(v0, dtype=dtype)
-    small = 0
     for l in range(1, cfg.n_irls + 1):
         eps_l = _eps_at(cfg, l)
         v, iters, rel, s_eps, frac = stepper._step(v, eps_l, first=False,
                                                    weights=weights, tol=tol_l,
                                                    c_ell=c_ell)
         _record(diag, v, iters, rel, s_eps, frac, collect_voltages)
-        fr = diag.l1_objective
-        if len(fr) < 2:
+        if not adaptive:
             continue
-        change = abs(fr[-1] - fr[-2]) / max(abs(fr[-2]), 1e-30)
+        if st is None:           # warm start: first reading seeds the state
+            st = sched.init_state(cfg, float(frac), tight)
+            continue
+        st = sched.advance(cfg, st, float(frac), float(rel), int(iters),
+                           tight)
         if cfg.adaptive_tol:
-            # Eisenstat–Walker, monotone: solve only as accurately as the
-            # outer iteration deserves, never loosen back into a no-op
-            tol_l = min(tol_l, float(np.clip(0.5 * change, cfg.pcg_tol,
-                                             cfg.pcg_loose_tol)))
-        if cfg.irls_tol > 0:
-            # a loosely solved step that didn't move the objective is not
-            # convergence evidence (a cap-saturated one is — no more
-            # accuracy left to buy at this budget); one flat reading isn't
-            # either: demand irls_patience of them in a row
-            solved = (float(rel) <= cfg.pcg_tol * 1.001
-                      or int(iters) >= cfg.pcg_max_iters)
-            small = small + 1 if (change <= cfg.irls_tol and solved) else 0
-            if small >= cfg.irls_patience:
-                break                  # converged: stop paying for matvecs
+            tol_l = float(st.tol)
+        if bool(st.done):
+            break                  # converged: stop paying for matvecs
     v.block_until_ready()
     diag.irls_time = time.perf_counter() - t1
     return v, diag
@@ -415,8 +417,7 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
         apply_M0 = _scanned_precond(cfg, rw0, matvec0, block_plan)
         b0 = lap.rhs(rw0)
         if adaptive:
-            tol0 = (cfg.pcg_loose_tol if cfg.adaptive_tol
-                    else cfg.pcg_tight_tol)
+            tol0 = sched.initial_tol(cfg, cfg.pcg_tight_tol)
             res0 = pcg_masked(matvec0, b0, precond=apply_M0, tol=tol0,
                               max_iters=cfg.pcg_max_iters)
         else:
@@ -441,60 +442,29 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
             return v, rels, iters
 
         def irls_step(carry, eps_l):
-            v, frac_prev, tol_prev, small, done = carry
+            v, st = carry
             matvec, b, rw = _iteration_system(g, cfg, ell_plan, c_ell,
                                               v, eps_l)
             apply_M = _scanned_precond(cfg, rw, matvec, block_plan)
             x0 = v if cfg.warm_start else jnp.zeros_like(v)
             # a done lane's PCG must be a no-op, not a discarded solve:
             # tol=∞ makes the masked loop exit at entry (0 iterations)
-            tol_l = jnp.where(done, jnp.asarray(jnp.inf, c.dtype), tol_prev)
+            tol_l = sched.inner_tol(st, c.dtype)
             res = pcg_masked(matvec, b, x0=x0, precond=apply_M, tol=tol_l,
                              max_iters=cfg.pcg_max_iters)
             # done lanes freeze: their state must not drift while other
             # instances of a vmapped batch keep iterating
-            v_new = jnp.where(done, v, res.x)
+            v_new = jnp.where(st.done, v, res.x)
             frac = l1_objective(g, v_new)
-            change = (jnp.abs(frac - frac_prev)
-                      / jnp.maximum(jnp.abs(frac_prev), 1e-30))
-            if cfg.adaptive_tol:
-                # Eisenstat–Walker, monotone: solve only as accurately as
-                # the outer iteration currently deserves, but never loosen
-                # back — a productive step must not turn the next one into
-                # a no-op whose flat reading corrupts the convergence signal
-                tol_next = jnp.minimum(tol_prev,
-                                       jnp.clip(0.5 * change,
-                                                cfg.pcg_tight_tol,
-                                                cfg.pcg_loose_tol))
-                tol_next = jnp.where(done, tol_prev, tol_next)
-            else:
-                tol_next = tol_prev
-            if cfg.irls_tol > 0.0:
-                # "no objective movement" only counts as convergence when
-                # the inner system was solved to the TIGHT tolerance (a
-                # cap-saturated step also counts — the fixed baseline
-                # spends the same budget and stops there too), and one flat
-                # reading isn't enough: demand irls_patience in a row
-                solved = jnp.logical_or(
-                    res.rel_res <= cfg.pcg_tight_tol * 1.001,
-                    res.iters >= cfg.pcg_max_iters)
-                qual = jnp.logical_and(change <= cfg.irls_tol, solved)
-                small_new = jnp.where(done, small,
-                                      jnp.where(qual, small + 1, 0))
-                done_new = jnp.logical_or(done,
-                                          small_new >= cfg.irls_patience)
-            else:
-                small_new = small
-                done_new = done
-            spent = jnp.where(done, 0, res.iters).astype(jnp.int32)
-            return ((v_new, frac, tol_next, small_new, done_new),
-                    (res.rel_res, spent))
+            spent = jnp.where(st.done, 0, res.iters).astype(jnp.int32)
+            st_new = sched.advance(cfg, st, frac, res.rel_res, res.iters,
+                                   cfg.pcg_tight_tol)
+            return (v_new, st_new), (res.rel_res, spent)
 
         frac0 = l1_objective(g, v0)
-        carry0 = (v0, frac0, jnp.asarray(tol0, c.dtype),
-                  jnp.asarray(0, jnp.int32), jnp.asarray(False))
-        (v, _, _, _, _), (rels, iters) = jax.lax.scan(irls_step, carry0,
-                                                      eps_sched)
+        carry0 = (v0, sched.init_state(cfg, frac0, cfg.pcg_tight_tol,
+                                       c.dtype))
+        (v, _), (rels, iters) = jax.lax.scan(irls_step, carry0, eps_sched)
         return v, rels, iters
 
     return run

@@ -181,6 +181,24 @@ def matvec_ell(cols: jax.Array, vals: jax.Array, diag: jax.Array,
 # Fused single-sweep reweight (reweight → ELL values → diagonal → RHS)
 # ---------------------------------------------------------------------------
 
+def terminal_conductances(c_s: jax.Array, c_t: jax.Array, v: jax.Array,
+                          eps) -> tuple[jax.Array, jax.Array]:
+    """Reweighted terminal conductances (eq. 4 on the terminal edges).
+
+    ``r_s = c_s² / sqrt((c_s(1−v))² + ε²)`` and the t-side analogue, with 0
+    where the capacity is 0 (absent terminal edges must not contribute
+    conductance).  Shared by the fused sweeps and the sharded solver bodies
+    — the ONE definition of this contraction outside the oracles.
+    """
+    z_s = c_s * (1.0 - v)
+    z_t = c_t * v
+    r_s = jnp.where(c_s > 0,
+                    (c_s * c_s) * jax.lax.rsqrt(z_s * z_s + eps * eps), 0.0)
+    r_t = jnp.where(c_t > 0,
+                    (c_t * c_t) * jax.lax.rsqrt(z_t * z_t + eps * eps), 0.0)
+    return r_s, r_t
+
+
 def ell_edge_weights(plan: EllPlan, c: jax.Array) -> jax.Array:
     """Scatter the edge weights ``c`` into the static ELL slots (once per
     SOLVE, not per IRLS iteration — the weights are fixed across the loop).
@@ -214,15 +232,18 @@ def fused_ell_sweep(cols: jax.Array, c_ell: jax.Array, c_s: jax.Array,
     jnp fallback every backend can run; the Pallas kernel
     (kernels/edge_reweight.fused_ell_sweep_pallas) computes the identical
     contraction with explicit VMEM tiling.
+
+    ``v`` may be LONGER than the row count ``n = cols.shape[0]`` — the
+    halo-aware form: the sharded solver passes the halo-extended vector
+    ``[v_local | exported boundary values]``, whose first ``n`` entries are
+    the local (row) voltages while ``cols`` may gather from the remote
+    tail.  With ``len(v) == n`` this degenerates to the single-host sweep.
     """
-    z = c_ell * (v[:, None] - v[cols])
+    n = cols.shape[0]
+    vr = v[:n]                       # row voltages (= v when not extended)
+    z = c_ell * (vr[:, None] - v[cols])
     r = (c_ell * c_ell) * jax.lax.rsqrt(z * z + eps * eps)
-    z_s = c_s * (1.0 - v)
-    z_t = c_t * v
-    r_s = jnp.where(c_s > 0,
-                    (c_s * c_s) * jax.lax.rsqrt(z_s * z_s + eps * eps), 0.0)
-    r_t = jnp.where(c_t > 0,
-                    (c_t * c_t) * jax.lax.rsqrt(z_t * z_t + eps * eps), 0.0)
+    r_s, r_t = terminal_conductances(c_s, c_t, vr, eps)
     diag = jnp.sum(r, axis=1) + r_s + r_t
     return -r, diag, r_s, r_t
 

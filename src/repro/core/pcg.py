@@ -28,7 +28,18 @@ Three variants share the same update rule:
 
 The matvec and the preconditioner are passed as closures so the same code
 path serves the single-host (ELL / Pallas), the oracle (dense) and the
-sharded (shard_map collective) implementations.
+sharded (shard_map collective) implementations.  The INNER PRODUCTS are
+closures too (``dot``/``dot2``): the default is a local ``jnp.vdot``, and
+the sharded solver passes cross-shard psum reductions
+(``distributed.collectives.psum_dots``) — so ``pcg_masked`` and
+``pcg_fixed_iters`` ARE the distributed PCG, not templates for one.
+``dot2(r, z) → (r·z, r·r)`` exists so the convergence bookkeeping can ride
+the same reduction as the CG recurrence: distributed callers fuse both
+scalars into ONE psum of a stacked pair, which is what keeps the masked
+(early-exit) schedule at zero extra collectives per step over the fixed
+one.  Every shard sees the same reduced scalars, so under ``shard_map`` the
+``while_loop`` trip count — the early exit — agrees on all shards by
+construction.
 """
 from __future__ import annotations
 
@@ -43,6 +54,18 @@ class PCGResult(NamedTuple):
     iters: jax.Array      # iterations taken (i32 scalar)
     rel_res: jax.Array    # final relative residual
     history: jax.Array    # f[max_iters+1] residual norms (NaN-padded)
+
+
+def _resolve_dots(dot, dot2):
+    """Default inner products: local vdot; ``dot2`` from ``dot`` (two
+    reductions — XLA fuses them locally; distributed callers supply a
+    genuinely fused single-psum version)."""
+    if dot is None:
+        dot = lambda a, b: jnp.vdot(a, b)
+    if dot2 is None:
+        def dot2(r, z, _dot=dot):
+            return _dot(r, z), _dot(r, r)
+    return dot, dot2
 
 
 def pcg(matvec: Callable[[jax.Array], jax.Array],
@@ -104,7 +127,7 @@ def pcg(matvec: Callable[[jax.Array], jax.Array],
 
 
 def pcg_masked(matvec, b, x0=None, precond=None, tol=1e-3,
-               max_iters: int = 50) -> PCGResult:
+               max_iters: int = 50, dot=None, dot2=None) -> PCGResult:
     """Fixed-shape masked-update PCG with early exit (no history buffer).
 
     Same update rule as ``pcg`` but every state update is explicitly gated
@@ -113,20 +136,26 @@ def pcg_masked(matvec, b, x0=None, precond=None, tol=1e-3,
     ``while_loop`` runs until EVERY lane converged (or ``max_iters``) —
     finished lanes ride along as no-ops, which is what makes co-batched
     results bit-identical to solo solves.  ``tol`` may be a traced scalar.
+
+    ``dot``/``dot2`` — inner-product closures (see module docstring).  With
+    the sharded psum dots, every scalar the stopping test reads is the SAME
+    all-reduce result on every shard, so the early exit is taken exactly
+    when all shards agree — and the ``dot2`` fusion keeps the step at the
+    fixed schedule's collective count.
     """
     if precond is None:
         precond = lambda r: r
+    dot, dot2 = _resolve_dots(dot, dot2)
     x = jnp.zeros_like(b) if x0 is None else x0
 
-    bb = jnp.vdot(b, b)
+    bb = dot(b, b)
     bb = jnp.where(bb > 0, bb, 1.0)
     tol2 = jnp.asarray(tol, b.dtype) ** 2 * bb
 
     r = b - matvec(x)
     z = precond(r)
     p = z
-    rz = jnp.vdot(r, z)
-    rr = jnp.vdot(r, r)
+    rz, rr = dot2(r, z)
 
     def cond(state):
         _, _, _, _, rr, it = state
@@ -136,16 +165,16 @@ def pcg_masked(matvec, b, x0=None, precond=None, tol=1e-3,
         x, r, p, rz, rr, it = state
         active = rr > tol2
         Ap = matvec(p)
-        pAp = jnp.vdot(p, Ap)
+        pAp = dot(p, Ap)
         alpha = jnp.where(active, rz / jnp.where(pAp != 0, pAp, 1.0), 0.0)
         x = x + alpha * p
         r = r - alpha * Ap
         z = precond(r)
-        rz_new = jnp.vdot(r, z)
+        rz_new, rr_new = dot2(r, z)
         beta = rz_new / jnp.where(rz != 0, rz, 1.0)
         p = jnp.where(active, z + beta * p, p)
         rz = jnp.where(active, rz_new, rz)
-        rr = jnp.where(active, jnp.vdot(r, r), rr)
+        rr = jnp.where(active, rr_new, rr)
         it = it + jnp.where(active, 1, 0).astype(jnp.int32)
         return x, r, p, rz, rr, it
 
@@ -156,41 +185,50 @@ def pcg_masked(matvec, b, x0=None, precond=None, tol=1e-3,
 
 
 def pcg_fixed_iters(matvec, b, x0=None, precond=None, n_iters: int = 50,
-                    record_history: bool = True):
+                    record_history: bool = True, dot=None, dot2=None):
     """PCG with a fixed iteration count via ``lax.scan`` — fully static
     control flow.  This is the variant the dry-run lowers (while_loop also
     compiles under pjit, but a static schedule gives a deterministic HLO for
     the roofline term extraction).  ``record_history=False`` removes the
     per-iteration residual-norm reduction from the program (the scanned
-    IRLS driver only consumes the FINAL relative residual)."""
+    IRLS driver only consumes the FINAL relative residual — and under the
+    sharded psum dots that is what makes the step exactly one ``p·Ap`` plus
+    one ``r·z`` reduction: squared-norm bookkeeping, sqrt only on exit)."""
     if precond is None:
         precond = lambda r: r
+    dot, dot2 = _resolve_dots(dot, dot2)
     x = jnp.zeros_like(b) if x0 is None else x0
     r = b - matvec(x)
     z = precond(r)
     p = z
-    rz = jnp.vdot(r, z)
+    rz = dot(r, z)
 
     def step(carry, _):
         x, r, p, rz = carry
         Ap = matvec(p)
-        pAp = jnp.vdot(p, Ap)
+        pAp = dot(p, Ap)
         alpha = rz / jnp.where(pAp != 0, pAp, 1.0)
         x = x + alpha * p
         r = r - alpha * Ap
         z = precond(r)
-        rz_new = jnp.vdot(r, z)
+        if record_history:
+            rz_new, rr = dot2(r, z)
+            y = jnp.sqrt(jnp.maximum(rr, 0.0))
+        else:
+            rz_new = dot(r, z)
+            y = None
         beta = rz_new / jnp.where(rz != 0, rz, 1.0)
         p = z + beta * p
-        y = jnp.linalg.norm(r) if record_history else None
         return (x, r, p, rz_new), y
 
     (x, r, p, rz), res_hist = jax.lax.scan(step, (x, r, p, rz), None,
                                            length=n_iters)
-    b_norm = jnp.linalg.norm(b)
+    bb = dot(b, b)
+    b_norm = jnp.sqrt(jnp.maximum(bb, 0.0))
     b_norm = jnp.where(b_norm > 0, b_norm, 1.0)
+    rr_fin = dot(r, r)
     history = (res_hist / b_norm if record_history
                else jnp.zeros((1,), dtype=b.dtype))
     return PCGResult(x=x, iters=jnp.asarray(n_iters, jnp.int32),
-                     rel_res=jnp.linalg.norm(r) / b_norm,
+                     rel_res=jnp.sqrt(jnp.maximum(rr_fin, 0.0)) / b_norm,
                      history=history)

@@ -20,12 +20,15 @@ IRLS → rounding → ``SolveResult`` uniformly for three backends:
               (adaptive PCG stop, full
               diagnostics; paper Table 2)
   "scanned"   one jitted lax.scan program     no          yes (vmap)
-              (fixed PCG schedule, or the
-              convergence-masked early-exit
-              one under cfg.irls_tol /
-              cfg.adaptive_tol)
   "sharded"   shard_map SPMD program over     no          no
               the device mesh (§3.3)
+
+All three backends run the SAME adaptive-schedule state machine
+(core/adaptive.py): the fixed paper schedule under default knobs, the
+convergence-masked early-exit one under ``cfg.irls_tol`` /
+``cfg.adaptive_tol`` — on the sharded backend the mask is driven by
+psum-reduced scalars, so every shard exits in the same step and
+``SolveResult.pcg_iters`` reports the per-iteration PCG spend there too.
 
 This is the serving-path design of FlowImprove-style workloads: a SEQUENCE
 of same-topology instances where only weights change — the second solve
@@ -306,9 +309,9 @@ class SolveResult(NamedTuple):
     residuals: Optional[np.ndarray]       # scanned/sharded PCG residual trace
     timings: Dict[str, float]             # per-phase seconds
     backend: str
-    pcg_iters: Optional[np.ndarray] = None  # scanned: PCG iterations spent
-                                            # per IRLS iteration (0 once the
-                                            # adaptive mask froze the lane)
+    pcg_iters: Optional[np.ndarray] = None  # scanned/sharded: PCG iterations
+                                            # spent per IRLS iteration (0 once
+                                            # the adaptive mask froze the lane)
 
     @property
     def cut_value(self) -> float:
@@ -380,7 +383,8 @@ class MinCutSession:
             v, diag, rels, pcg_iters = self._solve_scanned(cfg, weights,
                                                            timings)
         else:
-            v, diag, rels = self._solve_sharded(cfg, weights, timings)
+            v, diag, rels, pcg_iters = self._solve_sharded(cfg, weights,
+                                                           timings)
         timings["irls"] = time.perf_counter() - t0 - timings.get("setup", 0.0)
 
         cut = None
@@ -546,5 +550,5 @@ class MinCutSession:
             timings["setup"] = time.perf_counter() - t
         else:
             timings["setup"] = 0.0
-        v, rels = solver.solve()
-        return np.asarray(v), None, np.asarray(rels)
+        v, rels, iters = solver.solve()
+        return np.asarray(v), None, np.asarray(rels), np.asarray(iters)

@@ -6,13 +6,35 @@ flattened device mesh.  Communication per PCG step:
   psum schedule : 1 × all-reduce(n)      (baseline)
   halo schedule : 1 × all-gather(p·b_sh) (partition-aware, b_sh ≪ n/p)
 
-plus scalar psums for the CG dot products.  The block-Jacobi preconditioner
-is fully local to each shard — its sub-blocks are nested inside the
-partition parts, so applying it needs NO collectives (the paper's central
-argument for choosing block Jacobi, §4).
+plus scalar psums for the CG dot products (squared-norm bookkeeping: one
+``p·Ap`` reduction and one fused ``[r·z, r·r]`` pair reduction per step —
+sqrt only on exit).  The block-Jacobi preconditioner is fully local to each
+shard — its sub-blocks are nested inside the partition parts, so applying
+it needs NO collectives (the paper's central argument for block Jacobi,
+§4).
+
+Both schedules run the SAME iteration core as the host/scanned backends:
+
+* the PCG loops are ``core.pcg.pcg_fixed_iters`` / ``pcg_masked`` with the
+  cross-shard inner products plugged in (``collectives.psum_dots``), and
+* the adaptive early-exit schedule is ``core.adaptive`` — the convergence
+  mask, patience counter and Eisenstat–Walker inner tolerance of PR 3,
+  driven here by psum-reduced scalars: the fractional cut value is ONE
+  extra scalar all-reduce per IRLS iteration, every shard reads identical
+  reduced values, so all shards take the early exit in the same step and
+  the masked PCG adds ZERO collectives per step over the fixed schedule.
+
+Under ``cfg.fuse_edge_sweep`` (the default) the halo schedule restages the
+local copy list into a per-shard ELL layout (``spmv.build_halo_ell``) and
+builds each iteration's system — reweight → ELL values → diagonal → RHS —
+in ONE pass over the local edges with the exported boundary values from
+``halo_exchange`` (``core.laplacian.fused_ell_sweep``; the Pallas kernel
+under ``cfg.use_pallas``).  The psum schedule's edge pass routes through
+the same COO-flavored sweep (``spmv.coo_reweight``).
 
 The same body is used (a) for numerical execution in the multi-device CPU
-tests and (b) for the production-mesh dry-run (lower + compile only).
+tests and (b) for the production-mesh dry-run (lower + compile only; the
+abstract-plan path has no ELL staging and runs the unfused system build).
 """
 from __future__ import annotations
 
@@ -24,39 +46,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.irls import IRLSConfig
-from repro.core.pcg import pcg_fixed_iters
-from .collectives import SOLVER_AXIS, flat_mesh, shard_map
-from .spmv import HaloPlan, build_halo_plan, build_psum_plan, \
-    halo_exchange, make_halo_matvec, psum_matvec
-
-
-def _pcg_sharded(matvec, b, x0, precond, n_iters: int, axis: str, local_dot):
-    """Fixed-schedule PCG where every inner product is a cross-shard psum."""
-    def dot(a, c):
-        return jax.lax.psum(local_dot(a, c), axis)
-
-    r = b - matvec(x0)
-    z = precond(r)
-    p = z
-    rz = dot(r, z)
-
-    def step(carry, _):
-        x, r, p, rz = carry
-        Ap = matvec(p)
-        pAp = dot(p, Ap)
-        alpha = rz / jnp.where(pAp != 0, pAp, 1.0)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        z = precond(r)
-        rz_new = dot(r, z)
-        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
-        p = z + beta * p
-        return (x, r, p, rz_new), jnp.sqrt(jnp.maximum(dot(r, r), 0.0))
-
-    (x, r, p, rz), res = jax.lax.scan(step, (x0, r, p, rz), None,
-                                      length=n_iters)
-    return x, res
+from repro.core import adaptive as sched
+from repro.core import laplacian as lap
+from repro.core.irls import IRLSConfig, eps_schedule_array
+from repro.core.pcg import pcg_fixed_iters, pcg_masked
+from .collectives import SOLVER_AXIS, flat_mesh, psum_dots, shard_map
+from .spmv import (HaloPlan, build_halo_ell, build_halo_plan,
+                   build_psum_plan, coo_reweight, halo_exchange,
+                   halo_l1_local, make_ell_halo_matvec, make_halo_matvec,
+                   psum_matvec)
 
 
 class HaloBlockPlan(NamedTuple):
@@ -123,7 +121,8 @@ def abstract_halo_plans(n: int, m: int, p: int, boundary_frac: float,
     """Analytic plan SHAPES for dry-run lowering at scales where building a
     real instance on this host is pointless.  nl/ml/b_sh follow the same
     padding rules as build_halo_plan; boundary_frac comes from the real
-    partitioner's measured cut fraction on small instances of the family."""
+    partitioner's measured cut fraction on small instances of the family.
+    No ELL staging — the dry-run lowers the unfused system build."""
     pad8 = lambda x: max(8, -(-int(x) // 8) * 8)
     nl = pad8(-(-n // p))
     ml = pad8(2 * m / p * 1.05)
@@ -147,7 +146,16 @@ def abstract_halo_plans(n: int, m: int, p: int, boundary_frac: float,
 
 
 class ShardedSolver:
-    """Compiled sharded PIRMCut IRLS (halo or psum schedule)."""
+    """Compiled sharded PIRMCut IRLS (halo or psum schedule).
+
+    Runs the fixed ``n_irls × pcg_max_iters`` schedule by default, or the
+    convergence-masked adaptive one when the config sets any of the
+    early-exit knobs (``irls_tol`` / ``adaptive_tol`` — see
+    core/adaptive.py); ``cfg.eps_schedule`` is honored (precomputed into
+    the scan inputs, like the scanned backend).  ``solve`` returns
+    ``(v, rels, iters)`` where ``iters`` is the PCG spend per IRLS
+    iteration (parked at 0 once the adaptive mask froze the solve).
+    """
 
     def __init__(self, instance, cfg: IRLSConfig, mesh: Optional[Mesh] = None,
                  schedule: str = "halo", labels: Optional[np.ndarray] = None,
@@ -160,9 +168,13 @@ class ShardedSolver:
         self.p = int(np.prod(self.mesh.devices.shape))
         self._labels = labels
         self._precond_bs = precond_bs
+        self.ell = None        # HaloEllPlan when the fused sweep is active
         if plans is not None:
             if schedule == "halo":
-                self.plan, self.block_plan = plans
+                if len(plans) == 3:
+                    self.plan, self.block_plan, self.ell = plans
+                else:
+                    self.plan, self.block_plan = plans
             else:
                 (self.plan,) = plans
         elif schedule == "halo":
@@ -173,6 +185,8 @@ class ShardedSolver:
                 self._labels = labels = gp.partition_kway(instance.graph, self.p)
             self.plan = build_halo_plan(instance, self.p, labels=labels)
             self.block_plan = build_halo_block_plan(self.plan, precond_bs)
+            if cfg.fuse_edge_sweep:
+                self.ell = build_halo_ell(self.plan)
         elif schedule == "psum":
             self.plan = build_psum_plan(instance, self.p)
         else:
@@ -183,9 +197,10 @@ class ShardedSolver:
         """Refill the plan's weight arrays for a SAME-TOPOLOGY instance.
 
         The partition labels and the compiled SPMD program are reused — only
-        the host-side plan fill is redone (identical shapes, so the jit cache
-        hits).  The expensive phases (k-way partition, lowering, compile) are
-        skipped entirely; this is the session API's sharded serving path.
+        the host-side plan fill (and the ELL weight restaging, when fused)
+        is redone (identical shapes, so the jit cache hits).  The expensive
+        phases (k-way partition, lowering, compile) are skipped entirely;
+        this is the session API's sharded serving path.
         """
         if self.schedule == "halo":
             new_plan = build_halo_plan(instance, self.p, labels=self._labels)
@@ -195,6 +210,12 @@ class ShardedSolver:
                                  "(plan shapes changed)")
             self.plan = new_plan
             self.block_plan = build_halo_block_plan(new_plan, self._precond_bs)
+            if self.ell is not None:
+                new_ell = build_halo_ell(new_plan)
+                if new_ell.cols.shape != self.ell.cols.shape:
+                    raise ValueError("update_weights requires the same "
+                                     "topology (ELL staging shapes changed)")
+                self.ell = new_ell
         else:
             new_plan = build_psum_plan(instance, self.p)
             if (new_plan.n_pad, new_plan.src.shape) != \
@@ -210,46 +231,34 @@ class ShardedSolver:
         plan, bplan = self.plan, self.block_plan
         nl = plan.nl
         nb, bs = bplan.nb, bplan.bs
-        mv_local = make_halo_matvec(nl)
         use_block = cfg.precond in ("block_jacobi",)
         compression = self.halo_compression
+        adaptive = sched.is_adaptive(cfg)
+        fused = self.ell is not None
+        use_pallas = cfg.use_pallas
+        eps_np = eps_schedule_array(cfg)
+        n_base = 14
 
-        def body(heads, tails_ext, c, c_s, c_t, export, valid,
-                 copy_b, copy_i, copy_j, copy_id, copy_valid, node_b, node_s):
+        def body(*args):
+            loc = [a[0] for a in args]
             (heads, tails_ext, c, c_s, c_t, export, valid, copy_b, copy_i,
-             copy_j, copy_id, copy_valid, node_b, node_s) = (
-                a[0] for a in (heads, tails_ext, c, c_s, c_t, export, valid,
-                               copy_b, copy_i, copy_j, copy_id, copy_valid,
-                               node_b, node_s))
+             copy_j, copy_id, copy_valid, node_b, node_s) = loc[:n_base]
+            if fused:
+                ell_cols, ell_c, copy_row, copy_lane = loc[n_base:]
 
             def local_dot(a, b_):
                 return jnp.vdot(a * valid, b_ * valid)
 
-            def conductances(v, eps, initial):
-                if initial:
-                    r, r_s, r_t = c, c_s, c_t
-                else:
-                    ext = halo_exchange(v, export, axis, compression)
-                    z = c * (jnp.take(ext, heads, axis=0, fill_value=0.0)
-                             - jnp.take(ext, tails_ext, axis=0, fill_value=0.0))
-                    r = jnp.where(c > 0, (c * c) /
-                                  jnp.sqrt(z * z + eps * eps), 0.0)
-                    z_s = c_s * (1.0 - v)
-                    z_t = c_t * v
-                    r_s = jnp.where(c_s > 0, (c_s * c_s) /
-                                    jnp.sqrt(z_s * z_s + eps * eps), 0.0)
-                    r_t = jnp.where(c_t > 0, (c_t * c_t) /
-                                    jnp.sqrt(z_t * z_t + eps * eps), 0.0)
-                deg = jax.ops.segment_sum(r, heads, num_segments=nl)
-                diag = deg + r_s + r_t
-                diag = jnp.where(valid > 0, diag, 1.0)
-                return r, r_s, diag
+            dot, dot2 = psum_dots(axis, local_dot)
 
-            def make_precond(r, diag):
+            def exchange(x):
+                return halo_exchange(x, export, axis, compression)
+
+            def make_precond(r_copies, diag):
                 if not use_block:
                     return lambda x: x / diag
                 A = jnp.zeros((nb, bs, bs), dtype=diag.dtype)
-                rvals = r[copy_id] * copy_valid
+                rvals = r_copies[copy_id] * copy_valid
                 A = A.at[copy_b, copy_i, copy_j].add(-rvals)
                 A = A.at[node_b, node_s, node_s].add(
                     jnp.where(valid > 0, diag, 0.0))
@@ -267,36 +276,123 @@ class ShardedSolver:
                     return yb[node_b, node_s] * valid
                 return apply_M
 
-            def solve_wls(v, eps, initial, x0):
-                r, r_s, diag = conductances(v, eps, initial)
+            def system(v, eps, initial, ext):
+                """One iteration's (matvec, b, per-copy r, diag).
 
-                # y = diag·x − Σ_{copies head=u} r x_tail  (scatter is local;
-                # only the tail gather needs the halo all-gather)
-                def matvec(x):
-                    ext = halo_exchange(x, export, axis, compression)
-                    contrib = r * jnp.take(ext, tails_ext, axis=0,
-                                           fill_value=0.0)
-                    acc = jax.ops.segment_sum(contrib, heads, num_segments=nl)
-                    return diag * x - acc
-                M = make_precond(r, diag)
-                x, res = _pcg_sharded(matvec, r_s, x0, M, cfg.pcg_max_iters,
-                                      axis, local_dot)
-                return x * valid, res[-1]
+                Fused: the whole build is ONE row-parallel sweep over the
+                local ELL-staged edges with the halo-extended vector — the
+                halo-aware fused edge sweep.  Unfused (dry-run/abstract
+                plans, or ``fuse_edge_sweep=False``): the legacy per-copy
+                passes.  ``ext`` is ``halo_exchange(v)`` (unused when
+                ``initial`` — W⁰ = C needs no voltages).
+                """
+                if fused:
+                    if initial:
+                        r_s, r_t = c_s, c_t
+                        vals = -ell_c
+                        diag = jnp.sum(ell_c, axis=1) + r_s + r_t
+                    else:
+                        if use_pallas:
+                            from repro.kernels import ops as kops
+                            sweep = kops.fused_ell_sweep
+                        else:
+                            sweep = lap.fused_ell_sweep
+                        vals, diag, r_s, r_t = sweep(ell_cols, ell_c, c_s,
+                                                     c_t, ext, eps)
+                    diag = jnp.where(valid > 0, diag, 1.0)
+                    # gather-back for the block-Jacobi assembly (one
+                    # ml-element read against the sweep's 2m)
+                    r_copies = -vals[copy_row, copy_lane]
+                    mv_ell = make_ell_halo_matvec(ell_cols, vals, diag)
 
-            v0, _ = solve_wls(jnp.zeros((nl,), c.dtype), cfg.eps, True,
-                              jnp.zeros((nl,), c.dtype))
+                    def mv(x):
+                        return mv_ell(x, exchange(x))
+                    return mv, r_s, r_copies, diag
+                if initial:
+                    r, r_s, r_t = c, c_s, c_t
+                else:
+                    r = coo_reweight(heads, tails_ext, c, ext, eps,
+                                     use_pallas)
+                    r_s, r_t = lap.terminal_conductances(c_s, c_t,
+                                                         ext[:nl], eps)
+                deg = jax.ops.segment_sum(r, heads, num_segments=nl)
+                diag = deg + r_s + r_t
+                diag = jnp.where(valid > 0, diag, 1.0)
+                mv_halo = make_halo_matvec(nl)
 
-            def scan_step(v, _):
+                def mv(x):
+                    return mv_halo(exchange(x), heads, tails_ext, r, diag)
+                return mv, r_s, r, diag
+
+            def solve_wls(v, eps, initial, x0, tol, ext):
+                mv, b, r_copies, diag = system(v, eps, initial, ext)
+                M = make_precond(r_copies, diag)
+                if adaptive:
+                    res = pcg_masked(mv, b, x0=x0, precond=M, tol=tol,
+                                     max_iters=cfg.pcg_max_iters,
+                                     dot=dot, dot2=dot2)
+                else:
+                    res = pcg_fixed_iters(mv, b, x0=x0, precond=M,
+                                          n_iters=cfg.pcg_max_iters,
+                                          record_history=False,
+                                          dot=dot, dot2=dot2)
+                return res.x * valid, res.rel_res, res.iters
+
+            zeros = jnp.zeros((nl,), c.dtype)
+            eps_sched = jnp.asarray(eps_np, c.dtype)
+            tol0 = (sched.initial_tol(cfg, cfg.pcg_tight_tol) if adaptive
+                    else cfg.pcg_tol)
+            v0, _, _ = solve_wls(zeros, cfg.eps, True, zeros, tol0, None)
+
+            if not adaptive:
+                def scan_step(v, eps_l):
+                    x0 = v if cfg.warm_start else jnp.zeros_like(v)
+                    ext = exchange(v)
+                    v2, rel, _ = solve_wls(v, eps_l, False, x0, cfg.pcg_tol,
+                                           ext)
+                    return v2, rel
+
+                v, rels = jax.lax.scan(scan_step, v0, eps_sched)
+                iters = jnp.full((cfg.n_irls,), cfg.pcg_max_iters, jnp.int32)
+                return v[None], rels, iters
+
+            # adaptive: the state machine runs on psum-reduced scalars, so
+            # every shard takes the SAME early-exit decision.  The exchange
+            # of the post-iteration voltages powers BOTH the fractional-cut
+            # reduction and the next iteration's system build — the early
+            # exit adds one scalar psum per IRLS iteration and nothing per
+            # PCG step.
+            ext0 = exchange(v0)
+            frac0 = jax.lax.psum(
+                halo_l1_local(heads, tails_ext, c, c_s, c_t, v0, ext0), axis)
+            st0 = sched.init_state(cfg, frac0, cfg.pcg_tight_tol, c.dtype)
+
+            def scan_step(carry, eps_l):
+                v, ext, st = carry
+                tol_l = sched.inner_tol(st, c.dtype)
                 x0 = v if cfg.warm_start else jnp.zeros_like(v)
-                v2, rel = solve_wls(v, cfg.eps, False, x0)
-                return v2, rel
+                v2, rel, it = solve_wls(v, eps_l, False, x0, tol_l, ext)
+                # a done solve freezes: tol=∞ already parked its PCG at 0
+                # iterations, the where guards the warm_start=False path
+                v2 = jnp.where(st.done, v, v2)
+                ext2 = exchange(v2)
+                frac = jax.lax.psum(
+                    halo_l1_local(heads, tails_ext, c, c_s, c_t, v2, ext2),
+                    axis)
+                spent = jnp.where(st.done, 0, it).astype(jnp.int32)
+                st2 = sched.advance(cfg, st, frac, rel, it,
+                                    cfg.pcg_tight_tol)
+                return (v2, ext2, st2), (rel, spent)
 
-            v, rels = jax.lax.scan(scan_step, v0, None, length=cfg.n_irls)
-            return v[None], rels
+            (v, _, _), (rels, iters) = jax.lax.scan(scan_step,
+                                                    (v0, ext0, st0),
+                                                    eps_sched)
+            return v[None], rels, iters
 
+        n_in = n_base + (4 if fused else 0)
         fn = shard_map(body, mesh=self.mesh,
-                       in_specs=(P(SOLVER_AXIS),) * 14,
-                       out_specs=(P(SOLVER_AXIS), P()))
+                       in_specs=(P(SOLVER_AXIS),) * n_in,
+                       out_specs=(P(SOLVER_AXIS), P(), P()))
         self._raw_body = fn
         return jax.jit(fn)
 
@@ -305,62 +401,101 @@ class ShardedSolver:
         cfg = self.cfg
         plan = self.plan
         n_pad = plan.n_pad
+        axis = SOLVER_AXIS
+        adaptive = sched.is_adaptive(cfg)
+        use_pallas = cfg.use_pallas
+        eps_np = eps_schedule_array(cfg)
 
         def body(src, dst, c, c_s, c_t):
             src, dst, c = src[0], dst[0], c[0]
+            # v is REPLICATED here, so plain local dots already see the
+            # whole vector — the only collective per PCG step is the
+            # matvec's n-float all-reduce (psum_matvec)
 
             def conductances(v, eps, initial):
                 if initial:
                     r, r_s, r_t = c, c_s, c_t
                 else:
-                    z = c * (v[src] - v[dst])
-                    r = jnp.where(c > 0, (c * c) /
-                                  jnp.sqrt(z * z + eps * eps), 0.0)
-                    z_s = c_s * (1.0 - v)
-                    z_t = c_t * v
-                    r_s = jnp.where(c_s > 0, (c_s * c_s) /
-                                    jnp.sqrt(z_s * z_s + eps * eps), 0.0)
-                    r_t = jnp.where(c_t > 0, (c_t * c_t) /
-                                    jnp.sqrt(z_t * z_t + eps * eps), 0.0)
+                    r = coo_reweight(src, dst, c, v, eps, use_pallas)
+                    r_s, r_t = lap.terminal_conductances(c_s, c_t, v, eps)
                 deg = jax.ops.segment_sum(r, src, num_segments=n_pad)
                 deg = deg + jax.ops.segment_sum(r, dst, num_segments=n_pad)
-                deg = jax.lax.psum(deg, SOLVER_AXIS)
+                deg = jax.lax.psum(deg, axis)
                 diag = jnp.where(deg + r_s + r_t > 0, deg + r_s + r_t, 1.0)
                 return r, r_s, r_t, diag
 
-            def solve_wls(v, eps, initial, x0):
+            def solve_wls(v, eps, initial, x0, tol):
                 r, r_s, r_t, diag = conductances(v, eps, initial)
                 mv = lambda x: psum_matvec(x, src, dst, r, r_s + r_t,
-                                           n_pad, SOLVER_AXIS)
-                res = pcg_fixed_iters(mv, r_s, x0=x0, precond=lambda x: x / diag,
-                                      n_iters=cfg.pcg_max_iters,
-                                      record_history=False)
-                return res.x, res.rel_res
+                                           n_pad, axis)
+                M = lambda x: x / diag
+                if adaptive:
+                    res = pcg_masked(mv, r_s, x0=x0, precond=M, tol=tol,
+                                     max_iters=cfg.pcg_max_iters)
+                else:
+                    res = pcg_fixed_iters(mv, r_s, x0=x0, precond=M,
+                                          n_iters=cfg.pcg_max_iters,
+                                          record_history=False)
+                return res.x, res.rel_res, res.iters
 
-            v, _ = solve_wls(jnp.zeros((n_pad,), c.dtype), cfg.eps, True,
-                             jnp.zeros((n_pad,), c.dtype))
+            zeros = jnp.zeros((n_pad,), c.dtype)
+            eps_sched = jnp.asarray(eps_np, c.dtype)
+            tol0 = (sched.initial_tol(cfg, cfg.pcg_tight_tol) if adaptive
+                    else cfg.pcg_tol)
+            v0, _, _ = solve_wls(zeros, cfg.eps, True, zeros, tol0)
 
-            def scan_step(v_, _):
+            if not adaptive:
+                def scan_step(v_, eps_l):
+                    x0 = v_ if cfg.warm_start else jnp.zeros_like(v_)
+                    v2, rel, _ = solve_wls(v_, eps_l, False, x0, cfg.pcg_tol)
+                    return v2, rel
+
+                v, rels = jax.lax.scan(scan_step, v0, eps_sched)
+                iters = jnp.full((cfg.n_irls,), cfg.pcg_max_iters, jnp.int32)
+                return v, rels, iters
+
+            def l1(v):
+                # edges are sharded (one psum); terminals replicated
+                z = c * (v[src] - v[dst])
+                edge = jax.lax.psum(jnp.abs(z).sum(), axis)
+                return (edge + jnp.abs(c_s * (1.0 - v)).sum()
+                        + jnp.abs(c_t * v).sum())
+
+            st0 = sched.init_state(cfg, l1(v0), cfg.pcg_tight_tol, c.dtype)
+
+            def scan_step(carry, eps_l):
+                v_, st = carry
+                tol_l = sched.inner_tol(st, c.dtype)
                 x0 = v_ if cfg.warm_start else jnp.zeros_like(v_)
-                v2, rel = solve_wls(v_, cfg.eps, False, x0)
-                return v2, rel
+                v2, rel, it = solve_wls(v_, eps_l, False, x0, tol_l)
+                v2 = jnp.where(st.done, v_, v2)
+                spent = jnp.where(st.done, 0, it).astype(jnp.int32)
+                st2 = sched.advance(cfg, st, l1(v2), rel, it,
+                                    cfg.pcg_tight_tol)
+                return (v2, st2), (rel, spent)
 
-            v, rels = jax.lax.scan(scan_step, v, None, length=cfg.n_irls)
-            return v, rels
+            (v, _), (rels, iters) = jax.lax.scan(scan_step, (v0, st0),
+                                                 eps_sched)
+            return v, rels, iters
 
         fn = shard_map(body, mesh=self.mesh,
                        in_specs=(P(SOLVER_AXIS), P(SOLVER_AXIS),
                                  P(SOLVER_AXIS), P(), P()),
-                       out_specs=(P(), P()))
+                       out_specs=(P(), P(), P()))
         return jax.jit(fn)
 
     # -- execution --------------------------------------------------------------
     def arrays(self):
         if self.schedule == "halo":
             pl_, bp = self.plan, self.block_plan
-            return (pl_.heads, pl_.tails_ext, pl_.c, pl_.c_s, pl_.c_t,
+            base = (pl_.heads, pl_.tails_ext, pl_.c, pl_.c_s, pl_.c_t,
                     pl_.export, pl_.node_valid, bp.copy_b, bp.copy_i,
-                    bp.copy_j, bp.copy_id, bp.copy_valid, bp.node_b, bp.node_s)
+                    bp.copy_j, bp.copy_id, bp.copy_valid, bp.node_b,
+                    bp.node_s)
+            if self.ell is not None:
+                return base + (self.ell.cols, self.ell.c_ell,
+                               self.ell.copy_row, self.ell.copy_lane)
+            return base
         pl_ = self.plan
         return (pl_.src, pl_.dst, pl_.c, pl_.c_s, pl_.c_t)
 
@@ -372,9 +507,16 @@ class ShardedSolver:
         return self._fn.lower(*self.abstract_inputs())
 
     def solve(self):
-        """Run and return voltages in ORIGINAL node order + residual trace."""
-        out, rels = self._fn(*[jnp.asarray(a) for a in self.arrays()])
+        """Run the compiled SPMD program.
+
+        Returns ``(v, rels, iters)``: voltages in ORIGINAL node order, the
+        per-IRLS-iteration final PCG relative residual, and the PCG
+        iterations actually spent per IRLS iteration (``pcg_max_iters``
+        under the fixed schedule; drops to 0 once the adaptive mask froze
+        the solve — the direct measure of what the early exit saved).
+        """
+        out, rels, iters = self._fn(*[jnp.asarray(a) for a in self.arrays()])
         out = np.asarray(out).reshape(-1)
         if self.schedule == "halo":
-            return out[self.plan.perm], np.asarray(rels)
-        return out[: self.plan.n], np.asarray(rels)
+            return out[self.plan.perm], np.asarray(rels), np.asarray(iters)
+        return out[: self.plan.n], np.asarray(rels), np.asarray(iters)

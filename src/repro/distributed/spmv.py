@@ -20,6 +20,13 @@ Two communication schedules:
 Both schedules are built as STATIC plans on the host (numpy) once per
 instance — mirroring the paper's one-time setup phase — and executed inside
 ``shard_map`` with fixed shapes.
+
+``HaloEllPlan`` (built by ``build_halo_ell``) restages each shard's copy
+list into a LOCAL ELLPACK layout whose column ids index the halo-extended
+vector ``[v_local | halo]`` — the layout that lets the fused single-sweep
+edge kernel (core.laplacian.fused_ell_sweep / kernels.edge_reweight) build
+the whole per-IRLS-iteration system (reweight → ELL values → diagonal →
+RHS) in ONE pass over the local edges, boundary values included.
 """
 from __future__ import annotations
 
@@ -29,6 +36,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import laplacian as lap
 
 from .collectives import SOLVER_AXIS
 
@@ -187,6 +196,84 @@ def build_halo_plan(instance, p: int, labels: Optional[np.ndarray] = None) -> Ha
                     perm=perm, n=n, nl=nl, b_sh=b_sh, p=p)
 
 
+class HaloEllPlan(NamedTuple):
+    """Per-shard ELL restaging of the halo copy list (fused-sweep layout).
+
+    cols      : i32[p, nl, k]  tail index (into [local | halo]) of each slot
+    c_ell     : f32[p, nl, k]  edge weight per slot (0 = padding) — host-
+                               staged once per plan fill, so the device-side
+                               sweep is scatter-free
+    copy_row  : i32[p, ml]     ELL slot (row, lane) of each directed copy:
+    copy_lane : i32[p, ml]     the gather-back map recovering per-copy
+                               conductances ``r = −vals[row, lane]`` for the
+                               block-Jacobi assembly (padding copies point
+                               at slot (0, 0); downstream consumers mask
+                               them with copy_valid)
+    k         : int            ELL width (max real copies per local head)
+    """
+
+    cols: np.ndarray
+    c_ell: np.ndarray
+    copy_row: np.ndarray
+    copy_lane: np.ndarray
+    k: int
+
+
+def build_halo_ell(plan: HaloPlan, pad_to_multiple: int = 8) -> HaloEllPlan:
+    """Restage each shard's (heads, tails_ext, c) copy arrays slot-major.
+
+    Every directed copy already lives with its head's owner, so rows are
+    the local head ids and the column ids are the existing ``tails_ext``
+    indices into the halo-extended vector — no new communication structure,
+    just the layout the row-parallel fused sweep needs.  Pure numpy, run at
+    plan-build/refill time (the weights land in ``c_ell`` here, which is
+    exactly the once-per-solve ``ell_edge_weights`` staging of the
+    single-host fused path, amortized into the plan fill).
+
+    Slot assignment is STRUCTURAL — a copy slot is real when it names an
+    actual copy (head ≠ tail or nonzero weight), not when its weight is
+    positive — so the ELL width ``k`` depends on the topology only and a
+    same-topology weight refill (``update_weights``) that zeroes an edge
+    keeps identical staging shapes (the zeroed edge just contributes
+    r = 0 in the sweep).
+    """
+    p, ml = plan.heads.shape
+    nl = plan.nl
+    lanes = np.zeros((p, ml), dtype=np.int64)
+    k = 1
+    # structural copies: plan padding slots carry head == tail == 0 AND
+    # c == 0; a real copy never has head == tail (no self loops), so this
+    # mask is weight-independent for every real edge
+    struct = ((plan.heads != plan.tails_ext) | (plan.c > 0))
+    for i in range(p):
+        h = plan.heads[i].astype(np.int64)
+        real = np.nonzero(struct[i])[0]
+        hr = h[real]
+        order = np.argsort(hr, kind="stable")
+        hs = hr[order]
+        # lane = running offset within equal head ids (sorted, stable)
+        first = np.searchsorted(hs, hs, side="left")
+        lane_sorted = np.arange(len(hs)) - first
+        lanes[i, real[order]] = lane_sorted
+        if len(hs):
+            k = max(k, int(lane_sorted.max()) + 1)
+    k = max(1, -(-k // pad_to_multiple) * pad_to_multiple)
+    cols = np.zeros((p, nl, k), dtype=np.int32)
+    c_ell = np.zeros((p, nl, k), dtype=np.float32)
+    copy_row = np.zeros((p, ml), dtype=np.int32)
+    copy_lane = np.zeros((p, ml), dtype=np.int32)
+    for i in range(p):
+        real = np.nonzero(struct[i])[0]
+        h = plan.heads[i][real].astype(np.int64)
+        ln = lanes[i, real]
+        cols[i, h, ln] = plan.tails_ext[i][real]
+        c_ell[i, h, ln] = plan.c[i][real]
+        copy_row[i, real] = h.astype(np.int32)
+        copy_lane[i, real] = ln.astype(np.int32)
+    return HaloEllPlan(cols=cols, c_ell=c_ell, copy_row=copy_row,
+                       copy_lane=copy_lane, k=k)
+
+
 # ---------------------------------------------------------------------------
 # Device-side matvec bodies (called inside shard_map; arrays are the LOCAL
 # block with the leading shard axis of size 1)
@@ -237,3 +324,50 @@ def psum_matvec(v_full: jax.Array, src: jax.Array, dst: jax.Array,
     y = y - jax.ops.segment_sum(flux, dst, num_segments=n_pad)
     y = jax.lax.psum(y, axis)
     return y + rs_rt_diag * v_full
+
+
+def make_ell_halo_matvec(ell_cols: jax.Array, vals: jax.Array,
+                         diag_loc: jax.Array):
+    """Fused-layout halo matvec: y = diag ⊙ x + Σ_lane vals ⊙ ext[cols]
+    (vals already carry −r, so this is the same contraction as
+    ``make_halo_matvec`` without the segment-sum scatter)."""
+    def mv(x_loc, ext):
+        gathered = jnp.take(ext, ell_cols, axis=0, fill_value=0.0)
+        return diag_loc * x_loc + jnp.sum(vals * gathered, axis=1)
+    return mv
+
+
+def coo_reweight(src_or_heads: jax.Array, dst_or_tails: jax.Array,
+                 c: jax.Array, v: jax.Array, eps,
+                 use_pallas: bool = False) -> jax.Array:
+    """Per-edge reweighted conductances in ONE pass over the local edge
+    chunk — the COO flavor of the fused edge sweep, shared by the psum
+    schedule (replicated v) and the unfused halo path (halo-extended v).
+    ``use_pallas`` routes the gen-1 ``kernels/edge_reweight`` kernel;
+    padded slots carry c = 0 → r = 0 either way."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        r = kops.edge_reweight_r(src_or_heads, dst_or_tails, c, v, eps)
+        return jnp.where(c > 0, r, 0.0)
+    z = c * (jnp.take(v, src_or_heads, axis=0, fill_value=0.0)
+             - jnp.take(v, dst_or_tails, axis=0, fill_value=0.0))
+    return jnp.where(c > 0, (c * c) * jax.lax.rsqrt(z * z + eps * eps), 0.0)
+
+
+def halo_l1_local(heads: jax.Array, tails_ext: jax.Array, c: jax.Array,
+                  c_s: jax.Array, c_t: jax.Array, v_loc: jax.Array,
+                  ext: jax.Array) -> jax.Array:
+    """Shard-local contribution to the fractional cut value ‖CBx‖₁.
+
+    Each undirected edge appears as TWO directed copies (possibly on two
+    shards) with identical |z|, hence the ÷2; the terminal terms are
+    shard-local (padding nodes carry c_s = c_t = 0).  ``psum`` of this
+    scalar over the solver axis is the global objective — the ONE extra
+    reduction per IRLS iteration that drives the distributed early exit
+    (nothing is added per PCG step).
+    """
+    z = c * (jnp.take(ext, heads, axis=0, fill_value=0.0)
+             - jnp.take(ext, tails_ext, axis=0, fill_value=0.0))
+    return (0.5 * jnp.abs(z).sum()
+            + jnp.abs(c_s * (1.0 - v_loc)).sum()
+            + jnp.abs(c_t * v_loc).sum())

@@ -113,9 +113,16 @@ def fused_ell_sweep_pallas(cols: jax.Array, c_ell: jax.Array,
                            eps: jax.Array, *, interpret: bool = False):
     """(vals, diag, r_s, r_t) = one sweep over the slot-major edge data
     (see ref.fused_ell_sweep_ref).  n must be a multiple of ROWS_PER_BLOCK
-    (the ops.py wrapper pads)."""
+    (the ops.py wrapper pads).
+
+    Halo-aware: ``v`` may be LONGER than the row count — the sharded solver
+    passes the halo-extended gather vector ``[v_local | exported boundary
+    values]`` (its first n entries are the row voltages, which is all the
+    row-slice read touches; ``cols`` may gather from the remote tail)."""
     n, k = cols.shape
+    nv = v.shape[0]
     assert n % ROWS_PER_BLOCK == 0, n
+    assert nv >= n, (nv, n)
     grid = (n // ROWS_PER_BLOCK,)
     eps_arr = jnp.asarray([eps], dtype=v.dtype)
     row_spec = pl.BlockSpec((ROWS_PER_BLOCK,), lambda i: (i,))
@@ -128,7 +135,7 @@ def fused_ell_sweep_pallas(cols: jax.Array, c_ell: jax.Array,
             tile_spec,                                  # c_ell
             row_spec,                                   # c_s
             row_spec,                                   # c_t
-            pl.BlockSpec((n,), lambda i: (0,)),         # v (VMEM-resident)
+            pl.BlockSpec((nv,), lambda i: (0,)),        # v (VMEM-resident)
             pl.BlockSpec((1,), lambda i: (0,)),         # eps
         ],
         out_specs=[tile_spec, row_spec, row_spec, row_spec],

@@ -83,12 +83,19 @@ def fused_ell_sweep(cols: jax.Array, c_ell: jax.Array, c_s: jax.Array,
     """Single-sweep IRLS system build (kernel on TPU / interpret elsewhere):
     (vals, diag, r_s, r_t) from one pass over the slot-major edge data.
     Pads the row count to ROWS_PER_BLOCK; padded rows carry c_ell = c_s =
-    c_t = 0 → all outputs 0 there, sliced off before returning."""
-    n = v.shape[0]
+    c_t = 0 → all outputs 0 there, sliced off before returning.
+
+    ``v`` may be longer than the row count (the halo-extended gather vector
+    of the sharded solver — its first ``cols.shape[0]`` entries are the row
+    voltages); padded rows then read the extended tail, harmlessly, since
+    their c_ell is 0."""
+    n = cols.shape[0]
     cols_p = _pad_to(cols, ROWS_PER_BLOCK)
     ce_p = _pad_to(c_ell, ROWS_PER_BLOCK)
     cs_p = _pad_to(c_s, ROWS_PER_BLOCK)
     ct_p = _pad_to(c_t, ROWS_PER_BLOCK)
+    # the row-slice read needs len(v) ≥ padded row count; the R-multiple pad
+    # guarantees it because len(v) ≥ n already
     v_p = _pad_to(v, ROWS_PER_BLOCK)
     vals, diag, r_s, r_t = fused_ell_sweep_pallas(
         cols_p, ce_p, cs_p, ct_p, v_p, jnp.asarray(eps, v.dtype),

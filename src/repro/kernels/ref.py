@@ -34,13 +34,18 @@ def fused_ell_sweep_ref(cols: jax.Array, c_ell: jax.Array, c_s: jax.Array,
 
         vals = −r,  diag[u] = Σ_lane r + r_s[u] + r_t[u],  rhs = r_s.
 
-    cols: i32[n, k], c_ell: f[n, k] (0 on padded slots), c_s/c_t/v: f[n]
+    cols: i32[n, k], c_ell: f[n, k] (0 on padded slots), c_s/c_t: f[n],
+    v: f[nv] with nv ≥ n — the first n entries are the row voltages and
+    ``cols`` may gather from the tail (the halo-extended vector the sharded
+    solver passes; nv == n is the single-host case)
     → (vals f[n,k], diag f[n], r_s f[n], r_t f[n]).  Semantically identical
     to core.laplacian.fused_ell_sweep (the jnp production fallback)."""
-    z = c_ell * (v[:, None] - v[cols])
+    n = cols.shape[0]
+    vr = v[:n]
+    z = c_ell * (vr[:, None] - v[cols])
     r = (c_ell * c_ell) / jnp.sqrt(z * z + eps * eps)
-    z_s = c_s * (1.0 - v)
-    z_t = c_t * v
+    z_s = c_s * (1.0 - vr)
+    z_t = c_t * vr
     r_s = jnp.where(c_s > 0, (c_s * c_s) / jnp.sqrt(z_s * z_s + eps * eps),
                     0.0)
     r_t = jnp.where(c_t > 0, (c_t * c_t) / jnp.sqrt(z_t * z_t + eps * eps),

@@ -315,6 +315,90 @@ def analyze(text: str, n_shards_default: int = 1) -> HloCosts:
                     per_collective_bytes=coll_bytes)
 
 
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+
+
+def while_loop_collectives(text: str) -> List[Dict[str, object]]:
+    """Per-while-loop DIRECT collective counts, annotated with loop depth.
+
+    For every while loop, count the collective instructions
+    (all-reduce/all-gather/…; ``-start`` counted once, ``-done`` skipped)
+    its BODY *and* CONDITION execute per iteration — reachable through
+    calls/fusions WITHOUT crossing a nested while (nested loops count
+    their own) — and record the while nesting depth at which the loop runs
+    (1 = top-level loop, 2 = loop in a loop, …; max over call paths).
+    Counts are static instruction occurrences, NOT multiplied by trip
+    counts — so a fixed-trip ``lax.scan`` and a dynamic early-exit
+    ``while_loop`` compare directly, and a reduction hidden in the
+    early-exit stopping test (the cond computation) is counted too.
+
+    In the solver programs the depth-2 loops with collectives are the PCG
+    loops inside the IRLS loop (CPU HLO also lowers scatters/cholesky to
+    collective-free whiles — depth alone doesn't identify PCG, depth plus
+    ``direct > 0`` does).  Comparing those counts between the fixed and the
+    adaptive program is the "zero extra collectives per PCG step" check.
+    Returns ``[{"body": name, "depth": d, "direct": k}, ...]`` for loops
+    with ``direct > 0``, keyed by their body computation's name.
+    """
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return []
+
+    parts_of: Dict[int, Tuple[str, ...]] = {}  # while-instr → (body[, cond])
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                names = []
+                for rx in (_WHILE_BODY_RE, _WHILE_COND_RE):
+                    m = rx.search(ins.raw)
+                    if m and m.group(1) in comps:
+                        names.append(m.group(1))
+                if names:
+                    parts_of[id(ins)] = tuple(names)
+
+    def direct_count(name: str, seen: set) -> int:
+        coll = 0
+        for ins in comps[name].instrs:
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+                coll += 1
+            if ins.opcode == "while":
+                continue                     # nested loops count their own
+            for tgt in _CALL_RE.findall(ins.raw):
+                if tgt in comps and tgt not in seen:
+                    seen.add(tgt)
+                    coll += direct_count(tgt, seen)
+        return coll
+
+    depth: Dict[Tuple[str, ...], int] = {}   # (body[, cond]) → nesting depth
+
+    def walk(name: str, d: int, seen: set) -> None:
+        for ins in comps[name].instrs:
+            if ins.opcode == "while":
+                parts = parts_of.get(id(ins))
+                if parts is None:
+                    continue
+                if depth.get(parts, 0) < d + 1:
+                    depth[parts] = d + 1
+                    for part in parts:
+                        walk(part, d + 1, set())
+                continue
+            for tgt in _CALL_RE.findall(ins.raw):
+                if tgt in comps and tgt not in seen:
+                    seen.add(tgt)
+                    walk(tgt, d, seen)
+
+    walk(entry.name, 0, {entry.name})
+    out = []
+    for parts, d in sorted(depth.items()):
+        k = sum(direct_count(part, {part}) for part in parts)
+        if k > 0:
+            out.append({"body": parts[0], "depth": d, "direct": k})
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Roofline terms (TPU v5e constants from the assignment)
 # ---------------------------------------------------------------------------

@@ -76,9 +76,16 @@ class MinCutServer:
                   pending request
     max_queue   — admission cap on in-flight requests (backpressure)
     rounding    — default rounding registry name (None = voltages only)
+    backend     — session backend requests execute on.  "scanned" (default)
+                  runs each micro-batch as ONE vmapped program; "host" and
+                  "sharded" solve the batch's requests one ``solve()`` at a
+                  time through the same cached sessions (parallelism within
+                  a solve — the sharded SPMD program — instead of across
+                  requests).  All backends honor the adaptive early-exit
+                  default below.
     """
 
-    # server default: the adaptive early-exit scanned schedule — converged
+    # server default: the adaptive early-exit schedule — converged
     # requests stop paying for matvecs, so co-batched easy instances don't
     # ride along for the hard ones' full budget (see docs/API.md
     # "Performance tuning"; irls_tol=0 restores the fixed schedule)
@@ -88,10 +95,15 @@ class MinCutServer:
                                                     adaptive_tol=True),
                  capacity: int = 8, max_batch: int = 8,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
-                 rounding: Optional[str] = "two_level", seed: int = 0):
+                 rounding: Optional[str] = "two_level", seed: int = 0,
+                 backend: str = "scanned"):
+        if backend not in MinCutSession.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"known: {MinCutSession.BACKENDS}")
         self.cfg = cfg
         self.rounding = rounding
         self.seed = seed
+        self.backend = backend
         self.metrics = ServeMetrics()
         self.cache = SessionCache(capacity, self._build_session)
         self.admission = AdmissionController(max_queue)
@@ -182,7 +194,7 @@ class MinCutServer:
         n_blocks = (self.cfg.n_blocks if self.cfg.precond == "block_jacobi"
                     else 1)
         prob = Problem.build(instance, n_blocks=n_blocks, seed=self.seed)
-        return MinCutSession(prob, self.cfg, backend="scanned")
+        return MinCutSession(prob, self.cfg, backend=self.backend)
 
     def _poll_timeout(self) -> float:
         deadline = self._batcher.next_deadline()
@@ -223,9 +235,15 @@ class MinCutServer:
         t_exec = time.perf_counter()
         try:
             sess = self.cache.get(topo_key)
-            results = sess.solve_batch([r.weights for r in reqs],
-                                       rounding=rounding, cfg=cfg,
-                                       pad_to=batch.bucket)
+            if self.backend == "scanned":
+                results = sess.solve_batch([r.weights for r in reqs],
+                                           rounding=rounding, cfg=cfg,
+                                           pad_to=batch.bucket)
+            else:
+                # host/sharded: no vmapped batch program — the batch still
+                # amortizes the cached session, one solve per request
+                results = [sess.solve(weights=r.weights, rounding=rounding,
+                                      cfg=cfg) for r in reqs]
         except Exception as e:
             now = time.perf_counter()
             for r in reqs:

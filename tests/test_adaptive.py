@@ -181,3 +181,63 @@ def test_fused_sweep_block_jacobi_recovers_edge_conductances(grid_instance):
     # conductance recovery would show up as O(1) differences and a cut miss
     np.testing.assert_allclose(ru.voltages, rf.voltages, atol=0.05)
     assert rf.cut_value == pytest.approx(ru.cut_value, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the shared state machine (core/adaptive.py) — one definition of
+# "converged" for host, scanned AND sharded drivers
+# ---------------------------------------------------------------------------
+
+def test_adaptive_state_machine_semantics():
+    from repro.core import adaptive as sched
+
+    cfg = ADAPT                      # irls_tol=1e-3, adaptive_tol, patience 2
+    tight = cfg.pcg_tight_tol
+    st = sched.init_state(cfg, 100.0, tight)
+    assert float(st.tol) == pytest.approx(cfg.pcg_loose_tol)
+    assert not bool(st.done)
+
+    # big objective move: patience counter stays 0, tol tightens monotonely
+    st = sched.advance(cfg, st, 50.0, rel_res=tight, iters=5, tight=tight)
+    assert int(st.small) == 0 and not bool(st.done)
+    assert float(st.tol) <= cfg.pcg_loose_tol * 1.001
+
+    # flat readings, but LOOSELY solved → must not count toward patience
+    st_loose = sched.advance(cfg, st, float(st.frac), rel_res=1.0, iters=5,
+                             tight=tight)
+    assert int(st_loose.small) == 0 and not bool(st_loose.done)
+
+    # flat + solved, twice in a row → done (patience honored: not after one)
+    st1 = sched.advance(cfg, st, float(st.frac), rel_res=tight, iters=5,
+                        tight=tight)
+    assert int(st1.small) == 1 and not bool(st1.done)
+    st2 = sched.advance(cfg, st1, float(st1.frac), rel_res=tight, iters=5,
+                        tight=tight)
+    assert bool(st2.done)
+
+    # done lanes freeze: frac/tol stop moving, inner_tol parks at ∞
+    st3 = sched.advance(cfg, st2, 1e9, rel_res=1.0, iters=0, tight=tight)
+    assert float(st3.frac) == float(st2.frac)
+    assert float(st3.tol) == float(st2.tol)
+    assert np.isinf(float(sched.inner_tol(st3, np.float32)))
+
+    # cap-saturated counts as solved (no more accuracy to buy)
+    st_cap = sched.advance(cfg, st, float(st.frac), rel_res=1.0,
+                           iters=cfg.pcg_max_iters, tight=tight)
+    assert int(st_cap.small) == 1
+
+
+def test_adaptive_tol_monotone_never_loosens():
+    from repro.core import adaptive as sched
+
+    cfg = ADAPT
+    tight = cfg.pcg_tight_tol
+    st = sched.init_state(cfg, 100.0, tight)
+    tols = []
+    fracs = [50.0, 49.9, 30.0, 29.99, 29.98]   # alternating fast/slow
+    for f in fracs:
+        st = sched.advance(cfg, st, f, rel_res=tight, iters=5, tight=tight)
+        tols.append(float(st.tol))
+    assert all(b <= a + 1e-12 for a, b in zip(tols, tols[1:])), tols
+    assert all(cfg.pcg_tight_tol * 0.999 <= t <= cfg.pcg_loose_tol * 1.001
+               for t in tols)

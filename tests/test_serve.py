@@ -224,3 +224,28 @@ def test_serve_benchmark_emits_root_payload(tmp_path):
     assert payload["solves_per_sec"] > 0
     assert payload["p50_ms"] > 0 and payload["p99_ms"] >= payload["p50_ms"]
     assert "timestamp" not in payload
+
+
+def test_server_host_backend_per_request_solves(grid_instance):
+    """backend="host" serves through the same queue/cache machinery with
+    one solve per request (no vmapped batch program); results must match
+    the scanned server's on the same weights."""
+    ws = [_weights(grid_instance, s) for s in (0.8, 1.5, 2.5)]
+    with MinCutServer(cfg=CFG, max_batch=4, max_wait_ms=1.0) as scanned_srv:
+        key = scanned_srv.register(grid_instance)
+        ref = [f.result(timeout=120)
+               for f in [scanned_srv.submit(key, w) for w in ws]]
+    with MinCutServer(cfg=CFG, max_batch=4, max_wait_ms=1.0,
+                      backend="host") as host_srv:
+        key = host_srv.register(grid_instance)
+        got = [f.result(timeout=120)
+               for f in [host_srv.submit(key, w) for w in ws]]
+    for r, g in zip(ref, got):
+        assert g.backend == "host"
+        assert g.diagnostics is not None        # host-only diagnostics
+        assert g.cut_value == pytest.approx(r.cut_value, rel=1e-3)
+
+
+def test_server_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        MinCutServer(backend="warp")
