@@ -26,6 +26,25 @@ def grid3d_instance(side=12, seed=0):
     return gen.segmentation_instance(g, (side, side, side), seed=seed + 1)
 
 
+def pinned_instance(kind, size, seed=0, s=3, t=None):
+    """Sparse pinned-pair instance: one-hot terminals on a road/social
+    graph — the regime where kernelization bites (dense-terminal
+    instances kernelize to nothing; see benchmarks/kernel.py)."""
+    import numpy as np
+
+    from repro.core import rebind_terminals
+    from repro.graphs import generators as gen
+    from repro.graphs.structures import STInstance
+
+    g = (gen.road_like(size, seed=seed) if kind == "road"
+         else gen.social_like(size, seed=seed))
+    t = g.n - 2 if t is None else t
+    inst0 = STInstance(graph=g, s_weight=np.zeros(g.n),
+                       t_weight=np.zeros(g.n))
+    w = rebind_terminals(inst0, s, t)
+    return STInstance(graph=g, s_weight=w.c_s, t_weight=w.c_t)
+
+
 class timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -17,8 +17,8 @@ import os
 import sys
 import traceback
 
-from . import (cuttree, irls_hotpath, phases, polarization, quality, roofline,
-               scaling, serve, speedup, warm_start)
+from . import (cuttree, irls_hotpath, kernel, phases, polarization, quality,
+               roofline, scaling, serve, speedup, warm_start)
 
 BENCHES = {
     "fig1": warm_start.run,
@@ -32,6 +32,7 @@ BENCHES = {
     "irls": irls_hotpath.run,
     "cuttree": cuttree.run,
     "sharded": scaling.run_sharded,
+    "kernel": kernel.run,
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

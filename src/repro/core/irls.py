@@ -377,7 +377,8 @@ def _scanned_precond(cfg: IRLSConfig, rw, matvec,
 
 def make_scanned_program(src, dst, cfg: IRLSConfig,
                          block_plan: Optional[pc.BlockPlan] = None,
-                         ell_plan: Optional[lap.EllPlan] = None):
+                         ell_plan: Optional[lap.EllPlan] = None,
+                         warm: bool = False):
     """Build the weight-parameterized scanned IRLS program.
 
     Returns ``run(c, c_s, c_t) → (v, rels, iters)`` with the topology
@@ -386,6 +387,13 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
     instances (the ``MinCutSession.solve_batch`` serving path).  ``rels``
     and ``iters`` are the per-IRLS-iteration final PCG residual and the PCG
     iterations actually spent (masked to 0 once an instance is done).
+
+    ``warm=True`` builds the warm-started variant ``run(c, c_s, c_t, v0)``:
+    the cold initial WLS (W⁰ = C) is skipped and reweighting starts from
+    the caller's voltages — same semantics as ``run_host_loop(v0=...)``,
+    in scanned/vmappable form (the serving tier's drifting-weight re-solve
+    path).  Under the adaptive schedule the convergence state is seeded
+    from the first iteration's reading, exactly as the host loop does.
 
     Static shapes end to end; control flow depends on the schedule:
 
@@ -404,7 +412,7 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
     """
     adaptive = _adaptive(cfg)
 
-    def run(c, c_s, c_t):
+    def _run(c, c_s, c_t, v_warm):
         g = DeviceGraph(src=src, dst=dst, c=c, c_s=c_s, c_t=c_t)
         eps_sched = jnp.asarray(eps_schedule_array(cfg), dtype=c.dtype)
         # stage the edge weights slot-major ONCE per solve; every IRLS
@@ -412,19 +420,22 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
         c_ell = (lap.ell_edge_weights(ell_plan, c)
                  if _fused(cfg, ell_plan) else None)
 
-        rw0 = lap.initial_weights(g)
-        matvec0 = _make_matvec(g, rw0, cfg, ell_plan)
-        apply_M0 = _scanned_precond(cfg, rw0, matvec0, block_plan)
-        b0 = lap.rhs(rw0)
-        if adaptive:
-            tol0 = sched.initial_tol(cfg, cfg.pcg_tight_tol)
-            res0 = pcg_masked(matvec0, b0, precond=apply_M0, tol=tol0,
-                              max_iters=cfg.pcg_max_iters)
+        if warm:
+            v0 = v_warm.astype(c.dtype)
         else:
-            res0 = pcg_fixed_iters(matvec0, b0, precond=apply_M0,
-                                   n_iters=cfg.pcg_max_iters,
-                                   record_history=False)
-        v0 = res0.x
+            rw0 = lap.initial_weights(g)
+            matvec0 = _make_matvec(g, rw0, cfg, ell_plan)
+            apply_M0 = _scanned_precond(cfg, rw0, matvec0, block_plan)
+            b0 = lap.rhs(rw0)
+            if adaptive:
+                tol0 = sched.initial_tol(cfg, cfg.pcg_tight_tol)
+                res0 = pcg_masked(matvec0, b0, precond=apply_M0, tol=tol0,
+                                  max_iters=cfg.pcg_max_iters)
+            else:
+                res0 = pcg_fixed_iters(matvec0, b0, precond=apply_M0,
+                                       n_iters=cfg.pcg_max_iters,
+                                       record_history=False)
+            v0 = res0.x
 
         if not adaptive:
             def irls_step(v, eps_l):
@@ -461,12 +472,22 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
                                    cfg.pcg_tight_tol)
             return (v_new, st_new), (res.rel_res, spent)
 
+        # Seeding the convergence state from v0's own fractional cut is
+        # exactly the cold-start behaviour; under ``warm`` it lets an
+        # already-converged warm start freeze after ``irls_patience``
+        # iterations instead of re-running the full schedule.
         frac0 = l1_objective(g, v0)
         carry0 = (v0, sched.init_state(cfg, frac0, cfg.pcg_tight_tol,
                                        c.dtype))
         (v, _), (rels, iters) = jax.lax.scan(irls_step, carry0, eps_sched)
         return v, rels, iters
 
+    if warm:
+        def run(c, c_s, c_t, v0):
+            return _run(c, c_s, c_t, v0)
+    else:
+        def run(c, c_s, c_t):
+            return _run(c, c_s, c_t, None)
     return run
 
 

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import hashlib
 import time
+from collections import OrderedDict
 from typing import Dict, List, NamedTuple, Optional, Sequence, Union
 
 import numpy as np
@@ -195,6 +196,7 @@ class Problem:
         self._block_plan = None
         self._ell_plan = None
         self._fingerprint: Optional[str] = None
+        self._components: Optional[np.ndarray] = None
 
     @property
     def fingerprint(self) -> str:
@@ -252,6 +254,60 @@ class Problem:
         pure weight change, so solves under them reuse every topology-level
         artifact of this Problem (see ``rebind_terminals``)."""
         return rebind_terminals(self.instance, u, v, c=c, strength=strength)
+
+    def component_labels(self) -> np.ndarray:
+        """Connected-component labels of the NON-TERMINAL graph (topology
+        level, cached).  Two nodes share a label iff a path of graph edges
+        joins them; terminal edges do not contribute.  Used by the solve
+        guard against s-t-disconnected instances."""
+        if self._components is None:
+            from repro.presolve.rules import _connected_components
+            g = self.instance.graph
+            self._components = _connected_components(
+                g.n, np.asarray(g.src, dtype=np.int64),
+                np.asarray(g.dst, dtype=np.int64))
+        return self._components
+
+    # -- contraction-derived problems (presolve / Gomory-Hu building block) ---
+    def derive(self, vertex_map: np.ndarray, n_blocks: int = 1,
+               seed: int = 0):
+        """Contract this topology by ``vertex_map`` (int[n] -> [0, k)) and
+        build a Problem on the contracted graph.
+
+        Returns ``(problem, derived)`` where ``derived`` is a
+        ``repro.presolve.DerivedInstance`` carrying the vertex/edge maps:
+        ``derived.project_weights(c)`` pushes same-topology edge weights
+        onto the contracted graph and ``derived.lift_partition(side)``
+        pulls a contracted side assignment back to the original vertices.
+        Partition/plan construction runs on the (smaller) contracted
+        topology, so repeated solves there amortize exactly like any
+        other Problem."""
+        from repro.presolve.contract import derive_instance
+        d = derive_instance(self.instance, vertex_map)
+        return Problem.build(d.instance, n_blocks=n_blocks, seed=seed), d
+
+    def contract(self, s_nodes, t_nodes, n_blocks: int = 1, seed: int = 0,
+                 strength: Optional[float] = None):
+        """Merge ``s_nodes`` into one supernode and ``t_nodes`` into
+        another (disjoint node sets or single ints) and pin the terminals
+        to the two supernodes.
+
+        Returns ``(problem, derived, weights)`` — the contracted Problem,
+        the projection/lift maps, and one-hot terminal ``Weights`` on the
+        contracted instance (``rebind_terminals`` semantics).  This is the
+        derived-Problem step a Gomory-Hu recursion performs when it
+        contracts the complement side before a pair solve."""
+        from repro.presolve.contract import contraction_map, derive_instance
+        s_arr = np.atleast_1d(np.asarray(s_nodes, dtype=np.int64))
+        t_arr = np.atleast_1d(np.asarray(t_nodes, dtype=np.int64))
+        if np.intersect1d(s_arr, t_arr).size:
+            raise ValueError("s_nodes and t_nodes must be disjoint")
+        vm = contraction_map(self.instance.n, [s_arr, t_arr])
+        d = derive_instance(self.instance, vm)
+        prob = Problem.build(d.instance, n_blocks=n_blocks, seed=seed)
+        w = rebind_terminals(d.instance, int(vm[s_arr[0]]), int(vm[t_arr[0]]),
+                             strength=strength)
+        return prob, d, w
 
     # -- cached plans ---------------------------------------------------------
     def device_graph(self, dtype=jnp.float32,
@@ -347,6 +403,13 @@ class MinCutSession:
         self.precond_bs = precond_bs
         self._steppers: Dict[tuple, object] = {}   # compiled-driver cache
         self._sharded_weights: Dict[tuple, object] = {}
+        # presolve state: kernels keyed on a weight-content hash (rules are
+        # weight-dependent), kernel SESSIONS keyed on the kernel's topology
+        # fingerprint — distinct weight vectors that reduce to the same
+        # kernel topology share partition, plans and compiled steppers.
+        self._kernels: "OrderedDict[str, object]" = OrderedDict()
+        self._kernel_max = 16
+        self._kernel_sessions: Dict[tuple, MinCutSession] = {}
 
     # -- public API -----------------------------------------------------------
     def solve(self, weights: Optional[WeightsLike] = None,
@@ -354,25 +417,38 @@ class MinCutSession:
               rounding: Optional[str] = "two_level",
               backend: Optional[str] = None,
               cfg: Optional[IRLSConfig] = None,
-              collect_voltages: bool = False) -> SolveResult:
+              collect_voltages: bool = False,
+              presolve: bool = False) -> SolveResult:
         """IRLS → rounding → SolveResult.
 
         weights   — same-topology weight override (Weights / STInstance /
                     (c, c_s, c_t)), ORIGINAL order; None = Problem weights.
         warm_from — previous SolveResult (or original-order voltage array)
-                    to continue from; host backend only.
+                    to continue from; host and scanned backends.
         rounding  — name in ``rounding.REGISTRY`` ("two_level", "sweep"),
                     or None to skip rounding.
+        presolve  — kernelize first (repro.presolve): exact s,t-safe
+                    reductions shrink the instance, the kernel is solved on
+                    the requested backend, and voltages/partition/cut are
+                    lifted back to the original n with an exact cut-value
+                    certificate.  Kernels and kernel sessions are cached on
+                    this session.
         """
         backend = backend or self.backend
         cfg = cfg or self.cfg
         if backend not in self.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"known: {self.BACKENDS}")
-        if warm_from is not None and backend != "host":
-            raise ValueError("warm_from is only supported on the host "
-                             "backend (scanned/sharded run a fixed cold "
+        if presolve:
+            return self._solve_presolve(weights, warm_from, rounding,
+                                        backend, cfg)
+        if warm_from is not None and backend == "sharded":
+            raise ValueError("warm_from is only supported on the host and "
+                             "scanned backends (sharded runs a fixed cold "
                              "schedule)")
+        trivial = self._check_connectivity(weights, rounding, backend)
+        if trivial is not None:
+            return trivial
         timings: Dict[str, float] = {}
         pcg_iters = None
         t0 = time.perf_counter()
@@ -381,7 +457,8 @@ class MinCutSession:
                                              collect_voltages, timings)
         elif backend == "scanned":
             v, diag, rels, pcg_iters = self._solve_scanned(cfg, weights,
-                                                           timings)
+                                                           timings,
+                                                           warm_from=warm_from)
         else:
             v, diag, rels, pcg_iters = self._solve_sharded(cfg, weights,
                                                            timings)
@@ -400,7 +477,9 @@ class MinCutSession:
     def solve_batch(self, weights_batch: Sequence[WeightsLike],
                     rounding: Optional[str] = "two_level",
                     cfg: Optional[IRLSConfig] = None,
-                    pad_to: Optional[int] = None) -> List[SolveResult]:
+                    pad_to: Optional[int] = None,
+                    presolve: bool = False,
+                    warm_from: Optional[Sequence] = None) -> List[SolveResult]:
         """Solve MANY same-topology instances in one vmapped scanned program
         — the batched serving path (segmentation frames, FlowImprove
         populations).  One compile per batch length; rounding runs per
@@ -411,46 +490,261 @@ class MinCutSession:
         set of buckets (the micro-batcher uses powers of two) and the
         per-batch-length compile cache stays bounded too.  Only the real
         (unpadded) results are returned.
+
+        ``warm_from`` — one previous SolveResult / original-order voltage
+        array per batch entry: the whole batch runs the warm-started
+        scanned program (all-or-nothing — mixed warm/cold batches would
+        need two programs).  ``presolve`` kernelizes every entry, groups
+        entries whose kernels share a topology, batches each group, and
+        lifts the results back; incompatible with ``warm_from``.
         """
         ws = [self.problem.check_weights(w) for w in weights_batch]
         if not ws:
             # empty batch: nothing to stack, nothing to compile
             return []
         cfg = cfg or self.cfg
+        if presolve:
+            if warm_from is not None:
+                raise ValueError("presolve batches run cold (the kernel "
+                                 "node set depends on the weights, so a "
+                                 "previous voltage vector has no stable "
+                                 "projection)")
+            return self._solve_batch_presolve(ws, rounding, cfg)
         prob = self.problem
         dtype = jnp.dtype(cfg.dtype)
+        warm = warm_from is not None
+        if warm and len(warm_from) != len(ws):
+            raise ValueError(f"warm_from has {len(warm_from)} entries for a "
+                             f"batch of {len(ws)}")
+        # disconnected entries resolve trivially and drop out of the batch
+        out: List[Optional[SolveResult]] = [None] * len(ws)
+        live: List[int] = []
+        for i, w in enumerate(ws):
+            out[i] = self._check_connectivity(w, rounding, "scanned")
+            if out[i] is None:
+                live.append(i)
+        if not live:
+            return [r for r in out if r is not None]
+        ws_live = [ws[i] for i in live]
         t0 = time.perf_counter()
-        run = self._get_scanned(cfg, dtype, batched=True)
-        n_real = len(ws)
+        run = self._get_scanned(cfg, dtype, batched=True, warm=warm)
+        n_real = len(ws_live)
         if pad_to is not None:
             if pad_to < n_real:
                 raise ValueError(
                     f"pad_to={pad_to} is smaller than the batch ({n_real})")
-            ws_run = ws + [ws[-1]] * (pad_to - n_real)
+            pad = pad_to - n_real
         else:
-            ws_run = ws
+            pad = 0
+        ws_run = ws_live + [ws_live[-1]] * pad
         C = jnp.stack([jnp.asarray(w.c, dtype=dtype) for w in ws_run])
         CS = jnp.stack([jnp.asarray(prob.to_reordered(w.c_s), dtype=dtype)
                         for w in ws_run])
         CT = jnp.stack([jnp.asarray(prob.to_reordered(w.c_t), dtype=dtype)
                         for w in ws_run])
-        V, RELS, ITERS = run(C, CS, CT)
+        if warm:
+            vs = [np.asarray(v.voltages if isinstance(v, SolveResult) else v)
+                  for v in warm_from]
+            vs_run = [vs[i] for i in live] + [vs[live[-1]]] * pad
+            V0 = jnp.stack([jnp.asarray(prob.to_reordered(v), dtype=dtype)
+                            for v in vs_run])
+            V, RELS, ITERS = run(C, CS, CT, V0)
+        else:
+            V, RELS, ITERS = run(C, CS, CT)
         V = np.asarray(V)
         t_irls = time.perf_counter() - t0
-        out = []
-        for i, w in enumerate(ws):
-            v = prob.to_original(V[i])
+        for j, i in enumerate(live):
+            w = ws_live[j]
+            v = prob.to_original(V[j])
             cut = None
             t1 = time.perf_counter()
             if rounding is not None:
                 cut = rd.round_voltages(rounding, prob.instance_with(w), v)
-            out.append(SolveResult(
+            out[i] = SolveResult(
                 voltages=v, cut=cut, diagnostics=None,
-                residuals=np.asarray(RELS[i]),
-                timings={"irls": t_irls / len(ws),
+                residuals=np.asarray(RELS[j]),
+                timings={"irls": t_irls / n_real,
                          "rounding": time.perf_counter() - t1},
-                backend="scanned", pcg_iters=np.asarray(ITERS[i])))
-        return out
+                backend="scanned", pcg_iters=np.asarray(ITERS[j]))
+        return [r for r in out if r is not None]
+
+    # -- presolve (kernelization) ---------------------------------------------
+    def _check_connectivity(self, weights, rounding, backend):
+        """Guard against instances whose reduced Laplacian is singular.
+
+        s and t in different components → the min cut is trivially 0 (no
+        terminal edge can be cut by putting every s-component on the
+        source side); returns that SolveResult directly instead of letting
+        PCG produce NaN/garbage voltages.  Components touching NEITHER
+        terminal are also singular blocks — those are rejected with a
+        pointer at ``presolve=True``, which merges them away exactly.
+        """
+        w = (self.problem.check_weights(weights) if weights is not None
+             else as_weights(self.problem.instance))
+        comp = self.problem.component_labels()
+        s_comps = np.unique(comp[np.asarray(w.c_s) > 0])
+        t_comps = np.unique(comp[np.asarray(w.c_t) > 0])
+        if np.intersect1d(s_comps, t_comps).size:
+            stray = np.setdiff1d(np.unique(comp),
+                                 np.union1d(s_comps, t_comps))
+            if stray.size:
+                raise ValueError(
+                    f"{stray.size} connected component(s) touch neither "
+                    f"terminal: their Laplacian blocks are singular and "
+                    f"PCG would return garbage voltages there.  Solve with "
+                    f"presolve=True (kernelization merges terminal-free "
+                    f"components away exactly) or restrict the graph")
+            return None
+        # Trivial 0-cut: every component holding an s-terminal goes source
+        # side; no terminal edge crosses (no component holds both kinds).
+        in_source = np.isin(comp, s_comps)
+        cut = None
+        if rounding is not None:
+            cut = RoundingResult(in_source=in_source, cut_value=0.0,
+                                 meta={"method": "trivial_disconnected"})
+        return SolveResult(voltages=in_source.astype(np.float64), cut=cut,
+                           diagnostics=None, residuals=None,
+                           timings={"total": 0.0, "irls": 0.0},
+                           backend=backend, pcg_iters=None)
+
+    def _kernel_for(self, w: Weights):
+        """Kernelize under ``w`` (LRU-cached on the weight content — the
+        reduction rules read weight values, so the kernel is per-weights
+        even though the session is per-topology)."""
+        h = hashlib.blake2b(digest_size=16)
+        for arr in (w.c, w.c_s, w.c_t):
+            h.update(np.ascontiguousarray(
+                np.asarray(arr, dtype=np.float64)).tobytes())
+        key = h.hexdigest()
+        kernel = self._kernels.get(key)
+        if kernel is not None:
+            self._kernels.move_to_end(key)
+            return kernel
+        from repro.presolve import kernelize
+        kernel = kernelize(self.problem.instance, c=w.c, c_s=w.c_s,
+                           c_t=w.c_t)
+        self._kernels[key] = kernel
+        while len(self._kernels) > self._kernel_max:
+            self._kernels.popitem(last=False)
+        return kernel
+
+    def _kernel_cfg(self, cfg: IRLSConfig, kernel_n: int) -> IRLSConfig:
+        """Config for the kernel solve: block Jacobi needs blocks with a
+        sensible number of nodes — tiny kernels fall back to point Jacobi
+        rather than partitioning 30 nodes 16 ways."""
+        import dataclasses
+        if cfg.precond == "block_jacobi" and kernel_n < 8 * cfg.n_blocks:
+            return dataclasses.replace(cfg, precond="jacobi", n_blocks=1)
+        return cfg
+
+    def _kernel_session(self, kernel, cfg: IRLSConfig):
+        """Session over the kernel topology (cached on the kernel's
+        fingerprint — weight vectors that reduce to the same kernel
+        topology share its partition, plans and compiled steppers)."""
+        kcfg = self._kernel_cfg(cfg, kernel.kernel_n)
+        nb = kcfg.n_blocks if kcfg.precond == "block_jacobi" else 1
+        key = (topology_fingerprint(kernel.instance), nb)
+        sess = self._kernel_sessions.get(key)
+        if sess is None:
+            prob = Problem.build(kernel.instance, n_blocks=nb)
+            sess = MinCutSession(prob, cfg=kcfg, backend=self.backend,
+                                 mesh=self.mesh, schedule=self.schedule,
+                                 precond_bs=self.precond_bs)
+            self._kernel_sessions[key] = sess
+        return sess, kcfg
+
+    def _lift_result(self, kernel, kres: SolveResult, rounding,
+                     t_presolve: float) -> SolveResult:
+        """Map a kernel-space SolveResult back to the original vertex set,
+        attaching the exact cut certificate."""
+        v = kernel.lift_voltages(kres.voltages)
+        cut = None
+        if rounding is not None and kres.cut is not None:
+            kside = np.asarray(kres.cut.in_source, dtype=bool)
+            cert = kernel.certificate(kside)
+            meta = dict(kres.cut.meta or {})
+            meta["presolve"] = {
+                "kernel_n": kernel.kernel_n, "kernel_m": kernel.kernel_m,
+                "base": kernel.base, "stats": kernel.stats,
+                "certificate": cert,
+            }
+            cut = RoundingResult(in_source=kernel.lift_partition(kside),
+                                 cut_value=cert["lifted_cut"], meta=meta)
+        timings = dict(kres.timings)
+        timings["presolve"] = t_presolve
+        timings["total"] = timings.get("total", 0.0) + t_presolve
+        return SolveResult(voltages=v, cut=cut, diagnostics=kres.diagnostics,
+                           residuals=kres.residuals, timings=timings,
+                           backend=kres.backend, pcg_iters=kres.pcg_iters)
+
+    def _trivial_from_kernel(self, kernel, rounding, backend,
+                             t_presolve: float) -> SolveResult:
+        """The reductions decided the whole cut (kernel_n == 0 — includes
+        the s-t-disconnected case, where base == 0)."""
+        in_source = kernel.lift_partition(None)
+        cert = kernel.certificate(None)
+        cut = None
+        if rounding is not None:
+            cut = RoundingResult(
+                in_source=in_source, cut_value=cert["lifted_cut"],
+                meta={"method": "presolve_trivial",
+                      "presolve": {"kernel_n": 0, "base": kernel.base,
+                                   "stats": kernel.stats,
+                                   "certificate": cert}})
+        return SolveResult(voltages=in_source.astype(np.float64), cut=cut,
+                           diagnostics=None, residuals=None,
+                           timings={"presolve": t_presolve,
+                                    "total": t_presolve},
+                           backend=backend, pcg_iters=None)
+
+    def _solve_presolve(self, weights, warm_from, rounding, backend,
+                        cfg: IRLSConfig) -> SolveResult:
+        w = (self.problem.check_weights(weights) if weights is not None
+             else as_weights(self.problem.instance))
+        t0 = time.perf_counter()
+        kernel = self._kernel_for(w)
+        t_pre = time.perf_counter() - t0
+        if kernel.trivial:
+            return self._trivial_from_kernel(kernel, rounding, backend, t_pre)
+        sess, kcfg = self._kernel_session(kernel, cfg)
+        v0 = None
+        if warm_from is not None and backend in ("host", "scanned"):
+            wv = np.asarray(warm_from.voltages
+                            if isinstance(warm_from, SolveResult)
+                            else warm_from)
+            if wv.shape[0] == kernel.n:
+                # kernel node k's id IS its surviving union-find root, so
+                # the projection is a gather of the original voltages
+                roots = np.nonzero(kernel.kernel_of_root >= 0)[0]
+                v0 = wv[roots]
+        kres = sess.solve(weights=as_weights(kernel.instance),
+                          warm_from=v0, rounding=rounding, backend=backend,
+                          cfg=kcfg)
+        return self._lift_result(kernel, kres, rounding, t_pre)
+
+    def _solve_batch_presolve(self, ws: List[Weights], rounding,
+                              cfg: IRLSConfig) -> List[SolveResult]:
+        out: List[Optional[SolveResult]] = [None] * len(ws)
+        groups: Dict[tuple, List[tuple]] = {}
+        for i, w in enumerate(ws):
+            t0 = time.perf_counter()
+            kernel = self._kernel_for(w)
+            t_pre = time.perf_counter() - t0
+            if kernel.trivial:
+                out[i] = self._trivial_from_kernel(kernel, rounding,
+                                                   "scanned", t_pre)
+            else:
+                key = (topology_fingerprint(kernel.instance),)
+                groups.setdefault(key, []).append((i, kernel, t_pre))
+        for items in groups.values():
+            kernel0 = items[0][1]
+            sess, kcfg = self._kernel_session(kernel0, cfg)
+            kress = sess.solve_batch(
+                [as_weights(k.instance) for _, k, _ in items],
+                rounding=rounding, cfg=kcfg)
+            for (i, kernel, t_pre), kres in zip(items, kress):
+                out[i] = self._lift_result(kernel, kres, rounding, t_pre)
+        return [r for r in out if r is not None]
 
     # -- backend drivers ------------------------------------------------------
     def _plans_for(self, cfg: IRLSConfig):
@@ -500,27 +794,35 @@ class MinCutSession:
         diag.setup_time = timings["setup"]
         return prob.to_original(np.asarray(v)), diag, None
 
-    def _get_scanned(self, cfg, dtype, batched: bool):
-        key = (cfg, "scanned", batched)
+    def _get_scanned(self, cfg, dtype, batched: bool, warm: bool = False):
+        key = (cfg, "scanned", batched, warm)
         run = self._steppers.get(key)
         if run is None:
             block_plan, ell_plan = self._plans_for(cfg)
             g0 = self.problem.device_graph(dtype)
             raw = make_scanned_program(g0.src, g0.dst, cfg, block_plan,
-                                       ell_plan)
+                                       ell_plan, warm=warm)
             run = jax.jit(jax.vmap(raw) if batched else raw)
             self._steppers[key] = run
         return run
 
-    def _solve_scanned(self, cfg, weights, timings):
+    def _solve_scanned(self, cfg, weights, timings, warm_from=None):
         prob = self.problem
         dtype = jnp.dtype(cfg.dtype)
+        warm = warm_from is not None
         t = time.perf_counter()
-        have = (cfg, "scanned", False) in self._steppers
-        run = self._get_scanned(cfg, dtype, batched=False)
+        have = (cfg, "scanned", False, warm) in self._steppers
+        run = self._get_scanned(cfg, dtype, batched=False, warm=warm)
         timings["setup"] = 0.0 if have else time.perf_counter() - t
         g = prob.device_graph(dtype, weights)
-        v, rels, iters = run(g.c, g.c_s, g.c_t)
+        if warm:
+            wv = np.asarray(warm_from.voltages
+                            if isinstance(warm_from, SolveResult)
+                            else warm_from)
+            v0 = jnp.asarray(prob.to_reordered(wv), dtype=dtype)
+            v, rels, iters = run(g.c, g.c_s, g.c_t, v0)
+        else:
+            v, rels, iters = run(g.c, g.c_s, g.c_t)
         return (prob.to_original(np.asarray(v)), None, np.asarray(rels),
                 np.asarray(iters))
 

@@ -17,6 +17,6 @@ Serving: ``repro.serve.CutTreeService`` caches finished trees per topology.
 CLI: ``python -m repro.launch.cut_tree``.  Benchmark: ``benchmarks/cuttree``
 (→ repo-root ``BENCH_cuttree.json``).  Reference: docs/API.md "Cut trees".
 """
-from .gusfield import DEFAULT_CFG, build_cut_tree
+from .gusfield import DEFAULT_CFG, build_cut_tree, build_gomory_hu
 from .pairs import graph_cut_value, pin_pair, pin_pairs
 from .tree import CutTree, pack_side

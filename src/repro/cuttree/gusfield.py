@@ -122,7 +122,7 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
                    rounding: str = "sweep",
                    batch: bool = True, max_batch: int = 64,
                    refine: bool = False, store_sides: bool = True,
-                   root: int = 0) -> CutTree:
+                   root: int = 0, contract: bool = False) -> CutTree:
     """Build a Gusfield cut tree of ``problem``'s non-terminal graph.
 
     problem   — a ``Problem`` (plans reused) or an ``STInstance`` (a
@@ -144,9 +144,31 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
                 overwrite its value and stored side (certify/refine).
     store_sides — keep each edge's cut side (bit-packed, n·n/8 bytes) so
                 ``partition``/``global_min_cut`` return certified cuts.
+    contract  — run full Gomory-Hu instead of Gusfield: every recursion
+                step contracts the complement subtrees into supernodes
+                before the pair solve (``Problem.derive`` machinery), so
+                later solves run on shrinking graphs AND every tree edge's
+                stored side is a certified min-cut partition for all pairs
+                it separates.  Exact solver only: each step derives a new
+                topology, which would defeat the IRLS path's whole
+                compiled-plan reuse (and its approximation error would
+                poison the contractions).
     """
     if solver not in ("irls", "exact"):
         raise ValueError(f"unknown solver {solver!r}; known: irls, exact")
+    if contract:
+        if solver != "exact":
+            raise ValueError(
+                "contract=True (Gomory-Hu) requires solver='exact': every "
+                "recursion step solves on a freshly contracted topology, "
+                "so there is no plan reuse for the IRLS path to amortize, "
+                "and contracting on an approximate cut side would "
+                "invalidate the tree")
+        instance = (problem.instance if isinstance(problem, Problem)
+                    else problem)
+        if session is not None:
+            instance = session.problem.instance
+        return build_gomory_hu(instance, root=root, store_sides=store_sides)
     if solver == "irls":
         prob = _as_problem(problem, session)
         if session is None:
@@ -259,6 +281,7 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
     t_total = time.perf_counter() - t0
     meta = {
         "solver": solver,
+        "contracted": False,
         "n": int(n),
         "root": root,
         "fingerprint": fingerprint,
@@ -277,6 +300,162 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
         "t_refine_s": t_refine,
         "t_build_s": t_total,
         "pairs_per_sec": n_solves / max(t_solve, 1e-12),
+    }
+    return CutTree(parent=parent, weight=weight, root=root, sides=sides,
+                   meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Gomory-Hu with complement-side contraction (contract=True)
+# ---------------------------------------------------------------------------
+
+def build_gomory_hu(instance: STInstance, *, root: int = 0,
+                    store_sides: bool = True) -> CutTree:
+    """Classic Gomory-Hu construction over the non-terminal graph.
+
+    The tree is grown over SETS of vertices: each step picks a set X with
+    |X| >= 2 and a pair (s, t) in X, contracts every tree subtree hanging
+    off X into one supernode each (``presolve.derive_instance`` — the
+    "contract the complement side" step), solves the contracted s-t min
+    cut exactly, splits X by the lifted cut side and reattaches each
+    subtree to the side its supernode fell on.  The Gomory-Hu lemma makes
+    every step's contraction exact, so all n−1 edges carry certified cut
+    values AND partitions: the stored side of an edge equals the final
+    tree bipartition across it, for every pair that edge separates.
+
+    n−1 Dinic solves like Gusfield, but on graphs that only shrink as the
+    tree refines — the deeper the recursion, the smaller the solve.
+    """
+    from repro.presolve.contract import derive_instance
+
+    n = instance.n
+    if n < 2:
+        raise ValueError(f"cut tree needs at least 2 nodes, got n={n}")
+    root = int(root)
+    if not (0 <= root < n):
+        raise ValueError(f"root {root} out of range for n={n}")
+    from repro.core.session import topology_fingerprint
+
+    t0 = time.perf_counter()
+    # tree over set-nodes: vertex lists + adjacency; edge data keyed on the
+    # (frozen) pair of set-node ids
+    verts: List[List[int]] = [list(range(n))]
+    adj: List[set] = [set()]
+    edge_val: Dict[Tuple[int, int], float] = {}
+    edge_side: Dict[Tuple[int, int], np.ndarray] = {}  # True = lower-id side
+    contracted_sizes: List[int] = []
+    work = [0]
+    t_solve = 0.0
+    while work:
+        x = work.pop()
+        vx = verts[x]
+        if len(vx) < 2:
+            continue
+        s, t = vx[0], vx[1]
+        # subtrees of the tree with x removed: one supernode each
+        group_of = np.full(n, -1, dtype=np.int64)
+        subtree_roots = []
+        for nb in adj[x]:
+            stack, seen = [nb], {x, nb}
+            members = []
+            while stack:
+                y = stack.pop()
+                members.extend(verts[y])
+                for z in adj[y]:
+                    if z not in seen:
+                        seen.add(z)
+                        stack.append(z)
+            group_of[members] = len(subtree_roots)
+            subtree_roots.append(nb)
+        # vertex_map: X's vertices keep distinct ids, each subtree -> one id
+        vm = np.empty(n, dtype=np.int64)
+        free = group_of < 0
+        vm[free] = np.arange(int(free.sum()))
+        vm[~free] = int(free.sum()) + group_of[~free]
+        d = derive_instance(instance, vm)
+        contracted_sizes.append(d.instance.n)
+        dd = d.instance.graph.weighted_degrees()
+        cs, ct = int(vm[s]), int(vm[t])
+        w = rebind_terminals(d.instance, cs, ct,
+                             strength=1.0 + min(dd[cs], dd[ct]))
+        ts = time.perf_counter()
+        res = max_flow(STInstance(graph=d.instance.graph, s_weight=w.c_s,
+                                  t_weight=w.c_t))
+        t_solve += time.perf_counter() - ts
+        side_c = res.in_source[: d.instance.n]
+        side = side_c[vm]                     # original vertices, True = s
+        value = float(res.value)
+        # split x: A keeps node id x, B becomes a new node y
+        A = [v for v in vx if side[v]]
+        B = [v for v in vx if not side[v]]
+        y = len(verts)
+        verts[x] = A
+        verts.append(B)
+        adj.append(set())
+        # reattach each subtree to the side its supernode fell on
+        for gi, nb in enumerate(subtree_roots):
+            if not side_c[int(free.sum()) + gi]:
+                adj[x].discard(nb)
+                nb_adj = adj[nb]
+                nb_adj.discard(x)
+                nb_adj.add(y)
+                adj[y].add(nb)
+                key_old = (min(x, nb), max(x, nb))
+                key_new = (min(y, nb), max(y, nb))
+                edge_val[key_new] = edge_val.pop(key_old)
+                sd = edge_side.pop(key_old)
+                # normalize: stored True = lower-id side of the edge
+                if (key_old[0] == x) != (key_new[0] == y):
+                    sd = ~sd
+                edge_side[key_new] = sd
+        adj[x].add(y)
+        adj[y].add(x)
+        key = (min(x, y), max(x, y))
+        edge_val[key] = value
+        edge_side[key] = side if key[0] == x else ~side
+        if len(A) >= 2:
+            work.append(x)
+        if len(B) >= 2:
+            work.append(y)
+
+    # every set-node is now a singleton; re-root the tree at ``root``
+    vertex_of = {i: v[0] for i, v in enumerate(verts)}
+    node_of = {v: i for i, v in vertex_of.items()}
+    parent = np.full(n, root, dtype=np.int64)
+    weight = np.full(n, np.inf, dtype=np.float64)
+    sides = (np.zeros((n, (n + 7) // 8), dtype=np.uint8)
+             if store_sides else None)
+    stack = [node_of[root]]
+    seen = {node_of[root]}
+    while stack:
+        a = stack.pop()
+        va = vertex_of[a]
+        for b in adj[a]:
+            if b in seen:
+                continue
+            seen.add(b)
+            vb = vertex_of[b]
+            parent[vb] = va
+            key = (min(a, b), max(a, b))
+            weight[vb] = edge_val[key]
+            if sides is not None:
+                # stored True = lower-id set-node's side; CutTree wants
+                # True = child's (b's) side
+                sd = edge_side[key] if key[0] == b else ~edge_side[key]
+                sides[vb] = pack_side(sd)
+            stack.append(b)
+    meta = {
+        "solver": "exact",
+        "contracted": True,
+        "n": int(n),
+        "root": root,
+        "fingerprint": topology_fingerprint(instance),
+        "n_pairs": int(n - 1),
+        "n_solves": int(n - 1),
+        "mean_contracted_n": float(np.mean(contracted_sizes)),
+        "max_contracted_n": int(np.max(contracted_sizes)),
+        "t_solve_s": t_solve,
+        "t_build_s": time.perf_counter() - t0,
     }
     return CutTree(parent=parent, weight=weight, root=root, sides=sides,
                    meta=meta)

@@ -20,22 +20,13 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from .structures import EdgeList, STInstance
+from .structures import EdgeList, STInstance, canonicalize_edges
 
 
 def _dedup_and_connect(src, dst, w, n, rng) -> EdgeList:
     """Canonicalize (u<v), drop dups/self-loops, then add spanning edges to
     make the graph connected."""
-    src = np.asarray(src, dtype=np.int64)
-    dst = np.asarray(dst, dtype=np.int64)
-    w = np.asarray(w, dtype=np.float64)
-    lo = np.minimum(src, dst)
-    hi = np.maximum(src, dst)
-    keep = lo != hi
-    lo, hi, w = lo[keep], hi[keep], w[keep]
-    key = lo * n + hi
-    _, idx = np.unique(key, return_index=True)
-    lo, hi, w = lo[idx], hi[idx], w[idx]
+    lo, hi, w = canonicalize_edges(src, dst, w, n, merge="first")
 
     # union-find to connect components
     parent = np.arange(n, dtype=np.int64)
@@ -128,6 +119,29 @@ def grid_3d(d: int, h: int, w: int, conn: int = 6, seed: int = 0) -> EdgeList:
     field = _smooth_field((d, h, w), rng).ravel()
     wts = 1.0 + 4.0 * np.exp(-np.abs(field[src] - field[dst]) * 3.0) + rng.uniform(0, 1, size=src.shape[0])
     return _dedup_and_connect(src, dst, wts, n, rng)
+
+
+def social_like(n: int, seed: int = 0, m_max: int = 2) -> EdgeList:
+    """Preferential-attachment social-graph proxy (power-law degrees).
+
+    Each new node attaches to 1..``m_max`` existing nodes sampled
+    proportionally to degree: a dense hub core fringed with degree-1
+    leaves and degree-2 chains — the structure the kernelization rules
+    (``repro.presolve``) eliminate.  Heavy-tailed edge weights."""
+    if n < 2:
+        raise ValueError(f"social_like needs n >= 2, got {n}")
+    rng = np.random.default_rng(seed)
+    src_l, dst_l = [0], [1]
+    pool = [0, 1]                   # one entry per edge endpoint
+    for v in range(2, n):
+        k = int(rng.integers(1, m_max + 1))
+        targets = {int(pool[i]) for i in rng.integers(0, len(pool), size=k)}
+        for t in targets:
+            src_l.append(t)
+            dst_l.append(v)
+            pool.extend((t, v))
+    w = rng.lognormal(0.0, 0.75, size=len(src_l))
+    return _dedup_and_connect(np.asarray(src_l), np.asarray(dst_l), w, n, rng)
 
 
 def random_regular(n: int, deg: int, seed: int = 0) -> EdgeList:

@@ -75,19 +75,13 @@ def _contract(g: EdgeList, labels: np.ndarray, node_w: np.ndarray) -> Tuple[Edge
     """Contract nodes by ``labels`` (coarse ids 0..nc-1), summing parallel
     edge weights and node weights; drops resulting self loops."""
     nc = int(labels.max()) + 1
-    cs = labels[np.asarray(g.src)]
-    cd = labels[np.asarray(g.dst)]
-    keep = cs != cd
-    lo = np.minimum(cs[keep], cd[keep]).astype(np.int64)
-    hi = np.maximum(cs[keep], cd[keep]).astype(np.int64)
-    w = np.asarray(g.weight, dtype=np.float64)[keep]
-    key = lo * nc + hi
-    uniq, inv = np.unique(key, return_inverse=True)
-    wsum = np.zeros(uniq.shape[0], dtype=np.float64)
-    np.add.at(wsum, inv, w)
+    from .structures import canonicalize_edges
+    lo, hi, wsum = canonicalize_edges(labels[np.asarray(g.src)],
+                                      labels[np.asarray(g.dst)],
+                                      g.weight, nc, merge="sum")
     cw = np.zeros(nc, dtype=np.float64)
     np.add.at(cw, labels, node_w)
-    cg = EdgeList(src=(uniq // nc).astype(np.int32), dst=(uniq % nc).astype(np.int32),
+    cg = EdgeList(src=lo.astype(np.int32), dst=hi.astype(np.int32),
                   weight=wsum, n=nc)
     return cg, cw
 

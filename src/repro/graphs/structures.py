@@ -124,6 +124,59 @@ class ELL(NamedTuple):
         return int(self.cols.shape[1])
 
 
+def canonicalize_edges(src, dst, weight, n: int, merge: str = "sum",
+                       return_map: bool = False):
+    """THE edge-list canonicalization: orient each edge ``lo < hi``, drop
+    self-loops, sort by ``(lo, hi)`` and collapse parallel edges.
+
+    ``merge`` decides how parallel edge weights combine:
+
+    * ``"sum"``   — capacities in parallel add (contraction semantics: the
+      partitioner's coarsening, ``Problem.derive``, the presolve kernel)
+    * ``"min"``   — series-path semantics (degree-2 eliminations merge the
+      replacement edges of parallel paths by ``min`` per path *before*
+      summing; rarely wanted directly)
+    * ``"first"`` — keep the first occurrence's weight (the generators'
+      historical dedup behavior)
+
+    Returns ``(src, dst, weight)`` as ``int64/int64/float64`` arrays — plus,
+    when ``return_map``, an ``int64[m_in]`` map from each input edge to its
+    output slot (``-1`` for dropped self-loops), which is what weight
+    projection onto a contracted topology needs (``w_out = segment-combine
+    of w_in over the map``).
+
+    One implementation shared by ``graphs.generators``,
+    ``graphs.partition``, ``repro.presolve`` and ``Problem.derive`` — keep
+    it the single source of truth for edge canonicalization.
+    """
+    if merge not in ("sum", "min", "first"):
+        raise ValueError(f"unknown merge {merge!r}; known: sum, min, first")
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    w = np.asarray(weight, dtype=np.float64)
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    keep = lo != hi
+    emap = np.full(src.shape[0], -1, dtype=np.int64)
+    key = lo[keep] * np.int64(n) + hi[keep]
+    uniq, inv = np.unique(key, return_inverse=True)
+    k = uniq.shape[0]
+    if merge == "sum":
+        wout = np.zeros(k, dtype=np.float64)
+        np.add.at(wout, inv, w[keep])
+    elif merge == "min":
+        wout = np.full(k, np.inf, dtype=np.float64)
+        np.minimum.at(wout, inv, w[keep])
+    else:  # first occurrence (in input order) wins
+        wout = np.zeros(k, dtype=np.float64)
+        first_seen = np.full(k, src.shape[0], dtype=np.int64)
+        np.minimum.at(first_seen, inv, np.nonzero(keep)[0])
+        wout = w[first_seen]
+    emap[keep] = inv
+    out = (uniq // n, uniq % n, wout)
+    return out + (emap,) if return_map else out
+
+
 def edgelist_to_csr(g: EdgeList) -> CSR:
     src = np.asarray(g.src, dtype=np.int64)
     dst = np.asarray(g.dst, dtype=np.int64)

@@ -60,6 +60,13 @@ def main(argv=None) -> int:
     ap.add_argument("--fixed-schedule", action="store_true",
                     help="run the rigid n_irls × pcg_iters schedule instead "
                          "of the adaptive early-exit one")
+    ap.add_argument("--warm", action="store_true",
+                    help="submit with per-tenant identities so the server "
+                         "warm-starts each request from that tenant's "
+                         "previous solution on the topology")
+    ap.add_argument("--presolve", action="store_true",
+                    help="kernelize every request before solving (exact "
+                         "reductions; lifted results)")
     ap.add_argument("--timeout", type=float, default=600.0,
                     help="per-future wait cap, seconds")
     ap.add_argument("--seed", type=int, default=0)
@@ -80,7 +87,8 @@ def main(argv=None) -> int:
     server = MinCutServer(cfg=cfg, capacity=args.capacity,
                           max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms,
-                          max_queue=args.max_queue, seed=args.seed)
+                          max_queue=args.max_queue, seed=args.seed,
+                          presolve=args.presolve)
     keys = [server.register(inst) for inst in instances]
     for inst, key in zip(instances, keys):
         print(f"tenant {key[:8]}: n={inst.n:,} m={inst.graph.m:,}")
@@ -96,7 +104,9 @@ def main(argv=None) -> int:
         w = Weights(np.asarray(inst.graph.weight) * scales[tenant],
                     np.asarray(inst.s_weight), np.asarray(inst.t_weight))
         try:
-            futures.append(server.submit(keys[tenant], w))
+            futures.append(server.submit(
+                keys[tenant], w,
+                tenant=f"tenant-{tenant}" if args.warm else None))
         except ServerOverloaded:
             pass                       # counted in metrics as rejected
         time.sleep(float(rng.exponential(1.0 / args.rate)))
@@ -115,6 +125,7 @@ def main(argv=None) -> int:
     print(server.metrics.dump())
     stats = server.stats()
     print(f"  cache    : {stats['cache']}")
+    print(f"  warm     : {stats['warm']}")
     print(f"  wall     : {t_wall:.2f}s "
           f"({completed / max(t_wall, 1e-9):.1f} solves/sec incl. compile)")
     print(f"completed={completed}/{args.requests} "

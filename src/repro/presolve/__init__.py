@@ -1,0 +1,13 @@
+"""Exact kernelization front-end: s,t-safe reductions, kernel assembly,
+contraction-derived instances, and solution lifting."""
+from .rules import RULES, Reduction, reduce_instance
+from .contract import (Kernel, DerivedInstance, kernelize, derive_instance,
+                       contraction_map, MERGED_SOURCE, MERGED_SINK, ELIMINATED)
+from .lift import lift_partition, lift_voltages, cut_certificate
+
+__all__ = [
+    "RULES", "Reduction", "reduce_instance",
+    "Kernel", "DerivedInstance", "kernelize", "derive_instance",
+    "contraction_map", "MERGED_SOURCE", "MERGED_SINK", "ELIMINATED",
+    "lift_partition", "lift_voltages", "cut_certificate",
+]

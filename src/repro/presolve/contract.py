@@ -1,0 +1,262 @@
+"""Kernel assembly and contraction-derived instances.
+
+:func:`kernelize` runs the reduction rules (``rules.py``) and packages
+the survivors into a :class:`Kernel`: a smaller ``STInstance`` over the
+kernel nodes, a ``vertex_map`` relating original vertices to kernel
+vertices (or to a terminal side / an eliminated slot), and the journal
+needed to lift solutions back (``lift.py``).
+
+:func:`derive_instance` / ``Problem.derive`` / ``Problem.contract`` are
+the general contraction API: given any vertex grouping they build the
+merged instance plus edge/weight projection maps, so callers (e.g. the
+Gomory-Hu builder in ``cuttree``) can pose cut problems on contracted
+topologies and map results back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..graphs.structures import EdgeList, STInstance, canonicalize_edges
+from .rules import RULES, Reduction, reduce_instance
+
+# vertex_map sentinel codes for non-surviving vertices
+MERGED_SOURCE = -1
+MERGED_SINK = -2
+ELIMINATED = -3   # removed by a degree-2 series merge; side from journal
+
+
+@dataclasses.dataclass(frozen=True)
+class Kernel:
+    """Exact kernel of an s-t min-cut instance.
+
+    ``instance`` is the reduced problem over ``kernel_n`` nodes (with the
+    reduced terminal weights baked in); solving it and adding ``base``
+    gives the original min-cut value.  ``vertex_map[i]`` is the kernel id
+    of original vertex i, or ``MERGED_SOURCE`` / ``MERGED_SINK`` /
+    ``ELIMINATED``.  A trivial kernel (``kernel_n == 0``) means the cut
+    is fully decided by reductions — including the s-t disconnected
+    case, where ``base == 0``.
+    """
+
+    original: STInstance
+    instance: Optional[STInstance]   # None iff trivial
+    vertex_map: np.ndarray           # int64[n]
+    base: float
+    st_connected: bool
+    journal: np.ndarray              # float64[k, 5] (u, a, b, w_ua, w_ub)
+    parent: np.ndarray               # int64[n+2] fully compressed
+    removed: np.ndarray              # bool[n+2]
+    kernel_of_root: np.ndarray       # int64[n+2]: kernel id per surviving root, else -1
+    stats: Dict[str, int]
+
+    @property
+    def n(self) -> int:
+        return self.original.n
+
+    @property
+    def kernel_n(self) -> int:
+        return 0 if self.instance is None else self.instance.n
+
+    @property
+    def kernel_m(self) -> int:
+        return 0 if self.instance is None else self.instance.graph.m
+
+    @property
+    def trivial(self) -> bool:
+        return self.instance is None
+
+    @property
+    def node_reduction(self) -> float:
+        """Original/kernel node-count ratio (inf for trivial kernels)."""
+        kn = self.kernel_n
+        return float("inf") if kn == 0 else self.n / kn
+
+    @property
+    def edge_reduction(self) -> float:
+        m = self.original.graph.m
+        km = self.kernel_m
+        return float("inf") if km == 0 else max(m, 1) / km
+
+    # lifting lives in lift.py; re-exported as methods for ergonomics
+    def lift_partition(self, kernel_side: Optional[np.ndarray]) -> np.ndarray:
+        from .lift import lift_partition
+        return lift_partition(self, kernel_side)
+
+    def lift_voltages(self, kernel_v: Optional[np.ndarray],
+                      high: float = 1.0, low: float = 0.0) -> np.ndarray:
+        from .lift import lift_voltages
+        return lift_voltages(self, kernel_v, high=high, low=low)
+
+    def certificate(self, kernel_side: Optional[np.ndarray]) -> Dict[str, float]:
+        from .lift import cut_certificate
+        return cut_certificate(self, kernel_side)
+
+
+def _assemble(instance: STInstance, red: Reduction) -> Kernel:
+    n = red.n
+    S, T = n, n + 1
+    parent = red.parent
+    ids = np.arange(n + 2)
+    is_root = parent == ids
+    # Surviving candidate roots: non-terminal, unremoved union-find roots.
+    surv = is_root & (ids < n) & ~red.removed
+    # Isolated survivors (no incident edge at all, not even a terminal
+    # edge) are degree-0: cut-neutral, merged into the source side.
+    touched = np.zeros(n + 2, dtype=bool)
+    touched[red.eu] = True
+    touched[red.ev] = True
+    isolated = surv & ~touched
+    n_iso = int(isolated.sum())
+    if n_iso:
+        parent = parent.copy()
+        parent[isolated] = S
+        surv = surv & ~isolated
+    kernel_of_root = np.full(n + 2, -1, dtype=np.int64)
+    roots = np.nonzero(surv)[0]
+    kn = int(roots.size)
+    kernel_of_root[roots] = np.arange(kn)
+
+    stats = dict(red.stats)
+    stats["degree0"] = n_iso
+    stats["kernel_n"] = kn
+
+    vm = np.empty(n, dtype=np.int64)
+    r = parent[:n]
+    vm[:] = kernel_of_root[r]
+    vm[r == S] = MERGED_SOURCE
+    vm[r == T] = MERGED_SINK
+    vm[red.removed[r]] = ELIMINATED
+
+    if kn == 0:
+        return Kernel(original=instance, instance=None, vertex_map=vm,
+                      base=red.base, st_connected=red.st_connected,
+                      journal=red.journal, parent=parent,
+                      removed=red.removed, kernel_of_root=kernel_of_root,
+                      stats=stats)
+
+    # Split surviving canonical edges into kernel edges / terminal weights.
+    # Canonical orientation is lo < hi, so a terminal endpoint is always
+    # ``ev`` (S = n, T = n + 1 are the largest ids) and S-T edges were
+    # already folded into ``base``.
+    c_s = np.zeros(kn)
+    c_t = np.zeros(kn)
+    to_s = red.ev == S
+    to_t = red.ev == T
+    plain = ~(to_s | to_t)
+    np.add.at(c_s, kernel_of_root[red.eu[to_s]], red.ew[to_s])
+    np.add.at(c_t, kernel_of_root[red.eu[to_t]], red.ew[to_t])
+    ku = kernel_of_root[red.eu[plain]]
+    kv = kernel_of_root[red.ev[plain]]
+    kw = red.ew[plain]
+    g = EdgeList(src=ku.astype(np.int32), dst=kv.astype(np.int32),
+                 weight=kw.astype(np.float64), n=kn)
+    kinst = STInstance(graph=g, s_weight=c_s, t_weight=c_t)
+    stats["kernel_m"] = g.m
+    return Kernel(original=instance, instance=kinst, vertex_map=vm,
+                  base=red.base, st_connected=red.st_connected,
+                  journal=red.journal, parent=parent, removed=red.removed,
+                  kernel_of_root=kernel_of_root, stats=stats)
+
+
+def kernelize(instance: STInstance,
+              c: Optional[np.ndarray] = None,
+              c_s: Optional[np.ndarray] = None,
+              c_t: Optional[np.ndarray] = None,
+              rules: Sequence[str] = RULES,
+              max_cycles: int = 200) -> Kernel:
+    """Reduce ``instance`` (optionally with override weights) to an exact
+    kernel.  The kernel preserves the min s-t cut value exactly:
+    ``min_cut(kernel) + base == min_cut(original)``."""
+    if c is not None or c_s is not None or c_t is not None:
+        # Bake the overrides into the instance the Kernel keeps as
+        # "original": lifting and certificates must be evaluated against
+        # the weights the reductions actually saw.
+        g = instance.graph
+        instance = STInstance(
+            graph=EdgeList(
+                src=g.src, dst=g.dst,
+                weight=np.asarray(g.weight if c is None else c,
+                                  dtype=np.float64), n=g.n),
+            s_weight=np.asarray(instance.s_weight if c_s is None else c_s,
+                                dtype=np.float64),
+            t_weight=np.asarray(instance.t_weight if c_t is None else c_t,
+                                dtype=np.float64))
+    red = reduce_instance(instance, rules=rules, max_cycles=max_cycles)
+    return _assemble(instance, red)
+
+
+# ---------------------------------------------------------------------------
+# General contraction-derived instances (Gomory-Hu building block)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DerivedInstance:
+    """A contracted instance plus the maps to project/lift.
+
+    ``vertex_map[i]`` is the contracted id of original node i (always
+    >= 0 here — plain contraction never eliminates nodes).  ``edge_map``
+    sends each original edge to its contracted slot (-1 if it became a
+    self-loop).  ``project_weights`` pushes fresh per-edge weights onto
+    the contracted topology; ``lift_partition`` pulls a side assignment
+    back to the original vertices.
+    """
+
+    instance: STInstance
+    vertex_map: np.ndarray
+    edge_map: np.ndarray
+
+    def project_weights(self, c: np.ndarray) -> np.ndarray:
+        out = np.zeros(self.instance.graph.m)
+        ok = self.edge_map >= 0
+        np.add.at(out, self.edge_map[ok], np.asarray(c, dtype=np.float64)[ok])
+        return out
+
+    def lift_partition(self, side: np.ndarray) -> np.ndarray:
+        return np.asarray(side)[self.vertex_map]
+
+
+def derive_instance(instance: STInstance, vertex_map: np.ndarray) -> DerivedInstance:
+    """Contract ``instance`` by ``vertex_map`` (int64[n] -> [0, k)).
+
+    Parallel edges merge by summation, self-loops drop, and terminal
+    weights are segment-summed per group — the exact contraction
+    semantics for cuts (all merged nodes are forced to one side)."""
+    vm = np.asarray(vertex_map, dtype=np.int64)
+    if vm.shape != (instance.n,):
+        raise ValueError(f"vertex_map must have shape ({instance.n},), got {vm.shape}")
+    if vm.min() < 0:
+        raise ValueError("vertex_map entries must be >= 0")
+    k = int(vm.max()) + 1
+    g = instance.graph
+    lo, hi, w, emap = canonicalize_edges(
+        vm[np.asarray(g.src)], vm[np.asarray(g.dst)], g.weight, k,
+        merge="sum", return_map=True)
+    c_s = np.zeros(k)
+    c_t = np.zeros(k)
+    np.add.at(c_s, vm, np.asarray(instance.s_weight, dtype=np.float64))
+    np.add.at(c_t, vm, np.asarray(instance.t_weight, dtype=np.float64))
+    cg = EdgeList(src=lo.astype(np.int32), dst=hi.astype(np.int32),
+                  weight=w, n=k)
+    return DerivedInstance(
+        instance=STInstance(graph=cg, s_weight=c_s, t_weight=c_t),
+        vertex_map=vm, edge_map=emap)
+
+
+def contraction_map(n: int, groups: Sequence[Sequence[int]]) -> np.ndarray:
+    """Build a vertex_map merging each group into one supernode.
+
+    Ungrouped vertices keep distinct ids; ids are compacted to [0, k).
+    The supernode of ``groups[j]`` is the id of its smallest member
+    after compaction (query via ``vertex_map[groups[j][0]]``)."""
+    vm = np.arange(n, dtype=np.int64)
+    for grp in groups:
+        grp = np.asarray(list(grp), dtype=np.int64)
+        if grp.size == 0:
+            continue
+        vm[grp] = int(grp.min())
+    # compact
+    uniq, inv = np.unique(vm, return_inverse=True)
+    return inv.astype(np.int64)

@@ -36,8 +36,11 @@ import dataclasses
 import queue
 import threading
 import time
+from collections import OrderedDict
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Union
+
+import numpy as np
 
 from repro.core.irls import IRLSConfig
 from repro.core.session import (MinCutSession, Problem, SolveResult, Weights,
@@ -59,10 +62,15 @@ class _Request:
     rounding: Optional[str]
     future: Future
     t_submit: float
+    tenant: Optional[str] = None
+    presolve: bool = False
 
     @property
     def group_key(self):
-        return (self.topo_key, self.cfg, self.rounding)
+        # tenant and presolve are batch keys too: a micro-batch must share
+        # one warm-start source and one solve pipeline
+        return (self.topo_key, self.cfg, self.rounding, self.tenant,
+                self.presolve)
 
 
 class MinCutServer:
@@ -96,7 +104,8 @@ class MinCutServer:
                  capacity: int = 8, max_batch: int = 8,
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  rounding: Optional[str] = "two_level", seed: int = 0,
-                 backend: str = "scanned"):
+                 backend: str = "scanned", presolve: bool = False,
+                 warm_capacity: int = 32):
         if backend not in MinCutSession.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"known: {MinCutSession.BACKENDS}")
@@ -104,6 +113,15 @@ class MinCutServer:
         self.rounding = rounding
         self.seed = seed
         self.backend = backend
+        self.presolve = presolve
+        # warm-start store: (tenant, topology fingerprint) -> last converged
+        # voltages for that tenant on that topology.  Tenants replay "same
+        # topology, drifting weights" traffic, so the previous optimum is an
+        # excellent v0; entries only exist for submits that name a tenant.
+        self._warm: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+        self._warm_capacity = warm_capacity
+        self._warm_hits = 0
+        self._warm_misses = 0
         self.metrics = ServeMetrics()
         self.cache = SessionCache(capacity, self._build_session)
         self.admission = AdmissionController(max_queue)
@@ -128,7 +146,8 @@ class MinCutServer:
 
     def submit(self, topo: Union[str, STInstance], weights,
                cfg: Optional[IRLSConfig] = None,
-               rounding=_DEFAULT) -> "Future[SolveResult]":
+               rounding=_DEFAULT, tenant: Optional[str] = None,
+               presolve: Optional[bool] = None) -> "Future[SolveResult]":
         """Enqueue one solve; returns a future resolving to a SolveResult.
 
         ``topo`` — a key from ``register`` or an ``STInstance`` (registered
@@ -136,6 +155,12 @@ class MinCutServer:
         ORIGINAL node/edge order for that topology.  Shape mismatches are
         rejected here, synchronously — a malformed request must never reach
         a batch where it would poison its co-batched neighbours.
+
+        ``tenant`` — opt-in warm-start identity: requests naming a tenant
+        warm-start from that tenant's previous solution on the same
+        topology (keyed on (tenant, topology fingerprint)) and only batch
+        with their own tenant's requests.  ``presolve`` — kernelize before
+        solving (default: the server's ``presolve`` setting).
         """
         if isinstance(topo, str):
             if not self.cache.known(topo):
@@ -154,7 +179,9 @@ class MinCutServer:
                        cfg=cfg or self.cfg,
                        rounding=self.rounding if rounding is _DEFAULT
                        else rounding,
-                       future=Future(), t_submit=now)
+                       future=Future(), t_submit=now, tenant=tenant,
+                       presolve=self.presolve if presolve is None
+                       else presolve)
         with self._submit_lock:
             if self._stopped or self._stop_event.is_set():
                 self.admission.release()
@@ -173,6 +200,8 @@ class MinCutServer:
         out = self.metrics.snapshot()
         out["cache"] = self.cache.stats.snapshot()
         out["in_flight"] = self.admission.in_flight
+        out["warm"] = {"entries": len(self._warm), "hits": self._warm_hits,
+                       "misses": self._warm_misses}
         return out
 
     def stop(self, wait: bool = True) -> None:
@@ -229,21 +258,55 @@ class MinCutServer:
                 if self._inbox.empty():
                     return
 
+    def _warm_lookup(self, tenant: Optional[str], topo_key: str):
+        """Stored voltages for (tenant, topology), None on miss.
+
+        The sharded backend runs a fixed cold schedule only, so warm
+        state is neither consulted nor recorded there."""
+        if tenant is None or self.backend == "sharded":
+            return None
+        v0 = self._warm.get((tenant, topo_key))
+        if v0 is None:
+            self._warm_misses += 1
+        else:
+            self._warm_hits += 1
+            self._warm.move_to_end((tenant, topo_key))
+        return v0
+
+    def _warm_store(self, tenant: Optional[str], topo_key: str,
+                    res: SolveResult) -> None:
+        if tenant is None or self.backend == "sharded":
+            return
+        self._warm[(tenant, topo_key)] = np.asarray(res.voltages)
+        self._warm.move_to_end((tenant, topo_key))
+        while len(self._warm) > self._warm_capacity:
+            self._warm.popitem(last=False)
+
     def _execute(self, batch: MicroBatch) -> None:
         reqs: List[_Request] = batch.requests
-        topo_key, cfg, rounding = batch.key
+        topo_key, cfg, rounding, tenant, presolve = batch.key
         t_exec = time.perf_counter()
         try:
             sess = self.cache.get(topo_key)
-            if self.backend == "scanned":
+            v0 = self._warm_lookup(tenant, topo_key)
+            if self.backend == "scanned" and not presolve:
+                results = sess.solve_batch(
+                    [r.weights for r in reqs], rounding=rounding, cfg=cfg,
+                    pad_to=batch.bucket,
+                    warm_from=None if v0 is None else [v0] * len(reqs))
+            elif self.backend == "scanned":
+                # presolve batches group by kernel topology inside the
+                # session (and run cold: the kernel basis shifts per weight
+                # vector, so prior voltages don't transfer to the batch API)
                 results = sess.solve_batch([r.weights for r in reqs],
                                            rounding=rounding, cfg=cfg,
-                                           pad_to=batch.bucket)
+                                           presolve=True)
             else:
                 # host/sharded: no vmapped batch program — the batch still
                 # amortizes the cached session, one solve per request
                 results = [sess.solve(weights=r.weights, rounding=rounding,
-                                      cfg=cfg) for r in reqs]
+                                      cfg=cfg, presolve=presolve,
+                                      warm_from=v0) for r in reqs]
         except Exception as e:
             now = time.perf_counter()
             for r in reqs:
@@ -258,6 +321,8 @@ class MinCutServer:
                     self.metrics.record_cancelled()
             return
         self.metrics.record_batch(len(reqs), batch.bucket)
+        if results:
+            self._warm_store(tenant, topo_key, results[-1])
         now = time.perf_counter()
         for r, res in zip(reqs, results):
             self.admission.release()

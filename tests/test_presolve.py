@@ -1,0 +1,382 @@
+"""Kernelization front-end: exact rules, lifting, contraction, Gomory-Hu.
+
+Every reduction rule must preserve the exact s-t min-cut value (checked
+against the Dinic oracle), any kernel solution must lift back to an
+original solution of bit-equal certified value, and ``presolve=True``
+must agree with ``presolve=False`` on all three backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (IRLSConfig, MinCutSession, Problem, Weights,
+                        max_flow, rebind_terminals)
+from repro.graphs import generators as gen
+from repro.graphs.structures import EdgeList, STInstance
+from repro.presolve import (ELIMINATED, MERGED_SINK, MERGED_SOURCE, RULES,
+                            contraction_map, derive_instance, kernelize)
+
+# strong enough that the PLAIN path reaches the true min cut on pinned
+# pairs (weak schedules stall on road corridors; the kernel path does not
+# need this, but parity must compare equal-quality solves).  eps stays at
+# 1e-6: smaller drives edge reweights toward 1/eps, past what the
+# float32 sharded backend can invert on hub-heavy kernels.
+STRONG = IRLSConfig(n_irls=50, pcg_max_iters=150, precond="jacobi",
+                    n_blocks=1, pcg_tol=1e-8, eps=1e-6)
+
+
+def _pinned(g, s, t):
+    """One-hot pinned-pair instance (the sparse-terminal regime where a
+    nontrivial kernel remains)."""
+    inst0 = STInstance(graph=g, s_weight=np.zeros(g.n),
+                       t_weight=np.zeros(g.n))
+    w = rebind_terminals(inst0, s, t)
+    return STInstance(graph=g, s_weight=w.c_s, t_weight=w.c_t)
+
+
+def _kernel_value(k):
+    """Exact min cut of the kernel plus its decided base."""
+    if k.trivial:
+        return k.base
+    return max_flow(k.instance).value + k.base
+
+
+def _random_instance(seed):
+    """Seeded topology/terminal variety for the rule property tests."""
+    rng = np.random.default_rng(seed)
+    kind = seed % 3
+    if kind == 0:
+        g = gen.social_like(30 + 7 * (seed % 5), seed=seed)
+    elif kind == 1:
+        g = gen.road_like(5 + seed % 3, seed=seed)
+    else:
+        g = gen.random_regular(20 + seed, 3, seed=seed)
+    if seed % 2 == 0:
+        s, t = rng.choice(g.n, size=2, replace=False)
+        return _pinned(g, int(s), int(t))
+    # sparse random terminal sets (still a general instance, not one-hot)
+    c_s = np.where(rng.uniform(size=g.n) < 0.15, rng.uniform(0.5, 2.0, g.n),
+                   0.0)
+    c_t = np.where(rng.uniform(size=g.n) < 0.15, rng.uniform(0.5, 2.0, g.n),
+                   0.0)
+    c_s[int(rng.integers(g.n))] += 1.0          # never all-zero
+    j = int(rng.integers(g.n))
+    c_t[j] += 1.0
+    c_s[j] = 0.0                                # keep the sides distinct
+    return STInstance(graph=g, s_weight=c_s, t_weight=c_t)
+
+
+# ---------------------------------------------------------------------------
+# rule exactness vs the Dinic oracle
+# ---------------------------------------------------------------------------
+
+def test_each_rule_preserves_min_cut_on_random_graphs():
+    """Every rule alone AND the full fixpoint keep min_cut(kernel) + base
+    == min_cut(original), across seeded topology/terminal variety."""
+    subsets = [("components",), ("degree1",), ("degree2",), ("heavy",),
+               RULES]
+    for seed in range(12):
+        inst = _random_instance(seed)
+        oracle = max_flow(inst).value
+        for rules in subsets:
+            k = kernelize(inst, rules=rules)
+            assert _kernel_value(k) == pytest.approx(oracle, abs=1e-9), \
+                (seed, rules)
+
+
+def test_kernelize_weight_overrides_are_baked():
+    """Override weights must flow into reductions AND the certificate's
+    reference instance (regression: the certificate once scored lifted
+    cuts against the pre-override weights)."""
+    inst = _pinned(gen.road_like(6, seed=3), 2, 30)
+    c2 = np.asarray(inst.graph.weight) * 3.0
+    oracle2 = max_flow(STInstance(graph=EdgeList(
+        src=inst.graph.src, dst=inst.graph.dst, weight=c2, n=inst.n),
+        s_weight=inst.s_weight, t_weight=inst.t_weight)).value
+    k = kernelize(inst, c=c2)
+    assert _kernel_value(k) == pytest.approx(oracle2, abs=1e-9)
+    assert np.allclose(np.asarray(k.original.graph.weight), c2)
+
+
+def test_degree2_chain_collapses_to_min_edge():
+    """A path s - a - u - v - b - t with interior degree-2 nodes reduces
+    to the bottleneck edge; the journal lifts interior nodes to the
+    heavier neighbour's side."""
+    #   0 -5- 1 -3- 2 -7- 3 -4- 4     terminals pin 0 and 4
+    g = EdgeList(src=np.array([0, 1, 2, 3], dtype=np.int32),
+                 dst=np.array([1, 2, 3, 4], dtype=np.int32),
+                 weight=np.array([5.0, 3.0, 7.0, 4.0]), n=5)
+    inst = _pinned(g, 0, 4)
+    k = kernelize(inst, rules=("degree2",))
+    oracle = max_flow(inst).value
+    assert _kernel_value(k) == pytest.approx(oracle, abs=1e-12)
+    side = k.lift_partition(None if k.trivial else
+                            max_flow(k.instance).in_source[:k.kernel_n])
+    cert = k.certificate(None if k.trivial else
+                         max_flow(k.instance).in_source[:k.kernel_n])
+    assert cert["rel_gap"] == pytest.approx(0.0, abs=1e-12)
+    assert side[0] and not side[4]
+
+
+def test_degree2_merge_sums_parallel_edges():
+    """Series-merging u on a - u - b where an a-b edge already exists must
+    SUM the new min(w1,w2) edge into it (multigraph-producing case)."""
+    # triangle a=0, b=1 with chain 0 - 2 - 1 (2 is degree-2) + direct 0-1
+    g = EdgeList(src=np.array([0, 0, 2, 0, 3], dtype=np.int32),
+                 dst=np.array([1, 2, 1, 3, 1], dtype=np.int32),
+                 weight=np.array([2.0, 1.5, 4.0, 3.0, 3.0]), n=4)
+    inst = _pinned(g, 0, 1)
+    oracle = max_flow(inst).value
+    k = kernelize(inst, rules=("degree2",))
+    assert _kernel_value(k) == pytest.approx(oracle, abs=1e-12)
+    k_full = kernelize(inst)
+    assert _kernel_value(k_full) == pytest.approx(oracle, abs=1e-12)
+
+
+def test_heavy_contraction_sums_parallel_edges():
+    """Contracting a heavy edge whose endpoints share a neighbour must sum
+    the resulting parallel edges."""
+    # heavy edge 0-1 (2w >= wdeg for both), both linked to 2; pin 2 vs 3
+    g = EdgeList(src=np.array([0, 0, 1, 2], dtype=np.int32),
+                 dst=np.array([1, 2, 2, 3], dtype=np.int32),
+                 weight=np.array([10.0, 1.0, 1.0, 1.5]), n=4)
+    inst = _pinned(g, 2, 3)
+    oracle = max_flow(inst).value
+    k = kernelize(inst, rules=("heavy",))
+    assert _kernel_value(k) == pytest.approx(oracle, abs=1e-12)
+    # 0 and 1 merged into one supernode
+    vm = k.vertex_map
+    assert vm[0] == vm[1]
+
+
+def test_certificate_exact_for_any_kernel_side():
+    """The lift invariant is unconditional: ANY kernel side vector lifts
+    to an original cut of exactly kernel_cut + base — not only at the
+    optimum."""
+    inst = _pinned(gen.road_like(9, seed=0), 4, 75)
+    k = kernelize(inst)
+    assert not k.trivial
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        side = rng.uniform(size=k.kernel_n) < 0.5
+        cert = k.certificate(side)
+        assert cert["rel_gap"] == pytest.approx(0.0, abs=1e-12)
+        assert cert["lifted_cut"] == pytest.approx(
+            cert["kernel_cut"] + cert["base"], abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# presolve round-trip parity (all three backends)
+# ---------------------------------------------------------------------------
+
+def test_presolve_parity_all_backends():
+    inst = _pinned(gen.road_like(9, seed=0), 4, 75)
+    oracle = max_flow(inst).value
+    sess = MinCutSession(Problem.build(inst, n_blocks=1), STRONG)
+    for backend in ("host", "scanned", "sharded"):
+        plain = sess.solve(backend=backend)
+        pre = sess.solve(backend=backend, presolve=True)
+        assert plain.cut_value == pytest.approx(oracle, rel=1e-6), backend
+        assert pre.cut_value == pytest.approx(plain.cut_value,
+                                              rel=1e-6), backend
+        meta = pre.cut.meta["presolve"]
+        assert meta["kernel_n"] > 0
+        assert meta["kernel_n"] < inst.n
+        assert meta["certificate"]["rel_gap"] == pytest.approx(0.0,
+                                                               abs=1e-9)
+        # lifted voltages polarize the terminals
+        assert pre.voltages[4] > 0.9 and pre.voltages[75] < 0.1
+
+
+def test_presolve_dense_terminals_stays_exact(grid_instance):
+    """Dense-terminal instances barely kernelize — every vertex carries a
+    terminal edge, which blocks the degree rules — but presolve must stay
+    exact (just unprofitable) and report the near-full kernel honestly."""
+    sess = MinCutSession(Problem.build(grid_instance, n_blocks=1), STRONG)
+    pre = sess.solve(presolve=True)
+    plain = sess.solve()
+    meta = pre.cut.meta["presolve"]
+    assert 0 < meta["kernel_n"] < grid_instance.n
+    assert meta["certificate"]["rel_gap"] == pytest.approx(0.0, abs=1e-9)
+    assert pre.cut_value == pytest.approx(plain.cut_value, rel=1e-6)
+
+
+def test_solve_batch_presolve_matches_plain():
+    inst = _pinned(gen.road_like(8, seed=2), 5, 58)
+    sess = MinCutSession(Problem.build(inst, n_blocks=1), STRONG)
+    base = Weights(np.asarray(inst.graph.weight),
+                   np.asarray(inst.s_weight), np.asarray(inst.t_weight))
+    ws = [Weights(base.c * s, base.c_s, base.c_t) for s in (1.0, 1.5, 0.8)]
+    batch = sess.solve_batch(ws, presolve=True)
+    assert len(batch) == 3
+    for w, res in zip(ws, batch):
+        plain = sess.solve(weights=w, backend="scanned")
+        assert res.cut_value == pytest.approx(plain.cut_value, rel=1e-6)
+    with pytest.raises(ValueError, match="cold"):
+        sess.solve_batch(ws, presolve=True, warm_from=[batch[0]] * 3)
+
+
+# ---------------------------------------------------------------------------
+# disconnected terminals (the singular-Laplacian bugfix)
+# ---------------------------------------------------------------------------
+
+def _two_component_instance():
+    # comp A: 0-1-2 (holds s), comp B: 3-4-5 (holds t)
+    g = EdgeList(src=np.array([0, 1, 3, 4], dtype=np.int32),
+                 dst=np.array([1, 2, 4, 5], dtype=np.int32),
+                 weight=np.ones(4), n=6)
+    c_s = np.zeros(6)
+    c_t = np.zeros(6)
+    c_s[0] = 1.0
+    c_t[5] = 1.0
+    return STInstance(graph=g, s_weight=c_s, t_weight=c_t)
+
+
+def test_disconnected_st_returns_trivial_zero_cut():
+    """s and t in different components: the reduced Laplacian is singular
+    (formerly NaN voltages) — now a trivial 0-cut with clean sides."""
+    inst = _two_component_instance()
+    sess = MinCutSession(Problem.build(inst, n_blocks=1), STRONG)
+    for kwargs in ({}, {"presolve": True}, {"backend": "scanned"}):
+        res = sess.solve(**kwargs)
+        assert res.cut_value == 0.0, kwargs
+        ind = np.asarray(res.cut.in_source)
+        assert ind[0] and not ind[5]
+        np.testing.assert_allclose(res.voltages,
+                                   [1, 1, 1, 0, 0, 0], atol=1e-12)
+    k = kernelize(inst)
+    assert k.trivial and k.base == 0.0 and not k.st_connected
+
+
+def test_stray_component_requires_presolve():
+    """A terminal-free component leaves the Laplacian singular; the plain
+    path must refuse with a pointer at presolve=True, which merges the
+    stray component away exactly."""
+    # comp A: 0-1 (s=0, t=1), comp B: 2-3 (no terminals); terminal
+    # strength 5.0 makes the graph edge (2.0) the unique min cut
+    g = EdgeList(src=np.array([0, 2], dtype=np.int32),
+                 dst=np.array([1, 3], dtype=np.int32),
+                 weight=np.array([2.0, 1.0]), n=4)
+    c_s = np.zeros(4)
+    c_t = np.zeros(4)
+    c_s[0] = 5.0
+    c_t[1] = 5.0
+    inst = STInstance(graph=g, s_weight=c_s, t_weight=c_t)
+    sess = MinCutSession(Problem.build(inst, n_blocks=1), STRONG)
+    with pytest.raises(ValueError, match="presolve"):
+        sess.solve()
+    res = sess.solve(presolve=True)
+    assert res.cut_value == pytest.approx(2.0, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# contraction API units
+# ---------------------------------------------------------------------------
+
+def test_contraction_map_groups_and_compacts():
+    vm = contraction_map(6, [[0, 1], [4, 2]])
+    assert vm[0] == vm[1]
+    assert vm[2] == vm[4]
+    assert len({int(v) for v in vm}) == 4
+    assert vm.max() == 3                       # compacted to [0, k)
+
+
+def test_derive_instance_merges_parallel_drops_self_loops():
+    g = EdgeList(src=np.array([0, 1, 0, 2], dtype=np.int32),
+                 dst=np.array([1, 2, 2, 3], dtype=np.int32),
+                 weight=np.array([5.0, 1.0, 2.0, 4.0]), n=4)
+    inst = STInstance(graph=g, s_weight=np.array([1.0, 0, 0, 0]),
+                      t_weight=np.array([0, 0, 0, 3.0]))
+    d = derive_instance(inst, contraction_map(4, [[0, 1]]))
+    # 0-1 became a self-loop (dropped); 1-2 and 0-2 merged to one edge
+    assert d.instance.n == 3
+    assert d.instance.graph.m == 2
+    w = {(int(a), int(b)): float(c) for a, b, c in
+         zip(d.instance.graph.src, d.instance.graph.dst,
+             d.instance.graph.weight)}
+    assert w[(0, 1)] == pytest.approx(3.0)     # 1.0 + 2.0 summed
+    assert w[(1, 2)] == pytest.approx(4.0)
+    assert d.instance.s_weight[0] == pytest.approx(1.0)
+    assert d.instance.t_weight[2] == pytest.approx(3.0)
+    # self-loop slot maps to -1; merged slots share an id
+    assert (d.edge_map == -1).sum() == 1
+    side = d.lift_partition(np.array([True, False, False]))
+    assert side[0] and side[1] and not side[2]
+
+
+def test_problem_contract_pins_supernodes():
+    g = gen.road_like(6, seed=4)
+    inst = STInstance(graph=g, s_weight=np.zeros(g.n),
+                      t_weight=np.zeros(g.n))
+    prob = Problem.build(inst, n_blocks=1)
+    s_nodes, t_nodes = [0, 1, 6], [g.n - 1, g.n - 2]
+    cprob, derived, w = prob.contract(s_nodes, t_nodes)
+    assert cprob.instance.n == derived.instance.n
+    vm = derived.vertex_map
+    assert len({int(vm[i]) for i in s_nodes}) == 1
+    assert len({int(vm[i]) for i in t_nodes}) == 1
+    oracle = max_flow(STInstance(graph=cprob.instance.graph,
+                                 s_weight=w.c_s, t_weight=w.c_t)).value
+    res = MinCutSession(cprob, STRONG).solve(weights=w)
+    assert res.cut_value == pytest.approx(oracle, rel=1e-6)
+    with pytest.raises(ValueError, match="disjoint"):
+        prob.contract([0, 1], [1, 2])
+
+
+def test_vertex_map_sentinels_partition_the_nodes():
+    inst = _pinned(gen.road_like(8, seed=2), 5, 58)
+    k = kernelize(inst)
+    vm = k.vertex_map
+    in_kernel = vm >= 0
+    assert int(in_kernel.sum()) == k.kernel_n or \
+        int(np.unique(vm[in_kernel]).size) == k.kernel_n
+    assert set(np.unique(vm[~in_kernel])) <= {MERGED_SOURCE, MERGED_SINK,
+                                              ELIMINATED}
+    # terminals end up in the kernel or decided onto their OWN side
+    assert vm[5] >= 0 or vm[5] == MERGED_SOURCE
+    assert vm[58] >= 0 or vm[58] == MERGED_SINK
+
+
+# ---------------------------------------------------------------------------
+# Gomory-Hu (contraction-backed cut trees)
+# ---------------------------------------------------------------------------
+
+def test_gomory_hu_matches_oracle_all_pairs():
+    from repro.cuttree import build_gomory_hu, graph_cut_value
+
+    g = gen.random_regular(10, 3, seed=2)
+    inst = STInstance(graph=g, s_weight=np.zeros(g.n),
+                      t_weight=np.zeros(g.n))
+    tree = build_gomory_hu(inst, root=0)
+    assert tree.meta["contracted"] is True
+    assert tree.meta["n_solves"] == g.n - 1
+    # contraction really shrinks the per-step solves
+    assert tree.meta["mean_contracted_n"] < g.n
+    for u in range(g.n):
+        for v in range(u + 1, g.n):
+            w = rebind_terminals(inst, u, v)
+            oracle = max_flow(STInstance(graph=g, s_weight=w.c_s,
+                                         t_weight=w.c_t)).value
+            assert tree.min_cut(u, v) == pytest.approx(oracle, abs=1e-9), \
+                (u, v)
+            side, certified = tree.partition(u, v)
+            assert certified and side[u] and not side[v]
+            assert graph_cut_value(inst, side) == pytest.approx(oracle,
+                                                                abs=1e-9)
+
+
+def test_build_cut_tree_contract_routing():
+    from repro.cuttree import build_cut_tree
+
+    g = gen.road_like(4, seed=6)
+    inst = STInstance(graph=g, s_weight=np.zeros(g.n),
+                      t_weight=np.zeros(g.n))
+    gh = build_cut_tree(inst, solver="exact", contract=True)
+    assert gh.meta["contracted"] is True
+    gus = build_cut_tree(inst, solver="exact")
+    assert gus.meta["contracted"] is False
+    for u in range(0, g.n, 3):
+        for v in range(u + 1, g.n, 3):
+            assert gh.min_cut(u, v) == pytest.approx(gus.min_cut(u, v),
+                                                     abs=1e-9)
+    with pytest.raises(ValueError, match="exact"):
+        build_cut_tree(inst, contract=True)     # irls solver unsupported

@@ -249,3 +249,38 @@ def test_server_host_backend_per_request_solves(grid_instance):
 def test_server_rejects_unknown_backend():
     with pytest.raises(ValueError):
         MinCutServer(backend="warp")
+
+
+def test_server_tenant_warm_start_hits_and_parity(grid_instance):
+    """Requests naming a tenant warm-start from that tenant's previous
+    solution on the same topology; anonymous requests never touch the
+    warm store, and warmth must not change the answer."""
+    ws = [_weights(grid_instance, s) for s in (1.0, 1.1, 1.2)]
+    with MinCutServer(cfg=CFG, max_batch=2, max_wait_ms=1.0) as srv:
+        key = srv.register(grid_instance)
+        cold = [srv.submit(key, w).result(timeout=600.0) for w in ws]
+        warm = [srv.submit(key, w, tenant="acme").result(timeout=600.0)
+                for w in ws]
+        stats = srv.stats()
+    assert stats["warm"]["entries"] == 1       # one (tenant, topology) slot
+    assert stats["warm"]["misses"] == 1        # first tenant solve is cold
+    assert stats["warm"]["hits"] == 2
+    for c, w_res in zip(cold, warm):
+        assert w_res.cut_value == pytest.approx(c.cut_value, rel=1e-4)
+
+
+def test_server_presolve_routes_through_kernel(grid_instance):
+    """presolve=True at the server level kernelizes every solve; the
+    per-request flag overrides it, and both match direct session calls."""
+    w = _weights(grid_instance)
+    with MinCutServer(cfg=CFG, max_batch=2, max_wait_ms=1.0,
+                      presolve=True) as srv:
+        key = srv.register(grid_instance)
+        pre = srv.submit(key, w).result(timeout=600.0)
+        off = srv.submit(key, w, presolve=False).result(timeout=600.0)
+    sess = MinCutSession(Problem.build(grid_instance, n_blocks=1), CFG,
+                         backend="scanned")
+    ref_pre = sess.solve_batch([w], presolve=True)[0]
+    ref_off = sess.solve_batch([w])[0]
+    assert pre.cut_value == pytest.approx(ref_pre.cut_value, rel=1e-4)
+    assert off.cut_value == pytest.approx(ref_off.cut_value, rel=1e-4)

@@ -125,8 +125,12 @@ def test_warm_from_previous_result(road_instance):
     # PCG iterations than the cold solve
     assert r2.cut_value == pytest.approx(r1.cut_value, rel=1e-4)
     assert sum(r2.diagnostics.pcg_iters) <= sum(r1.diagnostics.pcg_iters)
+    # the scanned backend runs a warm-started program too (serving path)
+    r3 = sess.solve(warm_from=r1, backend="scanned")
+    assert r3.cut_value == pytest.approx(r1.cut_value, rel=1e-4)
+    # sharded still runs a fixed cold schedule only
     with pytest.raises(ValueError):
-        sess.solve(warm_from=r1, backend="scanned")
+        sess.solve(warm_from=r1, backend="sharded")
 
 
 def test_solve_batch_matches_individual(grid_instance):
