@@ -49,6 +49,28 @@ def _variants(n_irls: int, pcg_iters: int):
     }
 
 
+def _noop_span_cost_s(iters: int = 20000) -> float:
+    """Seconds per DISABLED ``trace.span`` context — the no-op path every
+    instrumented callsite pays when tracing is off.  The payload derives
+    ``disabled_tracer_overhead_frac`` from it (gate: < 2% of a solve)."""
+    from repro.obs import trace
+    was = trace.enabled()
+    trace.configure(enabled=False)
+    try:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            with trace.span("bench.noop", k=1):
+                pass
+        return (time.perf_counter() - t0) / iters
+    finally:
+        trace.configure(enabled=was)
+
+
+#: instrumented span/counter sites a single scanned ``session.solve`` hits
+#: (session.solve + session.irls + session.rounding + counter + event slack)
+_SPANS_PER_SOLVE = 5
+
+
 def _time_variant(sess, cfg, repeat: int):
     """Steady-state seconds per solve (min over ``repeat``), the rounded cut
     value and the total PCG iterations actually spent."""
@@ -93,12 +115,23 @@ def run(smoke: bool = False, repeat: int = 5, n_irls: int = 50,
             v["cut_rel_diff"] = (abs(v["cut_value"] - base["cut_value"])
                                  / max(abs(base["cut_value"]), 1e-30))
             v["quality_ok"] = bool(v["cut_rel_diff"] <= QUALITY_RTOL)
+        row["mean_pcg_iters_per_solve"] = (
+            sess.telemetry_snapshot()["mean_pcg_iters_per_solve"])
         rows.append(row)
 
     cfg_row = {"n_irls": n_irls, "pcg_max_iters": pcg_iters,
                "repeat": repeat, "smoke": smoke,
                "quality_rtol": QUALITY_RTOL}
     adls = [r["adaptive_fused"] for r in rows]
+    noop_s = _noop_span_cost_s()
+    mean_solve_s = float(np.mean([a["s_per_solve"] for a in adls]))
+    telemetry = {
+        "mean_pcg_iters_per_solve": float(np.mean(
+            [r["mean_pcg_iters_per_solve"] for r in rows])),
+        "noop_span_cost_us": 1e6 * noop_s,
+        "disabled_tracer_overhead_frac":
+            _SPANS_PER_SOLVE * noop_s / max(mean_solve_s, 1e-12),
+    }
     derived = " ".join(
         f"{r['topology']} {r['adaptive_fused']['speedup']:.1f}x"
         f"{'' if r['adaptive_fused']['quality_ok'] else '(QUALITY MISS)'}"
@@ -110,6 +143,7 @@ def run(smoke: bool = False, repeat: int = 5, n_irls: int = 50,
         "solves": sum(r["solves"] for r in rows),
         "topologies": rows,
         "cfg": cfg_row,
+        "telemetry": telemetry,
     }
 
 

@@ -48,8 +48,17 @@ def write_payloads(row: dict, root: str = REPO_ROOT,
     detail) and minus wall-clock timestamps to ``<root>/BENCH_<name>.json``
     so diffs between commits show only measurement changes (the timing
     fields themselves still vary run to run, like any measurement).
-    Returns the repo-root path.
+    Every payload carries the process-global observability snapshot
+    (``repro.obs.bench_snapshot()``) under ``"obs"`` — registry counters
+    plus span-path aggregates when the bench ran traced.  Returns the
+    repo-root path.
     """
+    if "obs" not in row:
+        try:
+            from repro.obs import bench_snapshot
+            row["obs"] = bench_snapshot()
+        except Exception:  # pragma: no cover - obs must never sink a bench
+            row["obs"] = {}
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, f"{row['name']}.json"), "w") as f:
         json.dump(row, f, indent=1, sort_keys=True)

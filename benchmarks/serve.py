@@ -72,8 +72,10 @@ def run(side=10, n_topos=2, n_requests=32, rates=(50.0, 400.0),
                 "batches": s["batches"],
             })
         cache_stats = server.cache.stats.snapshot()
+        telemetry = server.telemetry.snapshot()
 
     peak = max(points, key=lambda p: p["solves_per_sec"])
+    shares = telemetry.get("phase_share_of_total", {})
     return {
         "name": BENCH_NAME,
         "side": side, "n_topos": n_topos, "n_requests": n_requests,
@@ -89,4 +91,14 @@ def run(side=10, n_topos=2, n_requests=32, rates=(50.0, 400.0),
         "p50_ms": peak["p50_ms"],
         "p99_ms": peak["p99_ms"],
         "load_points": points,
+        "telemetry": {
+            "solves": telemetry.get("solves", 0),
+            "mean_pcg_iters_per_solve":
+                telemetry.get("mean_pcg_iters_per_solve"),
+            "mean_irls_iters_per_solve":
+                telemetry.get("mean_irls_iters_per_solve"),
+            "early_exit_rate": telemetry.get("early_exit_rate"),
+            "queue_share_of_total": shares.get("queue"),
+            "irls_share_of_total": shares.get("irls_wall"),
+        },
     }

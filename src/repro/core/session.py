@@ -58,6 +58,9 @@ from .irls import (IRLSConfig, IRLSDiagnostics, _Stepper,
                    make_scanned_program, run_host_loop)
 from .rounding import RoundingResult
 from repro.graphs.structures import EdgeList, STInstance, permute_instance
+from repro.obs import trace
+from repro.obs.metrics import get_registry
+from repro.obs.telemetry import TelemetryAggregator, build_solve_telemetry
 
 
 class Weights(NamedTuple):
@@ -368,6 +371,8 @@ class SolveResult(NamedTuple):
     pcg_iters: Optional[np.ndarray] = None  # scanned/sharded: PCG iterations
                                             # spent per IRLS iteration (0 once
                                             # the adaptive mask froze the lane)
+    telemetry: Optional[Dict] = None        # per-solve telemetry record (see
+                                            # repro.obs.telemetry); JSON-ready
 
     @property
     def cut_value(self) -> float:
@@ -410,6 +415,9 @@ class MinCutSession:
         self._kernels: "OrderedDict[str, object]" = OrderedDict()
         self._kernel_max = 16
         self._kernel_sessions: Dict[tuple, MinCutSession] = {}
+        # per-session fold of every SolveResult.telemetry this session
+        # produced (repro.obs.telemetry); see telemetry_snapshot()
+        self.telemetry = TelemetryAggregator()
 
     # -- public API -----------------------------------------------------------
     def solve(self, weights: Optional[WeightsLike] = None,
@@ -451,28 +459,46 @@ class MinCutSession:
             return trivial
         timings: Dict[str, float] = {}
         pcg_iters = None
+        get_registry().counter(f"session_solves_{backend}_total").inc()
         t0 = time.perf_counter()
-        if backend == "host":
-            v, diag, rels = self._solve_host(cfg, weights, warm_from,
-                                             collect_voltages, timings)
-        elif backend == "scanned":
-            v, diag, rels, pcg_iters = self._solve_scanned(cfg, weights,
-                                                           timings,
-                                                           warm_from=warm_from)
-        else:
-            v, diag, rels, pcg_iters = self._solve_sharded(cfg, weights,
-                                                           timings)
-        timings["irls"] = time.perf_counter() - t0 - timings.get("setup", 0.0)
+        with trace.span("session.solve", backend=backend,
+                        n=self.problem.instance.n):
+            with trace.span("session.irls", backend=backend):
+                if backend == "host":
+                    v, diag, rels = self._solve_host(cfg, weights, warm_from,
+                                                     collect_voltages,
+                                                     timings)
+                elif backend == "scanned":
+                    v, diag, rels, pcg_iters = self._solve_scanned(
+                        cfg, weights, timings, warm_from=warm_from)
+                else:
+                    v, diag, rels, pcg_iters = self._solve_sharded(cfg,
+                                                                   weights,
+                                                                   timings)
+            timings["irls"] = (time.perf_counter() - t0
+                               - timings.get("setup", 0.0))
+            # single solves ARE their own batch: the solver wall a caller
+            # waited behind equals this request's IRLS time
+            timings["irls_wall"] = timings["irls"]
 
-        cut = None
-        if rounding is not None:
-            t1 = time.perf_counter()
-            cut = rd.round_voltages(rounding, self.problem.instance_with(weights), v)
-            timings["rounding"] = time.perf_counter() - t1
-        timings["total"] = time.perf_counter() - t0
+            cut = None
+            if rounding is not None:
+                t1 = time.perf_counter()
+                with trace.span("session.rounding", method=rounding):
+                    cut = rd.round_voltages(
+                        rounding, self.problem.instance_with(weights), v)
+                timings["rounding"] = time.perf_counter() - t1
+            timings["total"] = time.perf_counter() - t0
+        tel = build_solve_telemetry(
+            cfg, backend, self.problem.instance.n,
+            self.problem.instance.graph.m, timings, pcg_iters=pcg_iters,
+            residuals=rels, diagnostics=diag,
+            warm_start=(None if backend == "sharded"
+                        else warm_from is not None))
+        self.telemetry.add(tel)
         return SolveResult(voltages=v, cut=cut, diagnostics=diag,
                            residuals=rels, timings=timings, backend=backend,
-                           pcg_iters=pcg_iters)
+                           pcg_iters=pcg_iters, telemetry=tel)
 
     def solve_batch(self, weights_batch: Sequence[WeightsLike],
                     rounding: Optional[str] = "two_level",
@@ -526,47 +552,77 @@ class MinCutSession:
         if not live:
             return [r for r in out if r is not None]
         ws_live = [ws[i] for i in live]
-        t0 = time.perf_counter()
-        run = self._get_scanned(cfg, dtype, batched=True, warm=warm)
         n_real = len(ws_live)
-        if pad_to is not None:
-            if pad_to < n_real:
-                raise ValueError(
-                    f"pad_to={pad_to} is smaller than the batch ({n_real})")
-            pad = pad_to - n_real
-        else:
-            pad = 0
-        ws_run = ws_live + [ws_live[-1]] * pad
-        C = jnp.stack([jnp.asarray(w.c, dtype=dtype) for w in ws_run])
-        CS = jnp.stack([jnp.asarray(prob.to_reordered(w.c_s), dtype=dtype)
-                        for w in ws_run])
-        CT = jnp.stack([jnp.asarray(prob.to_reordered(w.c_t), dtype=dtype)
-                        for w in ws_run])
-        if warm:
-            vs = [np.asarray(v.voltages if isinstance(v, SolveResult) else v)
-                  for v in warm_from]
-            vs_run = [vs[i] for i in live] + [vs[live[-1]]] * pad
-            V0 = jnp.stack([jnp.asarray(prob.to_reordered(v), dtype=dtype)
-                            for v in vs_run])
-            V, RELS, ITERS = run(C, CS, CT, V0)
-        else:
-            V, RELS, ITERS = run(C, CS, CT)
-        V = np.asarray(V)
-        t_irls = time.perf_counter() - t0
-        for j, i in enumerate(live):
-            w = ws_live[j]
-            v = prob.to_original(V[j])
-            cut = None
-            t1 = time.perf_counter()
-            if rounding is not None:
-                cut = rd.round_voltages(rounding, prob.instance_with(w), v)
-            out[i] = SolveResult(
-                voltages=v, cut=cut, diagnostics=None,
-                residuals=np.asarray(RELS[j]),
-                timings={"irls": t_irls / n_real,
-                         "rounding": time.perf_counter() - t1},
-                backend="scanned", pcg_iters=np.asarray(ITERS[j]))
+        get_registry().counter("session_solves_scanned_total").inc(n_real)
+        t0 = time.perf_counter()
+        with trace.span("session.solve_batch", size=n_real,
+                        pad_to=pad_to or n_real, warm=warm):
+            run = self._get_scanned(cfg, dtype, batched=True, warm=warm)
+            if pad_to is not None:
+                if pad_to < n_real:
+                    raise ValueError(
+                        f"pad_to={pad_to} is smaller than the batch "
+                        f"({n_real})")
+                pad = pad_to - n_real
+            else:
+                pad = 0
+            ws_run = ws_live + [ws_live[-1]] * pad
+            C = jnp.stack([jnp.asarray(w.c, dtype=dtype) for w in ws_run])
+            CS = jnp.stack([jnp.asarray(prob.to_reordered(w.c_s), dtype=dtype)
+                            for w in ws_run])
+            CT = jnp.stack([jnp.asarray(prob.to_reordered(w.c_t), dtype=dtype)
+                            for w in ws_run])
+            with trace.span("session.irls", backend="scanned",
+                            batch=len(ws_run)):
+                if warm:
+                    vs = [np.asarray(v.voltages
+                                     if isinstance(v, SolveResult) else v)
+                          for v in warm_from]
+                    vs_run = [vs[i] for i in live] + [vs[live[-1]]] * pad
+                    V0 = jnp.stack([jnp.asarray(prob.to_reordered(v),
+                                                dtype=dtype)
+                                    for v in vs_run])
+                    V, RELS, ITERS = run(C, CS, CT, V0)
+                else:
+                    V, RELS, ITERS = run(C, CS, CT)
+                V = np.asarray(V)
+            t_irls = time.perf_counter() - t0
+            rounded = []
+            for j, i in enumerate(live):
+                w = ws_live[j]
+                v = prob.to_original(V[j])
+                cut = None
+                t1 = time.perf_counter()
+                if rounding is not None:
+                    with trace.span("session.rounding", method=rounding):
+                        cut = rd.round_voltages(rounding,
+                                                prob.instance_with(w), v)
+                rounded.append((i, j, v, cut, time.perf_counter() - t1))
+            # every caller's future resolves only once the WHOLE batch
+            # returns, so the solver wall a request waited behind is the
+            # full batch wall minus its own rounding (counted separately)
+            t_wall = time.perf_counter() - t0
+            for i, j, v, cut, t_round in rounded:
+                timings = {"irls": t_irls / n_real,
+                           "irls_wall": t_wall - t_round,
+                           "rounding": t_round}
+                tel = build_solve_telemetry(
+                    cfg, "scanned", prob.instance.n, prob.instance.graph.m,
+                    timings, pcg_iters=np.asarray(ITERS[j]),
+                    residuals=np.asarray(RELS[j]), warm_start=warm)
+                self.telemetry.add(tel)
+                out[i] = SolveResult(
+                    voltages=v, cut=cut, diagnostics=None,
+                    residuals=np.asarray(RELS[j]), timings=timings,
+                    backend="scanned", pcg_iters=np.asarray(ITERS[j]),
+                    telemetry=tel)
         return [r for r in out if r is not None]
+
+    def telemetry_snapshot(self) -> Dict[str, object]:
+        """Aggregated telemetry over every solve this session ran (PCG
+        spend distribution, phase walls, early-exit/warm-start rates,
+        kernel reductions) — see ``repro.obs.telemetry``."""
+        return self.telemetry.snapshot()
 
     # -- presolve (kernelization) ---------------------------------------------
     def _check_connectivity(self, weights, rounding, backend):
@@ -602,10 +658,16 @@ class MinCutSession:
         if rounding is not None:
             cut = RoundingResult(in_source=in_source, cut_value=0.0,
                                  meta={"method": "trivial_disconnected"})
+        timings = {"total": 0.0, "irls": 0.0}
+        tel = build_solve_telemetry(
+            self.cfg, backend, self.problem.instance.n,
+            self.problem.instance.graph.m, timings, pcg_iters=[])
+        tel["trivial"] = "disconnected"
+        self.telemetry.add(tel)
         return SolveResult(voltages=in_source.astype(np.float64), cut=cut,
                            diagnostics=None, residuals=None,
-                           timings={"total": 0.0, "irls": 0.0},
-                           backend=backend, pcg_iters=None)
+                           timings=timings,
+                           backend=backend, pcg_iters=None, telemetry=tel)
 
     def _kernel_for(self, w: Weights):
         """Kernelize under ``w`` (LRU-cached on the weight content — the
@@ -673,9 +735,23 @@ class MinCutSession:
         timings = dict(kres.timings)
         timings["presolve"] = t_presolve
         timings["total"] = timings.get("total", 0.0) + t_presolve
+        # the kernel session built the solve telemetry (n/m are the KERNEL
+        # size — the instance actually solved); graft the reduction stats
+        # and the presolve-inclusive phases on top
+        tel = dict(kres.telemetry) if kres.telemetry else None
+        if tel is not None:
+            tel["presolve"] = {
+                "kernel_n": kernel.kernel_n, "kernel_m": kernel.kernel_m,
+                "node_reduction": kernel.node_reduction,
+                "edge_reduction": kernel.edge_reduction,
+                "base": kernel.base, "stats": kernel.stats,
+            }
+            tel["phases"] = {k: float(x) for k, x in timings.items()}
+            self.telemetry.add(tel)
         return SolveResult(voltages=v, cut=cut, diagnostics=kres.diagnostics,
                            residuals=kres.residuals, timings=timings,
-                           backend=kres.backend, pcg_iters=kres.pcg_iters)
+                           backend=kres.backend, pcg_iters=kres.pcg_iters,
+                           telemetry=tel)
 
     def _trivial_from_kernel(self, kernel, rounding, backend,
                              t_presolve: float) -> SolveResult:
@@ -691,18 +767,29 @@ class MinCutSession:
                       "presolve": {"kernel_n": 0, "base": kernel.base,
                                    "stats": kernel.stats,
                                    "certificate": cert}})
+        timings = {"presolve": t_presolve, "total": t_presolve}
+        tel = build_solve_telemetry(self.cfg, backend, 0, 0, timings,
+                                    pcg_iters=[])
+        tel["trivial"] = "presolve"
+        tel["presolve"] = {
+            "kernel_n": 0, "kernel_m": 0,
+            "node_reduction": kernel.node_reduction,
+            "edge_reduction": kernel.edge_reduction,
+            "base": kernel.base, "stats": kernel.stats,
+        }
+        self.telemetry.add(tel)
         return SolveResult(voltages=in_source.astype(np.float64), cut=cut,
                            diagnostics=None, residuals=None,
-                           timings={"presolve": t_presolve,
-                                    "total": t_presolve},
-                           backend=backend, pcg_iters=None)
+                           timings=timings,
+                           backend=backend, pcg_iters=None, telemetry=tel)
 
     def _solve_presolve(self, weights, warm_from, rounding, backend,
                         cfg: IRLSConfig) -> SolveResult:
         w = (self.problem.check_weights(weights) if weights is not None
              else as_weights(self.problem.instance))
         t0 = time.perf_counter()
-        kernel = self._kernel_for(w)
+        with trace.span("session.presolve", n=self.problem.instance.n):
+            kernel = self._kernel_for(w)
         t_pre = time.perf_counter() - t0
         if kernel.trivial:
             return self._trivial_from_kernel(kernel, rounding, backend, t_pre)
@@ -728,7 +815,8 @@ class MinCutSession:
         groups: Dict[tuple, List[tuple]] = {}
         for i, w in enumerate(ws):
             t0 = time.perf_counter()
-            kernel = self._kernel_for(w)
+            with trace.span("session.presolve", n=self.problem.instance.n):
+                kernel = self._kernel_for(w)
             t_pre = time.perf_counter() - t0
             if kernel.trivial:
                 out[i] = self._trivial_from_kernel(kernel, rounding,

@@ -50,6 +50,8 @@ from repro.core.maxflow import max_flow
 from repro.core.session import (MinCutSession, Problem, Weights,
                                 rebind_terminals)
 from repro.graphs.structures import STInstance
+from repro.obs import trace
+from repro.obs.metrics import get_registry
 
 from .pairs import graph_cut_value
 from .tree import CutTree, pack_side
@@ -208,75 +210,84 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
     t_solve = 0.0
     t0 = time.perf_counter()
     speculative = bool(batch) and solver == "irls"
-    while groups:
-        per_group = max(1, max_batch // len(groups)) if speculative else 1
-        tasks: List[Tuple[int, int]] = []        # (group index, member)
-        for gi, (rep, members) in enumerate(groups):
-            for m in members[:per_group]:
-                tasks.append((gi, m))
-        pairs = [(m, groups[gi][0]) for gi, m in tasks]
-        wave_sizes.append(len(pairs))
-        n_solves += len(pairs)
-        ts = time.perf_counter()
-        if solver == "exact":
-            results = _solve_wave_exact(instance, deg, pairs)
-        else:
-            results = _solve_wave_irls(session, cfg, deg, pairs, rounding,
-                                       batch, max_batch)
-        t_solve += time.perf_counter() - ts
-        by_group: Dict[int, List[Tuple[int, float, np.ndarray]]] = {}
-        for (gi, m), (value, side) in zip(tasks, results):
-            by_group.setdefault(gi, []).append((m, value, side))
-        new_groups: List[Tuple[int, List[int]]] = []
-        for gi, (rep, members) in enumerate(groups):
-            cur = list(members)
-            cur_set = set(cur)
-            # accept each speculative (m, rep) solve while m is still
-            # attached to rep; members that moved to a split-off side get
-            # re-solved (against their new rep) in a later wave
-            for m, value, side in by_group[gi]:
-                if m not in cur_set:
-                    continue
-                parent[m] = rep
-                weight[m] = value
-                if sides is not None:
-                    sides[m] = pack_side(side)
-                stay, moved = [], []
-                for x in cur:
-                    if x == m:
+    with trace.span("cuttree.build", solver=solver, n=n,
+                    batched=speculative) as build_span:
+        while groups:
+            per_group = (max(1, max_batch // len(groups)) if speculative
+                         else 1)
+            tasks: List[Tuple[int, int]] = []        # (group index, member)
+            for gi, (rep, members) in enumerate(groups):
+                for m in members[:per_group]:
+                    tasks.append((gi, m))
+            pairs = [(m, groups[gi][0]) for gi, m in tasks]
+            wave_sizes.append(len(pairs))
+            n_solves += len(pairs)
+            ts = time.perf_counter()
+            with trace.span("cuttree.wave", pairs=len(pairs),
+                            groups=len(groups)):
+                if solver == "exact":
+                    results = _solve_wave_exact(instance, deg, pairs)
+                else:
+                    results = _solve_wave_irls(session, cfg, deg, pairs,
+                                               rounding, batch, max_batch)
+            t_solve += time.perf_counter() - ts
+            by_group: Dict[int, List[Tuple[int, float, np.ndarray]]] = {}
+            for (gi, m), (value, side) in zip(tasks, results):
+                by_group.setdefault(gi, []).append((m, value, side))
+            new_groups: List[Tuple[int, List[int]]] = []
+            for gi, (rep, members) in enumerate(groups):
+                cur = list(members)
+                cur_set = set(cur)
+                # accept each speculative (m, rep) solve while m is still
+                # attached to rep; members that moved to a split-off side
+                # get re-solved (against their new rep) in a later wave
+                for m, value, side in by_group[gi]:
+                    if m not in cur_set:
                         continue
-                    (moved if side[x] else stay).append(x)
-                cur, cur_set = stay, set(stay)
-                if moved:
-                    new_groups.append((m, moved))
-            if cur:
-                new_groups.append((rep, cur))
-        groups = new_groups
+                    parent[m] = rep
+                    weight[m] = value
+                    if sides is not None:
+                        sides[m] = pack_side(side)
+                    stay, moved = [], []
+                    for x in cur:
+                        if x == m:
+                            continue
+                        (moved if side[x] else stay).append(x)
+                    cur, cur_set = stay, set(stay)
+                    if moved:
+                        new_groups.append((m, moved))
+                if cur:
+                    new_groups.append((rep, cur))
+            groups = new_groups
 
-    refined = 0
-    max_refine_rel = 0.0
-    if refine and solver == "irls":
-        tr = time.perf_counter()
-        for i in range(n):
-            if i == root:
-                continue
-            w = _pair_weights(instance, deg, i, int(parent[i]))
-            res = max_flow(STInstance(graph=instance.graph, s_weight=w.c_s,
-                                      t_weight=w.c_t))
-            exact = float(res.value)
-            rel = abs(exact - weight[i]) / max(abs(exact), 1e-30)
-            if rel > 1e-12:
-                refined += 1
-                max_refine_rel = max(max_refine_rel, rel)
-            weight[i] = exact
-            if sides is not None:
-                side = res.in_source[:n].copy()
-                if not side[i]:          # normalize: True = i's side
-                    side = ~side
-                sides[i] = pack_side(side)
-        t_refine = time.perf_counter() - tr
-    else:
-        t_refine = 0.0
+        refined = 0
+        max_refine_rel = 0.0
+        if refine and solver == "irls":
+            tr = time.perf_counter()
+            with trace.span("cuttree.refine", edges=n - 1):
+                for i in range(n):
+                    if i == root:
+                        continue
+                    w = _pair_weights(instance, deg, i, int(parent[i]))
+                    res = max_flow(STInstance(graph=instance.graph,
+                                              s_weight=w.c_s,
+                                              t_weight=w.c_t))
+                    exact = float(res.value)
+                    rel = abs(exact - weight[i]) / max(abs(exact), 1e-30)
+                    if rel > 1e-12:
+                        refined += 1
+                        max_refine_rel = max(max_refine_rel, rel)
+                    weight[i] = exact
+                    if sides is not None:
+                        side = res.in_source[:n].copy()
+                        if not side[i]:      # normalize: True = i's side
+                            side = ~side
+                        sides[i] = pack_side(side)
+            t_refine = time.perf_counter() - tr
+        else:
+            t_refine = 0.0
+        build_span.set(waves=len(wave_sizes), solves=n_solves,
+                       discarded=n_solves - (n - 1))
 
     t_total = time.perf_counter() - t0
     meta = {
@@ -290,6 +301,7 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
                                                  # discarded speculation
         "n_waves": len(wave_sizes),
         "wave_sizes": wave_sizes,
+        "speculation_discarded": int(n_solves - (n - 1)),
         "batched": speculative,
         "max_batch": int(max_batch),
         "rounding": rounding if solver == "irls" else None,
@@ -301,6 +313,10 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
         "t_build_s": t_total,
         "pairs_per_sec": n_solves / max(t_solve, 1e-12),
     }
+    reg = get_registry()
+    reg.counter("cuttree_builds_total").inc()
+    reg.counter("cuttree_pair_solves_total").inc(n_solves)
+    reg.counter("cuttree_speculation_discarded_total").inc(n_solves - (n - 1))
     return CutTree(parent=parent, weight=weight, root=root, sides=sides,
                    meta=meta)
 
@@ -379,8 +395,9 @@ def build_gomory_hu(instance: STInstance, *, root: int = 0,
         w = rebind_terminals(d.instance, cs, ct,
                              strength=1.0 + min(dd[cs], dd[ct]))
         ts = time.perf_counter()
-        res = max_flow(STInstance(graph=d.instance.graph, s_weight=w.c_s,
-                                  t_weight=w.c_t))
+        with trace.span("cuttree.wave", pairs=1, contracted_n=d.instance.n):
+            res = max_flow(STInstance(graph=d.instance.graph, s_weight=w.c_s,
+                                      t_weight=w.c_t))
         t_solve += time.perf_counter() - ts
         side_c = res.in_source[: d.instance.n]
         side = side_c[vm]                     # original vertices, True = s
@@ -457,5 +474,8 @@ def build_gomory_hu(instance: STInstance, *, root: int = 0,
         "t_solve_s": t_solve,
         "t_build_s": time.perf_counter() - t0,
     }
+    reg = get_registry()
+    reg.counter("cuttree_builds_total").inc()
+    reg.counter("cuttree_pair_solves_total").inc(n - 1)
     return CutTree(parent=parent, weight=weight, root=root, sides=sides,
                    meta=meta)

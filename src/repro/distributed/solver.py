@@ -38,7 +38,8 @@ abstract-plan path has no ELL staging and runs the unfused system build).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+import warnings
+from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -50,11 +51,32 @@ from repro.core import adaptive as sched
 from repro.core import laplacian as lap
 from repro.core.irls import IRLSConfig, eps_schedule_array
 from repro.core.pcg import pcg_fixed_iters, pcg_masked
+from repro.obs import trace
+from repro.obs.metrics import get_registry
 from .collectives import SOLVER_AXIS, flat_mesh, psum_dots, shard_map
 from .spmv import (HaloPlan, build_halo_ell, build_halo_plan,
                    build_psum_plan, coo_reweight, halo_exchange,
                    halo_l1_local, make_ell_halo_matvec, make_halo_matvec,
                    psum_matvec)
+
+
+class Float32DivergenceWarning(UserWarning):
+    """IRLS reweights ran into the float32 precision wall (see
+    ``float32_divergence_threshold``)."""
+
+
+def float32_divergence_threshold(eps: float) -> float:
+    """Largest reweighted conductance float32 IRLS tolerates at this ε.
+
+    The reweight r = c²/√((c·Δv)² + ε²) is bounded by max(c²)/ε, so a
+    shrinking ε drives the conductance spread toward 1/ε.  In float32 the
+    PCG quadratic forms lose ~εf32·κ of their value to rounding (εf32 ≈
+    1.19e-7); once the spread reaches ~1/√(ε·εf32) the lost digits reach
+    the residual scale √ε the stop test needs, and the iteration stalls or
+    diverges (ROADMAP: ε = 1e-8 diverges in float32 while ε = 1e-6 is
+    fine — thresholds ≈ 2.9e7 and 2.9e6 against reweights ~1e8 and ~1e6).
+    """
+    return 1.0 / float(np.sqrt(eps * np.finfo(np.float32).eps))
 
 
 class HaloBlockPlan(NamedTuple):
@@ -163,6 +185,10 @@ class ShardedSolver:
                  halo_compression: Optional[str] = None):
         self.cfg = cfg
         self.halo_compression = halo_compression
+        # kept for host-side diagnostics (the float32 divergence sentinel
+        # reads the weights); None on the abstract-plans dry-run path
+        self._instance = instance
+        self._collectives: Optional[List[dict]] = None
         self.mesh = mesh if mesh is not None else flat_mesh()
         self.schedule = schedule
         self.p = int(np.prod(self.mesh.devices.shape))
@@ -202,6 +228,7 @@ class ShardedSolver:
         phases (k-way partition, lowering, compile) are skipped entirely;
         this is the session API's sharded serving path.
         """
+        self._instance = instance
         if self.schedule == "halo":
             new_plan = build_halo_plan(instance, self.p, labels=self._labels)
             if (new_plan.nl, new_plan.b_sh, new_plan.heads.shape) != \
@@ -506,6 +533,87 @@ class ShardedSolver:
     def lower(self):
         return self._fn.lower(*self.abstract_inputs())
 
+    def collective_stats(self) -> List[dict]:
+        """Per-while-loop direct collective counts of the compiled program
+        (``launch.hlo_analysis.while_loop_collectives``), cached.  The
+        first call pays an AOT lower + compile of the same program — the
+        tracing layer therefore only records these gauges when a trace is
+        actually enabled."""
+        if self._collectives is None:
+            from repro.launch.hlo_analysis import while_loop_collectives
+            txt = self.lower().compile().as_text()
+            self._collectives = while_loop_collectives(txt)
+        return self._collectives
+
+    def _record_collective_gauges(self) -> None:
+        reg = get_registry()
+        stats = self.collective_stats()
+        reg.gauge(f"sharded_{self.schedule}_collective_loops").set(len(stats))
+        if stats:
+            reg.gauge(f"sharded_{self.schedule}_collectives_per_pcg_step").set(
+                max(s["direct"] for s in stats if s["depth"] >= 2)
+                if any(s["depth"] >= 2 for s in stats)
+                else max(s["direct"] for s in stats))
+
+    def check_float32_divergence(self, rels=None) -> Optional[float]:
+        """Host-side sentinel: will the reweight ceiling c²/ε blow past the
+        float32 stability threshold as the IRLS converges?
+
+        The reweight r = c²/√((c·Δv)² + ε²) approaches c²/ε on settled
+        edges (Δv → 0), so the conductance spread is set by ε RELATIVE to
+        the weight scale: with ε_rel = ε / max(c) the normalized spread is
+        1/ε_rel, and it crosses ``float32_divergence_threshold(ε_rel)``
+        exactly when ε_rel < εf32 (float32 machine eps ≈ 1.19e-7) — the
+        regime ROADMAP observed diverging (ε = 1e-8 at unit weights) while
+        ε = 1e-6 stays safe.  Deterministic (weights + config only, no
+        solved voltages needed); ``rels`` (per-IRLS final PCG relative
+        residuals) is only consulted to name the first stalled iteration
+        in the warning.  Returns the offending max conductance c²_max/ε
+        when it breaches (after warning), else None.  No-op for float64
+        configs or when the solver has no instance (abstract-plans dry
+        run).
+        """
+        inst = self._instance
+        if inst is None or jnp.dtype(self.cfg.dtype) != jnp.float32:
+            return None
+        eps_sched = eps_schedule_array(self.cfg)
+        eps = float(eps_sched[-1]) if len(eps_sched) else float(self.cfg.eps)
+        c_max = 0.0
+        for arr in (inst.graph.weight, inst.s_weight, inst.t_weight):
+            a = np.asarray(arr, dtype=np.float64)
+            if a.size:
+                c_max = max(c_max, float(np.max(a, initial=0.0)))
+        if c_max <= 0:
+            return None
+        eps_rel = eps / c_max
+        thresh = float32_divergence_threshold(eps_rel)
+        if 1.0 / eps_rel <= thresh:
+            return None
+        r_max = c_max * c_max / eps
+        stalled_iter = None
+        if rels is not None:
+            r = np.asarray(rels, dtype=np.float64)
+            bad = np.nonzero(~np.isfinite(r) | (r > 1.0))[0]
+            if bad.size:
+                stalled_iter = int(bad[0])
+        get_registry().counter("sharded_float32_divergence_total").inc()
+        trace.event("sharded.float32_divergence", max_conductance=r_max,
+                    threshold=thresh, eps=eps, eps_rel=eps_rel,
+                    stalled_iter=stalled_iter, schedule=self.schedule)
+        at_iter = (f"; PCG stalled (rel residual > 1 or non-finite) first "
+                   f"at IRLS iteration {stalled_iter}"
+                   if stalled_iter is not None else "")
+        warnings.warn(Float32DivergenceWarning(
+            f"sharded IRLS reweights will reach ~{r_max:.3e} as edges "
+            f"settle — past the float32 stability threshold "
+            f"({thresh:.3e} at weight-relative eps {eps_rel:.3e}): the "
+            f"PCG quadratic forms lose their significant digits at this "
+            f"conductance spread and the iteration can stall or diverge"
+            f"{at_iter}.  Raise cfg.eps (>= ~{c_max * 1.2e-7:.1e} at this "
+            f"weight scale; 1e-6 is safe at unit weights) or switch "
+            f"cfg.dtype to float64"), stacklevel=3)
+        return r_max
+
     def solve(self):
         """Run the compiled SPMD program.
 
@@ -515,8 +623,16 @@ class ShardedSolver:
         under the fixed schedule; drops to 0 once the adaptive mask froze
         the solve — the direct measure of what the early exit saved).
         """
-        out, rels, iters = self._fn(*[jnp.asarray(a) for a in self.arrays()])
-        out = np.asarray(out).reshape(-1)
-        if self.schedule == "halo":
-            return out[self.plan.perm], np.asarray(rels), np.asarray(iters)
-        return out[: self.plan.n], np.asarray(rels), np.asarray(iters)
+        with trace.span("sharded.solve", schedule=self.schedule, p=self.p,
+                        n=self.plan.n):
+            out, rels, iters = self._fn(*[jnp.asarray(a)
+                                          for a in self.arrays()])
+            out = np.asarray(out).reshape(-1)
+            if self.schedule == "halo":
+                v = out[self.plan.perm]
+            else:
+                v = out[: self.plan.n]
+            self.check_float32_divergence(rels=np.asarray(rels))
+            if trace.enabled():
+                self._record_collective_gauges()
+        return v, np.asarray(rels), np.asarray(iters)

@@ -71,7 +71,15 @@ def main(argv=None) -> int:
                     help="per-future wait cap, seconds")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--trace", default=None, metavar="OUT.JSONL",
+                    help="enable span tracing and stream spans to this JSONL "
+                         "sink (inspect with `python -m repro.launch.obs "
+                         "OUT.JSONL`)")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro.obs import trace as _trace
+        _trace.configure(enabled=True, jsonl=args.trace)
 
     import numpy as np
 
@@ -124,12 +132,24 @@ def main(argv=None) -> int:
 
     print(server.metrics.dump())
     stats = server.stats()
+    tel = stats.get("telemetry", {})
     print(f"  cache    : {stats['cache']}")
     print(f"  warm     : {stats['warm']}")
+    if tel.get("solves"):
+        print(f"  telemetry: {tel['solves']} solves, "
+              f"{tel['mean_pcg_iters_per_solve']:.1f} mean PCG iters/solve, "
+              f"{tel['mean_irls_iters_per_solve']:.1f} mean IRLS iters, "
+              f"early_exit_rate={tel['early_exit_rate']:.2f} "
+              f"warm_start_rate={tel['warm_start_rate']:.2f}")
     print(f"  wall     : {t_wall:.2f}s "
           f"({completed / max(t_wall, 1e-9):.1f} solves/sec incl. compile)")
     print(f"completed={completed}/{args.requests} "
           f"(failed={failed}, rejected={stats['rejected']})")
+    if args.trace:
+        from repro.obs import trace as _trace
+        _trace.fence()
+        print(f"  trace    : {len(_trace.spans())} spans ring-buffered, "
+              f"sink {args.trace}")
 
     if args.json_out:
         stats["wall_s"] = t_wall

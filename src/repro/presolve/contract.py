@@ -184,8 +184,23 @@ def kernelize(instance: STInstance,
                                 dtype=np.float64),
             t_weight=np.asarray(instance.t_weight if c_t is None else c_t,
                                 dtype=np.float64))
-    red = reduce_instance(instance, rules=rules, max_cycles=max_cycles)
-    return _assemble(instance, red)
+    from repro.obs import trace
+    from repro.obs.metrics import get_registry
+    with trace.span("presolve.kernelize", n=instance.n,
+                    m=instance.graph.m) as sp:
+        red = reduce_instance(instance, rules=rules, max_cycles=max_cycles)
+        kernel = _assemble(instance, red)
+        sp.set(kernel_n=kernel.stats.get("kernel_n"),
+               kernel_m=kernel.stats.get("kernel_m", 0),
+               cycles=kernel.stats.get("cycles"))
+    reg = get_registry()
+    reg.counter("presolve_kernelize_total").inc()
+    reg.counter("presolve_nodes_in_total").inc(instance.n)
+    reg.counter("presolve_kernel_nodes_total").inc(
+        kernel.stats.get("kernel_n", 0))
+    if kernel.trivial:
+        reg.counter("presolve_trivial_total").inc()
+    return kernel
 
 
 # ---------------------------------------------------------------------------

@@ -37,11 +37,18 @@ def bucket_size(k: int, max_batch: int) -> int:
 
 
 class MicroBatch(NamedTuple):
-    """One flushed group: execute ``requests`` padded up to ``bucket``."""
+    """One flushed group: execute ``requests`` padded up to ``bucket``.
+
+    ``reason`` records WHICH trigger flushed the group — "size" (hit
+    ``max_batch``), "deadline" (oldest request aged past max-wait-ms) or
+    "shutdown" (engine drain) — so the tracing layer can tell batches
+    that filled up from batches the clock forced out.
+    """
 
     key: Hashable
     requests: List[Any]
     bucket: int
+    reason: str = "size"
 
 
 class MicroBatcher:
@@ -69,14 +76,15 @@ class MicroBatcher:
         oldest = [g[0][1] for g in self._groups.values() if g]
         return min(oldest) + self.max_wait_s if oldest else None
 
-    def _take(self, key: Hashable, k: int) -> MicroBatch:
+    def _take(self, key: Hashable, k: int, reason: str) -> MicroBatch:
         group = self._groups[key]
         chunk = [r for r, _ in group[:k]]
         del group[:k]
         if not group:
             del self._groups[key]
         return MicroBatch(key=key, requests=chunk,
-                          bucket=bucket_size(len(chunk), self.max_batch))
+                          bucket=bucket_size(len(chunk), self.max_batch),
+                          reason=reason)
 
     def ready(self, now: float) -> List[MicroBatch]:
         """Flush every group that hit its size or deadline trigger."""
@@ -84,10 +92,10 @@ class MicroBatcher:
         for key in list(self._groups):
             while key in self._groups and \
                     len(self._groups[key]) >= self.max_batch:
-                out.append(self._take(key, self.max_batch))
+                out.append(self._take(key, self.max_batch, "size"))
             if key in self._groups and \
                     now - self._groups[key][0][1] >= self.max_wait_s:
-                out.append(self._take(key, self.max_batch))
+                out.append(self._take(key, self.max_batch, "deadline"))
         return out
 
     def flush_all(self) -> List[MicroBatch]:
@@ -95,5 +103,5 @@ class MicroBatcher:
         out: List[MicroBatch] = []
         for key in list(self._groups):
             while key in self._groups:
-                out.append(self._take(key, self.max_batch))
+                out.append(self._take(key, self.max_batch, "shutdown"))
         return out

@@ -25,6 +25,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.session import MinCutSession, topology_fingerprint
 from repro.graphs.structures import STInstance
+from repro.obs import trace
 
 
 class ServerOverloaded(RuntimeError):
@@ -98,7 +99,9 @@ class SessionCache:
         # build OUTSIDE the lock: partition + compile can take seconds and
         # must not block submitters.  Only the worker thread builds, so a
         # duplicate concurrent build cannot happen.
-        sess = self._build(inst)
+        with trace.span("serve.session_build", topo=key[:8],
+                        rebuild=key in self._ever_cached):
+            sess = self._build(inst)
         with self._lock:
             self._sessions[key] = sess
             self._sessions.move_to_end(key)

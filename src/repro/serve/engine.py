@@ -46,6 +46,9 @@ from repro.core.irls import IRLSConfig
 from repro.core.session import (MinCutSession, Problem, SolveResult, Weights,
                                 check_weights_for)
 from repro.graphs.structures import STInstance
+from repro.obs import trace
+from repro.obs.metrics import get_registry
+from repro.obs.telemetry import TelemetryAggregator
 
 from .batcher import MicroBatch, MicroBatcher
 from .cache import AdmissionController, ServerOverloaded, SessionCache
@@ -123,6 +126,10 @@ class MinCutServer:
         self._warm_hits = 0
         self._warm_misses = 0
         self.metrics = ServeMetrics()
+        # cross-request solver telemetry (PCG spend, phase walls, early-exit
+        # rates) aggregated from every SolveResult.telemetry this server
+        # produced; surfaced under stats()["telemetry"]
+        self.telemetry = TelemetryAggregator()
         self.cache = SessionCache(capacity, self._build_session)
         self.admission = AdmissionController(max_queue)
         self._batcher = MicroBatcher(max_batch=max_batch,
@@ -187,6 +194,7 @@ class MinCutServer:
                 self.admission.release()
                 raise RuntimeError("MinCutServer is stopped")
             self.metrics.record_submit(now)
+            get_registry().counter("serve_requests_total").inc()
             self._inbox.put(req)
         return req.future
 
@@ -202,6 +210,7 @@ class MinCutServer:
         out["in_flight"] = self.admission.in_flight
         out["warm"] = {"entries": len(self._warm), "hits": self._warm_hits,
                        "misses": self._warm_misses}
+        out["telemetry"] = self.telemetry.snapshot()
         return out
 
     def stop(self, wait: bool = True) -> None:
@@ -286,44 +295,57 @@ class MinCutServer:
         reqs: List[_Request] = batch.requests
         topo_key, cfg, rounding, tenant, presolve = batch.key
         t_exec = time.perf_counter()
-        try:
-            sess = self.cache.get(topo_key)
-            v0 = self._warm_lookup(tenant, topo_key)
-            if self.backend == "scanned" and not presolve:
-                results = sess.solve_batch(
-                    [r.weights for r in reqs], rounding=rounding, cfg=cfg,
-                    pad_to=batch.bucket,
-                    warm_from=None if v0 is None else [v0] * len(reqs))
-            elif self.backend == "scanned":
-                # presolve batches group by kernel topology inside the
-                # session (and run cold: the kernel basis shifts per weight
-                # vector, so prior voltages don't transfer to the batch API)
-                results = sess.solve_batch([r.weights for r in reqs],
-                                           rounding=rounding, cfg=cfg,
-                                           presolve=True)
-            else:
-                # host/sharded: no vmapped batch program — the batch still
-                # amortizes the cached session, one solve per request
-                results = [sess.solve(weights=r.weights, rounding=rounding,
-                                      cfg=cfg, presolve=presolve,
-                                      warm_from=v0) for r in reqs]
-        except Exception as e:
-            now = time.perf_counter()
-            for r in reqs:
-                self.admission.release()
-                # set_running_or_notify_cancel returns False for a future
-                # the caller already cancelled — resolving it would raise
-                # InvalidStateError and kill the worker thread
-                if r.future.set_running_or_notify_cancel():
-                    self.metrics.record_request({}, now, failed=True)
-                    r.future.set_exception(e)
+        get_registry().counter("serve_batches_total").inc()
+        with trace.span("serve.batch", size=len(reqs), bucket=batch.bucket,
+                        reason=batch.reason, backend=self.backend,
+                        topo=topo_key[:8]):
+            try:
+                # assembly: everything between batch pickup and solver
+                # dispatch — session cache lookup (possibly a compile) and
+                # warm-start staging
+                with trace.span("serve.assembly", topo=topo_key[:8]):
+                    sess = self.cache.get(topo_key)
+                    v0 = self._warm_lookup(tenant, topo_key)
+                t_dispatch = time.perf_counter()
+                if self.backend == "scanned" and not presolve:
+                    results = sess.solve_batch(
+                        [r.weights for r in reqs], rounding=rounding, cfg=cfg,
+                        pad_to=batch.bucket,
+                        warm_from=None if v0 is None else [v0] * len(reqs))
+                elif self.backend == "scanned":
+                    # presolve batches group by kernel topology inside the
+                    # session (and run cold: the kernel basis shifts per
+                    # weight vector, so prior voltages don't transfer to the
+                    # batch API)
+                    results = sess.solve_batch([r.weights for r in reqs],
+                                               rounding=rounding, cfg=cfg,
+                                               presolve=True)
                 else:
-                    self.metrics.record_cancelled()
-            return
+                    # host/sharded: no vmapped batch program — the batch
+                    # still amortizes the cached session, one solve/request
+                    results = [sess.solve(weights=r.weights,
+                                          rounding=rounding,
+                                          cfg=cfg, presolve=presolve,
+                                          warm_from=v0) for r in reqs]
+            except Exception as e:
+                now = time.perf_counter()
+                for r in reqs:
+                    self.admission.release()
+                    # set_running_or_notify_cancel returns False for a
+                    # future the caller already cancelled — resolving it
+                    # would raise InvalidStateError and kill the worker
+                    if r.future.set_running_or_notify_cancel():
+                        self.metrics.record_request({}, now, failed=True)
+                        r.future.set_exception(e)
+                    else:
+                        self.metrics.record_cancelled()
+                return
         self.metrics.record_batch(len(reqs), batch.bucket)
         if results:
             self._warm_store(tenant, topo_key, results[-1])
         now = time.perf_counter()
+        assembly = t_dispatch - t_exec
+        warm_hit = v0 is not None
         for r, res in zip(reqs, results):
             self.admission.release()
             if not r.future.set_running_or_notify_cancel():
@@ -331,7 +353,22 @@ class MinCutServer:
                 continue
             timings = dict(res.timings)
             timings["queue"] = t_exec - r.t_submit
+            timings["assembly"] = assembly
+            # solver wall the request actually waited behind: the FULL
+            # dispatch window (a presolve batch runs several kernel-group
+            # solves back to back — the session's own irls_wall only covers
+            # this request's group), minus the phases accounted separately
+            timings["irls_wall"] = max(0.0, (now - t_dispatch) - sum(
+                float(timings.get(k, 0.0))
+                for k in ("setup", "presolve", "rounding")))
             timings["total"] = now - r.t_submit
-            res = res._replace(timings=timings)
+            tel = res.telemetry
+            if tel is not None:
+                tel = dict(tel)
+                tel["phases"] = timings
+                if tenant is not None and self.backend != "sharded":
+                    tel["warm_start"] = warm_hit
+                self.telemetry.add(tel)
+            res = res._replace(timings=timings, telemetry=tel)
             self.metrics.record_request(timings, now)
             r.future.set_result(res)

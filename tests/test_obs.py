@@ -1,0 +1,410 @@
+"""Observability layer: tracer, metrics registry, telemetry, sentinels.
+
+Covers the obs substrate itself (span nesting/exceptions/threading, the
+Prometheus round trip, bounded reservoirs) AND its integration contract:
+every backend's SolveResult carries telemetry, the serving engine's span
+tree accounts for per-request latency, ServeMetrics runs at flat memory,
+and the sharded float32 divergence sentinel fires exactly in the regime
+ROADMAP observed diverging.
+"""
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from conftest import tiny_instance
+
+
+@pytest.fixture
+def traced():
+    """Enable the global tracer for one test; restore disabled + empty."""
+    from repro.obs import trace
+    trace.clear()
+    trace.configure(enabled=True)
+    yield trace
+    trace.configure(enabled=False, jsonl="")
+    trace.clear()
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_disabled_is_shared_noop(self):
+        from repro.obs import trace
+        from repro.obs.trace import _NOOP
+        assert not trace.enabled()
+        s1 = trace.span("a", k=1)
+        s2 = trace.span("b")
+        assert s1 is _NOOP and s2 is _NOOP
+        with s1 as sp:
+            sp.set(x=2)
+            assert sp.fence(123) == 123
+        trace.event("e")
+        assert trace.spans() == []
+
+    def test_nesting_parent_ids(self, traced):
+        with traced.span("outer") as o:
+            with traced.span("inner"):
+                pass
+        recs = {r.name: r for r in traced.spans()}
+        assert recs["inner"].parent_id == recs["outer"].span_id
+        assert recs["outer"].parent_id is None
+        # children close before parents
+        assert recs["inner"].t1 <= recs["outer"].t1
+
+    def test_exception_recorded_and_stack_intact(self, traced):
+        with pytest.raises(ValueError):
+            with traced.span("boom"):
+                raise ValueError("x")
+        (rec,) = traced.spans()
+        assert rec.error == "ValueError"
+        # the thread-local stack unwound: a new span is a root again
+        with traced.span("after"):
+            pass
+        after = [r for r in traced.spans() if r.name == "after"][0]
+        assert after.parent_id is None
+
+    def test_late_attrs_and_events(self, traced):
+        with traced.span("s", a=1) as sp:
+            sp.set(b=2)
+            traced.event("warn", code=7)
+        recs = {r.name: r for r in traced.spans()}
+        assert recs["s"].attrs == {"a": 1, "b": 2}
+        ev = recs["warn"]
+        assert ev.dur_s == 0.0 and ev.attrs == {"code": 7}
+        assert ev.parent_id == recs["s"].span_id
+
+    def test_thread_reentrancy(self, traced):
+        """Each thread gets its own parent stack: trees never cross."""
+        def work(tag):
+            with traced.span(f"{tag}.outer"):
+                with traced.span(f"{tag}.inner"):
+                    pass
+
+        ts = [threading.Thread(target=work, args=(f"t{i}",), name=f"obs-t{i}")
+              for i in range(4)]
+        with traced.span("main.root"):
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        recs = {r.name: r for r in traced.spans()}
+        for i in range(4):
+            inner, outer = recs[f"t{i}.inner"], recs[f"t{i}.outer"]
+            assert inner.parent_id == outer.span_id
+            # thread roots do NOT parent onto main.root (different stack)
+            assert outer.parent_id is None
+            assert outer.thread == f"obs-t{i}"
+
+    def test_ring_is_bounded(self):
+        from repro.obs.trace import Tracer
+        tr = Tracer(ring=16)
+        tr.configure(enabled=True)
+        for i in range(100):
+            with tr.span(f"s{i}"):
+                pass
+        recs = tr.spans()
+        assert len(recs) == 16
+        assert recs[-1].name == "s99"      # newest kept, oldest dropped
+
+    def test_jsonl_sink_roundtrip(self, traced, tmp_path):
+        from repro.obs.dashboard import aggregate, load_spans, render, span_names
+        path = str(tmp_path / "trace.jsonl")
+        traced.configure(jsonl=path)
+        with traced.span("root", k="v"):
+            with traced.span("child"):
+                pass
+        traced.configure(jsonl="")        # close the sink
+        spans, offset = load_spans(path)
+        assert offset > 0
+        assert span_names(spans) == {"root": 1, "child": 1}
+        agg = aggregate(spans)
+        assert set(agg) == {"root", "root>child"}
+        assert agg["root"]["count"] == 1
+        # self time excludes the child's wall
+        assert agg["root"]["self_s"] <= agg["root"]["total_s"]
+        out = render(agg)
+        assert "root" in out and "child" in out
+
+    def test_incremental_load_offset(self, traced, tmp_path):
+        from repro.obs.dashboard import load_spans
+        path = str(tmp_path / "t.jsonl")
+        traced.configure(jsonl=path)
+        with traced.span("one"):
+            pass
+        spans, off = load_spans(path)
+        assert [s["name"] for s in spans] == ["one"]
+        with traced.span("two"):
+            pass
+        spans2, off2 = load_spans(path, offset=off)
+        assert [s["name"] for s in spans2] == ["two"]
+        assert off2 > off
+        traced.configure(jsonl="")
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_reservoir_bounded_exact_aggregates(self):
+        from repro.obs.metrics import Reservoir
+        r = Reservoir(maxlen=64, seed=1)
+        n = 100_000
+        for i in range(n):
+            r.add(float(i))
+        assert len(r) == 64                 # flat memory
+        assert r.count == n
+        assert r.total == pytest.approx(n * (n - 1) / 2)
+        assert (r.min, r.max) == (0.0, float(n - 1))
+        # uniform sample: the median estimate lands in the middle half
+        assert n * 0.25 < r.percentile(50) < n * 0.75
+
+    def test_counter_monotone(self):
+        from repro.obs.metrics import Counter
+        c = Counter("c")
+        c.inc()
+        c.inc(2.5)
+        assert c.value == 3.5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_registry_get_or_create_and_kind_conflict(self):
+        from repro.obs.metrics import MetricsRegistry
+        reg = MetricsRegistry()
+        assert reg.counter("x") is reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+    def test_prometheus_roundtrip(self):
+        from repro.obs.metrics import MetricsRegistry, parse_prometheus_text
+        reg = MetricsRegistry()
+        reg.counter("solves").inc(7)
+        reg.gauge("depth").set(3.25)
+        h = reg.histogram("lat_seconds")
+        for v in (0.1, 0.2, 0.3, 0.4):
+            h.observe(v)
+        parsed = parse_prometheus_text(reg.prometheus_text(prefix="app_"))
+        assert parsed["app_solves_total"] == 7.0
+        assert parsed["app_depth"] == 3.25
+        summ = parsed["app_lat_seconds"]
+        assert summ["count"] == 4
+        assert summ["sum"] == pytest.approx(1.0)
+        assert summ["quantiles"][0.5] == pytest.approx(0.25)
+
+    def test_servemetrics_flat_memory_100k(self):
+        """The satellite regression: the old ServeMetrics appended every
+        sample to unbounded lists; 100k records must stay at maxlen."""
+        from repro.serve.metrics import _SAMPLED, ServeMetrics
+        m = ServeMetrics(max_samples=256)
+        for i in range(100_000):
+            m.record_submit(float(i))
+            m.record_request({"queue": 0.001, "assembly": 0.0005,
+                              "irls": 0.01, "irls_wall": 0.012,
+                              "rounding": 0.001, "total": 0.015},
+                             float(i) + 0.015)
+        assert m.submitted == m.completed == 100_000   # counters stay exact
+        for ph in _SAMPLED:
+            assert len(m._hist(f"{ph}_seconds").values()) <= 256
+        assert len(m._hist("phase_coverage").values()) <= 256
+        snap = m.snapshot()
+        assert snap["phase_coverage"] == pytest.approx(
+            0.0145 / 0.015, rel=1e-6)
+        assert snap["total_p50_ms"] == pytest.approx(15.0, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# solve telemetry (all three backends)
+# ---------------------------------------------------------------------------
+
+class TestTelemetry:
+    @pytest.mark.parametrize("backend", ["host", "scanned", "sharded"])
+    def test_backend_solve_carries_telemetry(self, backend):
+        from repro.core import IRLSConfig, MinCutSession, Problem
+        inst = tiny_instance(n=12, seed=2)
+        cfg = IRLSConfig(n_irls=4, pcg_max_iters=10, precond="jacobi",
+                         n_blocks=1)
+        sess = MinCutSession(Problem.build(inst, n_blocks=1), cfg,
+                             backend=backend)
+        res = sess.solve()
+        tel = res.telemetry
+        assert tel is not None
+        assert tel["backend"] == backend
+        assert tel["n"] == inst.n and tel["m"] == inst.graph.m
+        assert tel["irls_executed"] >= 1
+        assert tel["pcg_total"] >= 1
+        # irls_executed counts the iterations that did PCG work; the raw
+        # per-iteration lists may carry a frozen/bootstrap tail entry
+        assert len(tel["pcg_per_iter"]) >= tel["irls_executed"]
+        assert len(tel["rel_history"]) == len(tel["pcg_per_iter"])
+        assert tel["eps_last"] == pytest.approx(cfg.eps)
+        snap = sess.telemetry_snapshot()
+        assert snap["solves"] == 1
+        assert snap["by_backend"] == {backend: 1}
+        assert snap["mean_pcg_iters_per_solve"] == tel["pcg_total"]
+
+    def test_solve_batch_telemetry_per_item(self):
+        from repro.core import IRLSConfig, MinCutSession, Problem
+        from repro.core.session import as_weights
+        inst = tiny_instance(n=12, seed=3)
+        cfg = IRLSConfig(n_irls=4, pcg_max_iters=10, precond="jacobi",
+                         n_blocks=1)
+        sess = MinCutSession(Problem.build(inst, n_blocks=1), cfg,
+                             backend="scanned")
+        w = as_weights(inst)
+        results = sess.solve_batch([w, w, w])
+        assert len(results) == 3
+        for res in results:
+            assert res.telemetry["backend"] == "scanned"
+            assert res.telemetry["pcg_total"] >= 1
+        assert sess.telemetry_snapshot()["solves"] == 3
+
+    def test_presolve_telemetry_grafts_kernel_stats(self):
+        from repro.core import IRLSConfig, MinCutSession, Problem
+        inst = tiny_instance(n=16, seed=4)
+        cfg = IRLSConfig(n_irls=4, pcg_max_iters=10, precond="jacobi",
+                         n_blocks=1)
+        sess = MinCutSession(Problem.build(inst, n_blocks=1), cfg,
+                             backend="scanned")
+        res = sess.solve(presolve=True)
+        tel = res.telemetry
+        assert tel is not None
+        pre = tel.get("presolve")
+        if pre is not None and "node_reduction" in pre:  # non-trivial kernel
+            assert pre["kernel_n"] >= 0
+            assert pre["node_reduction"] >= 1.0
+            # n/m are the KERNEL the solver actually ran on
+            assert tel["n"] == pre["kernel_n"] or tel["n"] == 0
+        assert "presolve" in tel["phases"]
+
+    def test_aggregator_thread_safe_counts(self):
+        from repro.obs.telemetry import TelemetryAggregator
+        agg = TelemetryAggregator()
+        tel = {"backend": "scanned", "pcg_total": 10, "irls_executed": 2,
+               "phases": {"total": 1.0, "irls_wall": 0.5}}
+
+        def add_many():
+            for _ in range(200):
+                agg.add(dict(tel))
+
+        ts = [threading.Thread(target=add_many) for _ in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        snap = agg.snapshot()
+        assert snap["solves"] == 800
+        assert snap["mean_pcg_iters_per_solve"] == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------------------
+# serving engine integration
+# ---------------------------------------------------------------------------
+
+class TestServeObs:
+    def _run_server(self, n_requests=6, **kw):
+        from repro.core import IRLSConfig
+        from repro.core.session import as_weights
+        from repro.serve import MinCutServer
+        inst = tiny_instance(n=12, seed=5)
+        cfg = IRLSConfig(n_irls=4, pcg_max_iters=10, precond="jacobi",
+                         n_blocks=1)
+        with MinCutServer(cfg=cfg, max_batch=4, max_wait_ms=2.0,
+                          **kw) as server:
+            key = server.register(inst)
+            w = as_weights(inst)
+            futs = [server.submit(key, w) for _ in range(n_requests)]
+            for f in futs:
+                f.result(timeout=300.0)
+            return server.stats()
+
+    def test_worker_thread_spans_and_coverage(self, traced):
+        stats = self._run_server()
+        names = {r.name for r in traced.spans()}
+        assert {"serve.batch", "serve.assembly",
+                "session.irls"} <= names
+        # the engine worker thread owns the serve.batch spans, and its
+        # span tree is well formed (assembly nested under batch)
+        recs = [r for r in traced.spans() if r.name == "serve.batch"]
+        assert recs and all(r.thread != "MainThread" for r in recs)
+        by_id = {r.span_id: r for r in traced.spans()}
+        for r in traced.spans():
+            if r.name == "serve.assembly":
+                assert by_id[r.parent_id].name == "serve.batch"
+        # span-tree completeness: the recorded phases account for the
+        # request total (the CI smoke gates this at 0.95 on a real replay)
+        assert stats["phase_coverage"] >= 0.90
+
+    def test_server_telemetry_aggregate(self):
+        stats = self._run_server(n_requests=5)
+        tel = stats["telemetry"]
+        assert tel["solves"] == 5
+        assert tel["by_backend"] == {"scanned": 5}
+        assert tel["mean_pcg_iters_per_solve"] >= 1
+        assert 0.0 < tel["phase_share_of_total"]["irls_wall"] <= 1.0
+
+    def test_untraced_server_unaffected(self):
+        from repro.obs import trace
+        assert not trace.enabled()
+        stats = self._run_server(n_requests=3)
+        assert stats["completed"] == 3
+        assert trace.spans() == []
+
+
+# ---------------------------------------------------------------------------
+# sharded float32 divergence sentinel
+# ---------------------------------------------------------------------------
+
+class TestFloat32Sentinel:
+    def test_threshold_values(self):
+        from repro.distributed.solver import float32_divergence_threshold
+        f32 = float(np.finfo(np.float32).eps)
+        assert float32_divergence_threshold(1e-8) == pytest.approx(
+            1.0 / np.sqrt(1e-8 * f32))
+        # the breach condition 1/eps > thresh(eps) flips exactly at
+        # eps == float32 machine eps
+        assert 1.0 / 1e-8 > float32_divergence_threshold(1e-8)
+        assert 1.0 / 1e-6 < float32_divergence_threshold(1e-6)
+
+    @pytest.mark.parametrize("eps,expect", [(1e-8, True), (1e-6, False)])
+    def test_sentinel_fires_at_roadmap_regimes(self, eps, expect):
+        import warnings
+
+        from repro.core import IRLSConfig
+        from repro.distributed.solver import (Float32DivergenceWarning,
+                                              ShardedSolver)
+        inst = tiny_instance(n=12, seed=6)
+        cfg = IRLSConfig(n_irls=2, pcg_max_iters=5, precond="jacobi",
+                         n_blocks=1, eps=eps, dtype="float32")
+        s = ShardedSolver(inst, cfg, schedule="psum")
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            r_max = s.check_float32_divergence()
+        fired = [w for w in rec
+                 if issubclass(w.category, Float32DivergenceWarning)]
+        assert bool(fired) == expect
+        if expect:
+            assert r_max is not None and r_max > 0
+            msg = str(fired[0].message)
+            assert "float32" in msg and "cfg.eps" in msg
+        else:
+            assert r_max is None
+
+    def test_sentinel_silent_in_float64(self):
+        import warnings
+
+        from repro.core import IRLSConfig
+        from repro.distributed.solver import ShardedSolver
+        inst = tiny_instance(n=12, seed=6)
+        cfg = IRLSConfig(n_irls=2, pcg_max_iters=5, precond="jacobi",
+                         n_blocks=1, eps=1e-8, dtype="float64")
+        s = ShardedSolver(inst, cfg, schedule="psum")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert s.check_float32_divergence() is None
