@@ -13,6 +13,7 @@ return their row; they never touch disk themselves.
 from __future__ import annotations
 
 import json
+import math
 import os
 import sys
 import traceback
@@ -40,6 +41,26 @@ OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 _NON_TRAJECTORY_KEYS = ("timestamp", "date", "time")
 
 
+def sanitize_json(obj):
+    """Replace non-finite numbers (NaN/±inf) with ``None``, recursively.
+
+    ``json.dump`` happily emits bare ``NaN``/``Infinity`` tokens, which are
+    NOT JSON — any strict parser (and most non-Python tooling) chokes on
+    the payload.  Benchmarks legitimately produce NaN for undefined stats
+    (e.g. an early-exit rate with zero adaptive solves), so the writer
+    converts them to ``null`` rather than rejecting the row.
+    """
+    if isinstance(obj, dict):
+        return {k: sanitize_json(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize_json(v) for v in obj]
+    if isinstance(obj, bool):       # bool is an int subclass: keep it
+        return obj
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    return obj
+
+
 def write_payloads(row: dict, root: str = REPO_ROOT,
                    out_dir: str = OUT_DIR) -> str:
     """THE benchmark writer — the only place bench payloads touch disk.
@@ -50,8 +71,11 @@ def write_payloads(row: dict, root: str = REPO_ROOT,
     fields themselves still vary run to run, like any measurement).
     Every payload carries the process-global observability snapshot
     (``repro.obs.bench_snapshot()``) under ``"obs"`` — registry counters
-    plus span-path aggregates when the bench ran traced.  Returns the
-    repo-root path.
+    plus span-path aggregates when the bench ran traced.  Non-finite
+    numbers are rewritten to ``null`` (``sanitize_json``) and the dump
+    runs with ``allow_nan=False``, so every written payload is strict
+    JSON that round-trips through ``json.loads``.  Returns the repo-root
+    path.
     """
     if "obs" not in row:
         try:
@@ -59,14 +83,15 @@ def write_payloads(row: dict, root: str = REPO_ROOT,
             row["obs"] = bench_snapshot()
         except Exception:  # pragma: no cover - obs must never sink a bench
             row["obs"] = {}
+    row = sanitize_json(row)
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, f"{row['name']}.json"), "w") as f:
-        json.dump(row, f, indent=1, sort_keys=True)
+        json.dump(row, f, indent=1, sort_keys=True, allow_nan=False)
         f.write("\n")
     payload = {k: v for k, v in row.items() if k not in _NON_TRAJECTORY_KEYS}
     path = os.path.join(root, f"BENCH_{row['name']}.json")
     with open(path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
+        json.dump(payload, f, indent=1, sort_keys=True, allow_nan=False)
         f.write("\n")
     return path
 

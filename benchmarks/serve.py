@@ -1,11 +1,21 @@
-"""Serving engine benchmark: offered load vs latency/throughput.
+"""Serving engine benchmark: offered load vs latency/throughput/SLO.
 
 Replays Poisson multi-tenant traffic (mixed grid/road topologies, random-
 walk weight sequences — the ``repro.launch.mincut_serve`` workload) against
-a ``MinCutServer`` at several offered loads, after a warmup pass that
-absorbs session build + bucket compiles.  Reports solves/sec and p50/p99
-end-to-end latency per load point — the saturation curve a capacity plan
-reads off — plus the batch-size distribution the micro-batcher achieved.
+a continuous-batching ``MinCutServer`` at several offered loads, after a
+warmup pass that absorbs session builds AND pre-compiles every pow2 bucket
+program (cold compiles mid-measurement would be attributed to queue time).
+Per load point it reports solves/sec, the p50/p99 end-to-end latency
+breakdown, the batch-size distribution, flush-reason counts, worker
+utilization and an SLO-attainment curve — the fraction of requests whose
+end-to-end latency beat each target in ``slo_ms`` — i.e. everything a
+capacity plan reads off.
+
+The server runs its true serving default: the ADAPTIVE early-exit schedule
+(``irls_tol``/``adaptive_tol``), so the recorded ``early_exit_rate`` and
+``mean_irls_iters_per_solve`` describe the schedule production traffic
+actually gets.  Pass ``irls_tol=0, adaptive_tol=False`` to measure the
+fixed schedule instead.
 """
 from __future__ import annotations
 
@@ -15,6 +25,9 @@ import numpy as np
 
 BENCH_NAME = "serve"
 
+#: end-to-end latency targets (ms) for the SLO-attainment curve
+SLO_MS = (25.0, 50.0, 100.0, 250.0)
+
 
 def _weights(inst, scale):
     from repro.core import Weights
@@ -23,7 +36,7 @@ def _weights(inst, scale):
 
 
 def _replay(server, instances, keys, n_requests, rate, drift, rng):
-    """Submit Poisson traffic; returns (futures, wall seconds)."""
+    """Submit Poisson traffic; returns (results, wall seconds)."""
     scales = np.ones(len(keys))
     futures = []
     t0 = time.perf_counter()
@@ -34,33 +47,58 @@ def _replay(server, instances, keys, n_requests, rate, drift, rng):
                                      _weights(instances[tenant],
                                               scales[tenant])))
         time.sleep(float(rng.exponential(1.0 / rate)))
-    for f in futures:
-        f.result(timeout=600.0)
-    return futures, time.perf_counter() - t0
+    results = [f.result(timeout=600.0) for f in futures]
+    return results, time.perf_counter() - t0
 
 
-def run(side=10, n_topos=2, n_requests=32, rates=(50.0, 400.0),
-        n_irls=10, pcg_iters=30, max_batch=8, max_wait_ms=5.0, seed=0):
+def _warmup(server, instances, keys, max_batch, rng):
+    """Build every session and compile EVERY pow2 bucket program per
+    topology (1, 2, 4, ..., max_batch), so no load point pays a cold
+    compile mid-measurement."""
+    b = 1
+    buckets = []
+    while b <= max_batch:
+        buckets.append(b)
+        b <<= 1
+    for inst, key in zip(instances, keys):
+        for k in buckets:
+            ws = [_weights(inst, 1.0 + 0.01 * i) for i in range(k)]
+            for f in [server.submit(key, w) for w in ws]:
+                f.result(timeout=600.0)
+
+
+def run(side=10, n_topos=2, n_requests=128,
+        rates=(50.0, 200.0, 1000.0, 4000.0), n_irls=10, pcg_iters=30,
+        max_batch=8, max_wait_ms=5.0, n_workers=None, flush_policy="idle",
+        irls_tol=1e-3, adaptive_tol=True, slo_ms=SLO_MS, seed=0):
     from repro.core import IRLSConfig
     from repro.launch.mincut_serve import build_topologies
-    from repro.serve import MinCutServer, ServeMetrics
+    from repro.serve import MinCutServer
 
     instances = build_topologies(n_topos, side, seed)
+    # the serving-default adaptive schedule (early exit + Eisenstat-Walker
+    # inner tolerances): n_irls/pcg_iters are BUDGETS, not spend — the
+    # telemetry records what was actually executed
     cfg = IRLSConfig(n_irls=n_irls, pcg_max_iters=pcg_iters,
-                     precond="jacobi", n_blocks=1)
+                     precond="jacobi", n_blocks=1,
+                     irls_tol=irls_tol, adaptive_tol=adaptive_tol)
     rng = np.random.default_rng(seed)
-    points = []
+    points, tels = [], []
     with MinCutServer(cfg=cfg, capacity=n_topos + 1, max_batch=max_batch,
-                      max_wait_ms=max_wait_ms, seed=seed) as server:
+                      max_wait_ms=max_wait_ms, seed=seed,
+                      n_workers=n_workers,
+                      flush_policy=flush_policy) as server:
         keys = [server.register(inst) for inst in instances]
-        # warmup: builds every session and compiles the common buckets
-        _replay(server, instances, keys, max(2 * max_batch, 8),
-                max(rates), 0.0, rng)
+        _warmup(server, instances, keys, max_batch, rng)
         for rate in rates:
-            server.metrics = ServeMetrics()       # fresh window per load
-            _, wall = _replay(server, instances, keys, n_requests, rate,
-                              0.05, rng)
+            server.reset_measurement()            # fresh window per load
+            results, wall = _replay(server, instances, keys, n_requests,
+                                    rate, 0.05, rng)
             s = server.metrics.snapshot()
+            tel = server.telemetry.snapshot()
+            tels.append(tel)
+            shares = tel.get("phase_share_of_total", {})
+            totals_ms = np.array([r.timings["total"] for r in results]) * 1e3
             points.append({
                 "offered_rate": float(rate),
                 "solves_per_sec": n_requests / wall,
@@ -70,35 +108,63 @@ def run(side=10, n_topos=2, n_requests=32, rates=(50.0, 400.0),
                 "rounding_p50_ms": s["rounding_p50_ms"],
                 "mean_batch_size": s["mean_batch_size"],
                 "batches": s["batches"],
+                "flush_reasons": s["flush_reasons"],
+                "queue_share_of_total": shares.get("queue"),
+                "irls_share_of_total": shares.get("irls_wall"),
+                "early_exit_rate": tel.get("early_exit_rate"),
+                "mean_irls_iters_per_solve":
+                    tel.get("mean_irls_iters_per_solve"),
+                "mean_pcg_iters_per_solve":
+                    tel.get("mean_pcg_iters_per_solve"),
+                "utilization": server.worker_stats()["utilization"],
+                "slo_attainment": {
+                    f"{ms:g}ms": float(np.mean(totals_ms <= ms))
+                    for ms in slo_ms},
             })
         cache_stats = server.cache.stats.snapshot()
-        telemetry = server.telemetry.snapshot()
+        workers = server.worker_stats()
 
     peak = max(points, key=lambda p: p["solves_per_sec"])
-    shares = telemetry.get("phase_share_of_total", {})
+    # the 50 req/s point is the reference SLO load: the top-level
+    # telemetry block reports THAT point (telemetry resets per point, so a
+    # cumulative snapshot would just echo the final overload burst)
+    ref_i = min(range(len(points)),
+                key=lambda i: abs(points[i]["offered_rate"] - 50.0))
+    ref, telemetry = points[ref_i], tels[ref_i]
     return {
         "name": BENCH_NAME,
         "side": side, "n_topos": n_topos, "n_requests": n_requests,
-        "cfg": {"n_irls": n_irls, "pcg_max_iters": pcg_iters},
+        "cfg": {"n_irls": n_irls, "pcg_max_iters": pcg_iters,
+                "irls_tol": irls_tol, "adaptive_tol": adaptive_tol},
         "max_batch": max_batch, "max_wait_ms": max_wait_ms,
+        "n_workers": workers["n_workers"], "flush_policy": flush_policy,
         "cache": cache_stats,
         "us_per_call": 1e6 / max(peak["solves_per_sec"], 1e-9),
         "derived": f"peak {peak['solves_per_sec']:.1f} solves/s @ "
-                   f"{peak['offered_rate']:.0f} req/s offered; "
-                   f"p50={peak['p50_ms']:.1f}ms p99={peak['p99_ms']:.1f}ms "
-                   f"mean_batch={peak['mean_batch_size']:.1f}",
+                   f"{peak['offered_rate']:.0f} req/s offered "
+                   f"({workers['n_workers']} workers, {flush_policy} "
+                   f"flush); p50={peak['p50_ms']:.1f}ms "
+                   f"p99={peak['p99_ms']:.1f}ms "
+                   f"mean_batch={peak['mean_batch_size']:.1f}; "
+                   f"@50req/s p50={ref['p50_ms']:.1f}ms "
+                   f"queue_share={ref['queue_share_of_total']:.2f}",
         "solves_per_sec": peak["solves_per_sec"],
         "p50_ms": peak["p50_ms"],
         "p99_ms": peak["p99_ms"],
         "load_points": points,
+        "queue_share_of_total": ref["queue_share_of_total"],
         "telemetry": {
+            "reference_rate": ref["offered_rate"],
             "solves": telemetry.get("solves", 0),
+            "by_worker": telemetry.get("by_worker"),
             "mean_pcg_iters_per_solve":
                 telemetry.get("mean_pcg_iters_per_solve"),
             "mean_irls_iters_per_solve":
                 telemetry.get("mean_irls_iters_per_solve"),
             "early_exit_rate": telemetry.get("early_exit_rate"),
-            "queue_share_of_total": shares.get("queue"),
-            "irls_share_of_total": shares.get("irls_wall"),
+            "queue_share_of_total":
+                telemetry.get("phase_share_of_total", {}).get("queue"),
+            "irls_share_of_total":
+                telemetry.get("phase_share_of_total", {}).get("irls_wall"),
         },
     }

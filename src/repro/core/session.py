@@ -41,6 +41,7 @@ See docs/API.md for the full reference.
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
 from collections import OrderedDict
 from typing import Dict, List, NamedTuple, Optional, Sequence, Union
@@ -200,14 +201,19 @@ class Problem:
         self._ell_plan = None
         self._fingerprint: Optional[str] = None
         self._components: Optional[np.ndarray] = None
+        # lazy plan caches are built at most once even when a pool of
+        # serving workers shares this Problem (repro.serve dispatches
+        # concurrent batches through one session per topology)
+        self._plan_lock = threading.RLock()
 
     @property
     def fingerprint(self) -> str:
         """Topology content hash (see ``topology_fingerprint``); weights and
         the partition do not contribute."""
-        if self._fingerprint is None:
-            self._fingerprint = topology_fingerprint(self.instance)
-        return self._fingerprint
+        with self._plan_lock:
+            if self._fingerprint is None:
+                self._fingerprint = topology_fingerprint(self.instance)
+            return self._fingerprint
 
     @classmethod
     def build(cls, instance: STInstance, n_blocks: int = 16,
@@ -263,13 +269,14 @@ class Problem:
         level, cached).  Two nodes share a label iff a path of graph edges
         joins them; terminal edges do not contribute.  Used by the solve
         guard against s-t-disconnected instances."""
-        if self._components is None:
-            from repro.presolve.rules import _connected_components
-            g = self.instance.graph
-            self._components = _connected_components(
-                g.n, np.asarray(g.src, dtype=np.int64),
-                np.asarray(g.dst, dtype=np.int64))
-        return self._components
+        with self._plan_lock:
+            if self._components is None:
+                from repro.presolve.rules import _connected_components
+                g = self.instance.graph
+                self._components = _connected_components(
+                    g.n, np.asarray(g.src, dtype=np.int64),
+                    np.asarray(g.dst, dtype=np.int64))
+            return self._components
 
     # -- contraction-derived problems (presolve / Gomory-Hu building block) ---
     def derive(self, vertex_map: np.ndarray, n_blocks: int = 1,
@@ -318,11 +325,12 @@ class Problem:
         """Device-resident (reordered) graph; the index arrays are uploaded
         once and shared across every weight vector."""
         key = str(jnp.dtype(dtype))
-        base = self._graphs.get(key)
-        if base is None:
-            from .incidence import device_graph_from_instance
-            base = device_graph_from_instance(self.inst_r, dtype=dtype)
-            self._graphs[key] = base
+        with self._plan_lock:
+            base = self._graphs.get(key)
+            if base is None:
+                from .incidence import device_graph_from_instance
+                base = device_graph_from_instance(self.inst_r, dtype=dtype)
+                self._graphs[key] = base
         if weights is None:
             return base
         w = self.check_weights(weights)
@@ -334,17 +342,19 @@ class Problem:
         )
 
     def block_plan(self) -> pc.BlockPlan:
-        if self._block_plan is None:
-            g = self.inst_r.graph
-            self._block_plan = pc.build_block_plan(
-                g.src, g.dst, self.labels_sorted, max(1, self.n_blocks))
-        return self._block_plan
+        with self._plan_lock:
+            if self._block_plan is None:
+                g = self.inst_r.graph
+                self._block_plan = pc.build_block_plan(
+                    g.src, g.dst, self.labels_sorted, max(1, self.n_blocks))
+            return self._block_plan
 
     def ell_plan(self) -> lap.EllPlan:
-        if self._ell_plan is None:
-            g = self.inst_r.graph
-            self._ell_plan = lap.build_ell_plan(g.src, g.dst, g.n)
-        return self._ell_plan
+        with self._plan_lock:
+            if self._ell_plan is None:
+                g = self.inst_r.graph
+                self._ell_plan = lap.build_ell_plan(g.src, g.dst, g.n)
+            return self._ell_plan
 
     def instance_with(self, weights: Optional[WeightsLike]) -> STInstance:
         """Original-order instance carrying ``weights`` (for rounding /
@@ -408,6 +418,15 @@ class MinCutSession:
         self.precond_bs = precond_bs
         self._steppers: Dict[tuple, object] = {}   # compiled-driver cache
         self._sharded_weights: Dict[tuple, object] = {}
+        # stepper-cache discipline under the serving worker pool: reads are
+        # lock-free (dict get under the GIL), builds serialize per key so
+        # two workers racing a cold (cfg, backend) compile produce ONE
+        # program; _cache_lock guards the lock table + kernel LRUs.
+        # Sharded solves also serialize per compiled program:
+        # ``update_weights`` mutates solver plan state, so interleaved
+        # update/solve pairs from two workers would solve wrong weights.
+        self._cache_lock = threading.Lock()
+        self._compile_locks: Dict[tuple, threading.Lock] = {}
         # presolve state: kernels keyed on a weight-content hash (rules are
         # weight-dependent), kernel SESSIONS keyed on the kernel's topology
         # fingerprint — distinct weight vectors that reduce to the same
@@ -678,16 +697,22 @@ class MinCutSession:
             h.update(np.ascontiguousarray(
                 np.asarray(arr, dtype=np.float64)).tobytes())
         key = h.hexdigest()
-        kernel = self._kernels.get(key)
-        if kernel is not None:
-            self._kernels.move_to_end(key)
-            return kernel
+        with self._cache_lock:
+            kernel = self._kernels.get(key)
+            if kernel is not None:
+                self._kernels.move_to_end(key)
+                return kernel
+        # kernelize outside the lock (vectorized but non-trivial on big
+        # graphs); a concurrent duplicate costs a redundant kernelization,
+        # never a wrong result (both kernels are equal by construction)
         from repro.presolve import kernelize
         kernel = kernelize(self.problem.instance, c=w.c, c_s=w.c_s,
                            c_t=w.c_t)
-        self._kernels[key] = kernel
-        while len(self._kernels) > self._kernel_max:
-            self._kernels.popitem(last=False)
+        with self._cache_lock:
+            kernel = self._kernels.setdefault(key, kernel)
+            self._kernels.move_to_end(key)
+            while len(self._kernels) > self._kernel_max:
+                self._kernels.popitem(last=False)
         return kernel
 
     def _kernel_cfg(self, cfg: IRLSConfig, kernel_n: int) -> IRLSConfig:
@@ -708,11 +733,16 @@ class MinCutSession:
         key = (topology_fingerprint(kernel.instance), nb)
         sess = self._kernel_sessions.get(key)
         if sess is None:
-            prob = Problem.build(kernel.instance, n_blocks=nb)
-            sess = MinCutSession(prob, cfg=kcfg, backend=self.backend,
-                                 mesh=self.mesh, schedule=self.schedule,
-                                 precond_bs=self.precond_bs)
-            self._kernel_sessions[key] = sess
+            with self._compile_lock(("kernel",) + key):
+                sess = self._kernel_sessions.get(key)
+                if sess is None:
+                    prob = Problem.build(kernel.instance, n_blocks=nb)
+                    sess = MinCutSession(prob, cfg=kcfg,
+                                         backend=self.backend,
+                                         mesh=self.mesh,
+                                         schedule=self.schedule,
+                                         precond_bs=self.precond_bs)
+                    self._kernel_sessions[key] = sess
         return sess, kcfg
 
     def _lift_result(self, kernel, kres: SolveResult, rounding,
@@ -835,6 +865,10 @@ class MinCutSession:
         return [r for r in out if r is not None]
 
     # -- backend drivers ------------------------------------------------------
+    def _compile_lock(self, key: tuple) -> threading.Lock:
+        with self._cache_lock:
+            return self._compile_locks.setdefault(key, threading.Lock())
+
     def _plans_for(self, cfg: IRLSConfig):
         block_plan = None
         if cfg.precond == "block_jacobi":
@@ -864,10 +898,13 @@ class MinCutSession:
         stepper = self._steppers.get(key)
         if stepper is None:
             t = time.perf_counter()
-            block_plan, ell_plan = self._plans_for(cfg)
-            stepper = _Stepper(prob.device_graph(dtype), cfg, block_plan,
-                               ell_plan)
-            self._steppers[key] = stepper
+            with self._compile_lock(key):
+                stepper = self._steppers.get(key)
+                if stepper is None:
+                    block_plan, ell_plan = self._plans_for(cfg)
+                    stepper = _Stepper(prob.device_graph(dtype), cfg,
+                                       block_plan, ell_plan)
+                    self._steppers[key] = stepper
             timings["setup"] = time.perf_counter() - t
         else:
             timings["setup"] = 0.0
@@ -886,12 +923,30 @@ class MinCutSession:
         key = (cfg, "scanned", batched, warm)
         run = self._steppers.get(key)
         if run is None:
-            block_plan, ell_plan = self._plans_for(cfg)
-            g0 = self.problem.device_graph(dtype)
-            raw = make_scanned_program(g0.src, g0.dst, cfg, block_plan,
-                                       ell_plan, warm=warm)
-            run = jax.jit(jax.vmap(raw) if batched else raw)
-            self._steppers[key] = run
+            with self._compile_lock(key):
+                run = self._steppers.get(key)
+                if run is None:
+                    block_plan, ell_plan = self._plans_for(cfg)
+                    g0 = self.problem.device_graph(dtype)
+                    raw = make_scanned_program(g0.src, g0.dst, cfg,
+                                               block_plan, ell_plan,
+                                               warm=warm)
+                    if batched:
+                        # the batch path stacks FRESH (C, CS, CT[, V0])
+                        # device arrays per call, so weight buffers can be
+                        # donated: XLA writes the (B, n) voltage output
+                        # into the just-consumed (B, n) terminal-weight
+                        # buffer instead of allocating, and at serving
+                        # rates the per-batch weight uploads stop
+                        # reallocating.  Only CS is donated — exactly one
+                        # input can alias the single (B, n) output, and
+                        # donating the rest (C is (B, m), rels/iters are
+                        # (B, T)) buys an XLA "unusable donation" warning,
+                        # not reuse.
+                        run = jax.jit(jax.vmap(raw), donate_argnums=(1,))
+                    else:
+                        run = jax.jit(raw)
+                    self._steppers[key] = run
         return run
 
     def _solve_scanned(self, cfg, weights, timings, warm_from=None):
@@ -919,26 +974,34 @@ class MinCutSession:
 
         prob = self.problem
         key = (cfg, "sharded", self.schedule)
-        solver = self._steppers.get(key)
-        if solver is None:
-            t = time.perf_counter()
-            labels = prob.labels if prob.n_blocks > 1 else None
-            solver = ShardedSolver(prob.instance_with(weights), cfg,
-                                   mesh=self.mesh, schedule=self.schedule,
-                                   labels=labels, precond_bs=self.precond_bs)
-            self._steppers[key] = solver
-            self._sharded_weights[key] = weights is not None
-            timings["setup"] = time.perf_counter() - t
-        elif weights is not None or self._sharded_weights.get(key):
-            # same compiled program, refreshed plan weight arrays.  Refill
-            # whenever an override is in play (never trust object identity —
-            # callers may mutate weight arrays in place) and once more when
-            # dropping back to the Problem's own weights.
-            t = time.perf_counter()
-            solver.update_weights(prob.instance_with(weights))
-            self._sharded_weights[key] = weights is not None
-            timings["setup"] = time.perf_counter() - t
-        else:
-            timings["setup"] = 0.0
-        v, rels, iters = solver.solve()
+        # one lock covers build + update_weights + solve: the solver's plan
+        # weight arrays are mutable state shared by every caller of this
+        # (cfg, schedule) program, so an interleaved update/solve pair from
+        # two serving workers would solve under the wrong weights
+        with self._compile_lock(key):
+            solver = self._steppers.get(key)
+            if solver is None:
+                t = time.perf_counter()
+                labels = prob.labels if prob.n_blocks > 1 else None
+                solver = ShardedSolver(prob.instance_with(weights), cfg,
+                                       mesh=self.mesh,
+                                       schedule=self.schedule,
+                                       labels=labels,
+                                       precond_bs=self.precond_bs)
+                self._steppers[key] = solver
+                self._sharded_weights[key] = weights is not None
+                timings["setup"] = time.perf_counter() - t
+            elif weights is not None or self._sharded_weights.get(key):
+                # same compiled program, refreshed plan weight arrays.
+                # Refill whenever an override is in play (never trust
+                # object identity — callers may mutate weight arrays in
+                # place) and once more when dropping back to the Problem's
+                # own weights.
+                t = time.perf_counter()
+                solver.update_weights(prob.instance_with(weights))
+                self._sharded_weights[key] = weights is not None
+                timings["setup"] = time.perf_counter() - t
+            else:
+                timings["setup"] = 0.0
+            v, rels, iters = solver.solve()
         return np.asarray(v), None, np.asarray(rels), np.asarray(iters)

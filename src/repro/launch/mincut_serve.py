@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python -m repro.launch.mincut_serve
   PYTHONPATH=src python -m repro.launch.mincut_serve \\
-      --topos 3 --requests 48 --rate 200 --max-batch 8 --max-wait-ms 5
+      --topos 3 --requests 48 --rate 200 --max-batch 8 --max-wait-ms 5 \\
+      --workers 4 --flush-policy idle
 
 Builds ``--topos`` distinct small topologies (alternating grid / road
 families — mixed tenants), then replays Poisson-arrival traffic against a
@@ -49,6 +50,14 @@ def main(argv=None) -> int:
                     help="per-step lognormal weight drift of each tenant")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="dispatch worker threads (default: one per device "
+                         "for --backend sharded, 4 otherwise)")
+    ap.add_argument("--flush-policy", choices=("idle", "deadline"),
+                    default="idle",
+                    help="idle: flush a partial batch whenever a worker is "
+                         "idle; deadline: wait out max-wait-ms (legacy "
+                         "single-worker behavior)")
     ap.add_argument("--capacity", type=int, default=8,
                     help="session cache capacity (topologies)")
     ap.add_argument("--max-queue", type=int, default=256)
@@ -67,6 +76,11 @@ def main(argv=None) -> int:
     ap.add_argument("--presolve", action="store_true",
                     help="kernelize every request before solving (exact "
                          "reductions; lifted results)")
+    ap.add_argument("--warmup", type=int, default=0, metavar="K",
+                    help="per tenant, pre-submit batches of 1..K (pow2) "
+                         "requests and wait before the timed replay, so "
+                         "session builds and bucket compiles land outside "
+                         "the measurement window")
     ap.add_argument("--timeout", type=float, default=600.0,
                     help="per-future wait cap, seconds")
     ap.add_argument("--seed", type=int, default=0)
@@ -96,10 +110,23 @@ def main(argv=None) -> int:
                           max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms,
                           max_queue=args.max_queue, seed=args.seed,
-                          presolve=args.presolve)
+                          presolve=args.presolve, n_workers=args.workers,
+                          flush_policy=args.flush_policy)
     keys = [server.register(inst) for inst in instances]
     for inst, key in zip(instances, keys):
         print(f"tenant {key[:8]}: n={inst.n:,} m={inst.graph.m:,}")
+
+    if args.warmup > 0:
+        for inst, key in zip(instances, keys):
+            k = 1
+            while k <= min(args.warmup, args.max_batch):
+                ws = [Weights(np.asarray(inst.graph.weight) * (1.0 + 0.01 * i),
+                              np.asarray(inst.s_weight),
+                              np.asarray(inst.t_weight)) for i in range(k)]
+                for f in [server.submit(key, w) for w in ws]:
+                    f.result(timeout=args.timeout)
+                k <<= 1
+        server.reset_measurement()          # measure steady state only
 
     # per-tenant weight sequences: multiplicative random-walk scale
     scales = np.ones(args.topos)
@@ -133,8 +160,13 @@ def main(argv=None) -> int:
     print(server.metrics.dump())
     stats = server.stats()
     tel = stats.get("telemetry", {})
+    wk = stats.get("workers", {})
     print(f"  cache    : {stats['cache']}")
     print(f"  warm     : {stats['warm']}")
+    print(f"  workers  : {wk.get('n_workers')} "
+          f"({wk.get('flush_policy')} flush), "
+          f"utilization={wk.get('utilization', 0.0):.2f}, "
+          f"by_worker={tel.get('by_worker')}")
     if tel.get("solves"):
         print(f"  telemetry: {tel['solves']} solves, "
               f"{tel['mean_pcg_iters_per_solve']:.1f} mean PCG iters/solve, "

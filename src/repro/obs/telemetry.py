@@ -21,6 +21,9 @@ timings alone cannot explain:
                        per-rule fired counts, base) or None
     phases             per-phase wall seconds (setup/presolve/irls/
                        rounding/total; the engine adds queue/assembly)
+    worker             dispatch-worker id (engine-served solves only —
+                       the continuous-batching pool attributes each
+                       completed request to the worker that executed it)
 
 :class:`TelemetryAggregator` folds those dicts into a bounded summary —
 per ``MinCutSession`` (every session owns one) and per ``MinCutServer``
@@ -120,6 +123,7 @@ class TelemetryAggregator:
     def _reset(self) -> None:
         self.solves = 0
         self.by_backend: Dict[str, int] = {}
+        self.by_worker: Dict[str, int] = {}
         self.pcg = Reservoir(self._max_samples)
         self.irls = Reservoir(self._max_samples)
         self.phase_totals: Dict[str, float] = {}
@@ -141,6 +145,9 @@ class TelemetryAggregator:
             self.solves += 1
             b = t.get("backend", "?")
             self.by_backend[b] = self.by_backend.get(b, 0) + 1
+            if t.get("worker") is not None:
+                w = str(t["worker"])
+                self.by_worker[w] = self.by_worker.get(w, 0) + 1
             if t.get("pcg_total") is not None:
                 self.pcg.add(t["pcg_total"])
             if t.get("irls_executed") is not None:
@@ -171,6 +178,7 @@ class TelemetryAggregator:
             return {
                 "solves": self.solves,
                 "by_backend": dict(self.by_backend),
+                "by_worker": dict(self.by_worker),
                 "mean_pcg_iters_per_solve": self.pcg.mean,
                 "p90_pcg_iters_per_solve": self.pcg.percentile(90),
                 "mean_irls_iters_per_solve": self.irls.mean,

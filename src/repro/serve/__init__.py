@@ -1,18 +1,22 @@
-"""Min-cut serving engine: micro-batched request queue over a session cache.
+"""Min-cut serving engine: a continuous-batching pipeline over a session cache.
 
 The layer between the solver core (``repro.core``) and traffic:
 
     MinCutServer      — async ``submit(topology, weights) -> Future``
-                        front-end (engine.py)
+                        front-end over a pool of ``n_workers`` dispatch
+                        workers pulling ready batches from the shared
+                        admission queue (engine.py)
     MicroBatcher      — groups pending requests by topology fingerprint,
                         pads to power-of-two buckets, flushes on
-                        max-batch / max-wait-ms triggers (batcher.py)
+                        max-batch / max-wait-ms / idle-worker triggers
+                        (batcher.py)
     SessionCache      — LRU of built ``Problem``/``MinCutSession`` pairs
-                        keyed on topology content hash, with eviction
-                        stats (cache.py)
+                        keyed on topology content hash, per-fingerprint
+                        build locks, eviction stats (cache.py)
     ServeMetrics      — per-request latency percentiles with a
                         queue/irls/rounding breakdown, throughput
-                        counters, text dump (metrics.py)
+                        counters, flush-reason counts, text dump
+                        (metrics.py)
     ServerOverloaded  — admission-control rejection (backpressure)
     CutTreeService    — all-pairs min-cut queries from per-topology
                         Gusfield cut trees, built once through the
@@ -25,5 +29,5 @@ Traffic drivers: ``python -m repro.launch.mincut_serve`` (pair solves),
 from .batcher import MicroBatch, MicroBatcher, bucket_size
 from .cache import AdmissionController, CacheStats, ServerOverloaded, SessionCache
 from .cuttree import CutTreeService
-from .engine import MinCutServer
+from .engine import FLUSH_POLICIES, MinCutServer, default_workers
 from .metrics import ServeMetrics, percentile

@@ -10,14 +10,25 @@ the compile cache holds at most ``log2(max_batch) + 1`` programs per
 
 Grouping key is caller-defined (the engine uses
 ``(topology_fingerprint, cfg, rounding)`` — only requests that can legally
-share one vmapped program batch together).  Flush policy per group:
+share one vmapped program batch together).  Flush triggers per group:
 
 * size trigger — ``max_batch`` pending requests flush immediately;
 * deadline trigger — the OLDEST pending request never waits more than
-  ``max_wait_ms`` beyond its arrival before its group flushes.
+  ``max_wait_ms`` beyond its arrival before its group flushes;
+* idle trigger (``take(..., allow_partial=True)``) — a PARTIAL batch
+  flushes immediately.  The continuous-batching engine passes
+  ``allow_partial`` whenever a dispatch worker is idle: a free worker and
+  a pending request means waiting out ``max_wait_ms`` buys nothing —
+  batches only grow while every worker is busy, which is exactly when
+  batching pays.
+
+``ready``/``flush_all`` flush every triggered group at once (the legacy
+single-worker drain loop); ``take`` hands out ONE batch per call — the
+worker-pool handoff, where each idle worker claims one batch under the
+engine's lock and executes it outside.
 
 The batcher is a pure data structure driven by explicit ``now`` timestamps;
-the engine's worker thread owns the clock.  That keeps it deterministic and
+the engine owns the clock and the locking.  That keeps it deterministic and
 directly unit-testable.
 """
 from __future__ import annotations
@@ -40,9 +51,11 @@ class MicroBatch(NamedTuple):
     """One flushed group: execute ``requests`` padded up to ``bucket``.
 
     ``reason`` records WHICH trigger flushed the group — "size" (hit
-    ``max_batch``), "deadline" (oldest request aged past max-wait-ms) or
-    "shutdown" (engine drain) — so the tracing layer can tell batches
-    that filled up from batches the clock forced out.
+    ``max_batch``), "deadline" (oldest request aged past max-wait-ms),
+    "idle" (an idle worker claimed a partial batch rather than waiting)
+    or "shutdown" (engine drain) — so the tracing/metrics layers can tell
+    batches that filled up from batches a free worker (or the clock)
+    forced out.
     """
 
     key: Hashable
@@ -85,6 +98,33 @@ class MicroBatcher:
         return MicroBatch(key=key, requests=chunk,
                           bucket=bucket_size(len(chunk), self.max_batch),
                           reason=reason)
+
+    def take(self, now: float, allow_partial: bool = False
+             ) -> Optional[MicroBatch]:
+        """Claim ONE batch for an idle worker, or None when nothing fires.
+
+        Trigger precedence: a full group ("size") beats a group whose
+        oldest request aged past the deadline ("deadline"); with
+        ``allow_partial`` — the idle-aware flush policy — any pending
+        group fires immediately ("idle"), oldest head request first, so
+        a free worker never sits behind ``max_wait_ms``.
+        """
+        deadline_key = oldest_key = None
+        deadline_t = oldest_t = None
+        for key, group in self._groups.items():
+            if len(group) >= self.max_batch:
+                return self._take(key, self.max_batch, "size")
+            head_t = group[0][1]
+            if now - head_t >= self.max_wait_s and \
+                    (deadline_t is None or head_t < deadline_t):
+                deadline_key, deadline_t = key, head_t
+            if oldest_t is None or head_t < oldest_t:
+                oldest_key, oldest_t = key, head_t
+        if deadline_key is not None:
+            return self._take(deadline_key, self.max_batch, "deadline")
+        if allow_partial and oldest_key is not None:
+            return self._take(oldest_key, self.max_batch, "idle")
+        return None
 
     def ready(self, now: float) -> List[MicroBatch]:
         """Flush every group that hit its size or deadline trigger."""

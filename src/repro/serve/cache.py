@@ -13,8 +13,13 @@ Two bounded resources sit between ``MinCutServer.submit`` and the solver:
   (submitted, not yet completed).  ``submit`` beyond the cap raises
   ``ServerOverloaded`` instead of letting the queue grow without bound.
 
-Both are thread-safe: ``submit`` runs on caller threads while the engine's
-worker thread executes batches.
+Both are thread-safe: ``submit`` runs on caller threads while a POOL of
+engine dispatch workers executes batches concurrently.  Session builds
+(partition + plan construction + compilation — seconds) run outside the
+cache lock under a per-fingerprint build lock: two workers hitting the
+same cold topology serialize on that one key (exactly one build; the
+second waits and reuses it) while builds of DIFFERENT topologies, and all
+cache hits, proceed unblocked.
 """
 from __future__ import annotations
 
@@ -61,6 +66,11 @@ class SessionCache:
         self._ever_cached: set = set()
         self.stats = CacheStats()
         self._lock = threading.Lock()
+        # per-fingerprint build serialization (see module docstring); the
+        # lock objects are tiny and topologies few, so entries are kept
+        # for the cache's lifetime (an evicted key reuses its lock on
+        # rebuild)
+        self._build_locks: Dict[str, threading.Lock] = {}
 
     def register(self, instance: STInstance) -> str:
         """Fingerprint + remember an instance; returns the topology key."""
@@ -82,7 +92,14 @@ class SessionCache:
         return inst
 
     def get(self, key: str) -> MinCutSession:
-        """Session for ``key``, building (and possibly evicting) on miss."""
+        """Session for ``key``, building (and possibly evicting) on miss.
+
+        Builds run OUTSIDE the cache lock (partition + compile can take
+        seconds and must not block submitters or other workers) but UNDER
+        a per-key build lock, so concurrent workers racing the same cold
+        fingerprint produce exactly one build — the losers block until the
+        winner publishes, then hit.
+        """
         with self._lock:
             sess = self._sessions.get(key)
             if sess is not None:
@@ -93,22 +110,30 @@ class SessionCache:
             if inst is None:
                 raise KeyError(f"unknown topology key {key!r}; register the "
                                f"instance (or submit it directly) first")
-            self.stats.misses += 1
-            if key in self._ever_cached:
-                self.stats.rebuilds += 1
-        # build OUTSIDE the lock: partition + compile can take seconds and
-        # must not block submitters.  Only the worker thread builds, so a
-        # duplicate concurrent build cannot happen.
-        with trace.span("serve.session_build", topo=key[:8],
-                        rebuild=key in self._ever_cached):
-            sess = self._build(inst)
-        with self._lock:
-            self._sessions[key] = sess
-            self._sessions.move_to_end(key)
-            self._ever_cached.add(key)
-            while len(self._sessions) > self.capacity:
-                self._sessions.popitem(last=False)
-                self.stats.evictions += 1
+            build_lock = self._build_locks.setdefault(key, threading.Lock())
+        with build_lock:
+            with self._lock:
+                # double-check: a racing worker may have published while
+                # this one waited on the build lock
+                sess = self._sessions.get(key)
+                if sess is not None:
+                    self.stats.hits += 1
+                    self._sessions.move_to_end(key)
+                    return sess
+                self.stats.misses += 1
+                rebuild = key in self._ever_cached
+                if rebuild:
+                    self.stats.rebuilds += 1
+            with trace.span("serve.session_build", topo=key[:8],
+                            rebuild=rebuild):
+                sess = self._build(inst)
+            with self._lock:
+                self._sessions[key] = sess
+                self._sessions.move_to_end(key)
+                self._ever_cached.add(key)
+                while len(self._sessions) > self.capacity:
+                    self._sessions.popitem(last=False)
+                    self.stats.evictions += 1
         return sess
 
     def __len__(self) -> int:

@@ -1,21 +1,33 @@
-"""``MinCutServer`` — async request front-end over the session API.
+"""``MinCutServer`` — continuous-batching request front-end over sessions.
 
-The serving pipeline (one background worker thread):
+The serving pipeline (a POOL of dispatch workers, ``n_workers`` threads):
 
-  submit(topo, weights) ──► admission control ──► inbox queue
-                                                     │ worker drains
-                                                     ▼
-                         MicroBatcher groups by (topology, cfg, rounding),
-                         flushes on max-batch / max-wait-ms triggers
-                                                     │ MicroBatch
-                                                     ▼
-                         SessionCache LRU  ──►  MinCutSession.solve_batch
-                         (Problem + compiled      (one vmapped scanned
-                          steppers per topology)   program, pow2-padded)
-                                                     │ SolveResults
-                                                     ▼
-                         futures resolve; ServeMetrics records the
-                         queue/irls/rounding/total breakdown
+  submit(topo, weights) ──► admission control ──► MicroBatcher groups by
+                            (topology, cfg, rounding, ...); submit adds
+                            under the engine lock and wakes ONE worker
+                                     │
+        ┌────────────┬───────────────┴─┐
+        ▼            ▼                 ▼
+     worker 0     worker 1   ...    worker N-1      each idle worker claims
+        │            │                 │            one ready batch (size /
+        ▼            ▼                 ▼            deadline / idle-flush)
+     SessionCache (shared, per-fingerprint build locks — a cold topology
+     compiles exactly once) ──► MinCutSession.solve_batch (donated weight
+     buffers, vmapped scanned program, pow2-padded)
+        │            │                 │
+        ▼            ▼                 ▼
+     futures resolve; ServeMetrics records the queue/irls/rounding/total
+     breakdown + per-worker utilization and flush-reason counts
+
+Continuous batching: while one worker blocks on an in-flight device solve,
+the other workers keep draining the admission queue — batch assembly,
+session-cache lookup/compile and device execution of DIFFERENT batches
+overlap instead of serializing behind one drain→flush→dispatch loop.  The
+idle-aware flush policy (``flush_policy="idle"``, the default) hands a
+partial batch to any idle worker immediately: ``max_wait_ms`` only gates
+requests when every worker is busy — which is exactly when waiting lets
+batches fill and batching pays.  ``flush_policy="deadline"`` restores the
+strict size-or-deadline triggers of the single-worker engine.
 
 ``submit`` is non-blocking and thread-safe; it returns a
 ``concurrent.futures.Future[SolveResult]``.  Topologies are identified by
@@ -33,7 +45,6 @@ doesn't match the server's) land on every future of that batch.
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
 from collections import OrderedDict
@@ -56,6 +67,24 @@ from .metrics import ServeMetrics
 
 _DEFAULT = object()      # "use the server default" sentinel (None = skip)
 
+FLUSH_POLICIES = ("idle", "deadline")
+
+
+def default_workers(backend: str) -> int:
+    """Worker-pool width when the caller doesn't pick one.
+
+    sharded — one dispatch worker per device: each solve is already an
+    SPMD program over the whole mesh, so extra dispatchers would only
+    contend for the same devices.  host/scanned — a small pool of host
+    threads: JAX releases the GIL inside compiled programs, so while one
+    worker blocks on an in-flight solve the others assemble, compile and
+    dispatch further batches.
+    """
+    if backend == "sharded":
+        import jax
+        return max(1, jax.device_count())
+    return 4
+
 
 @dataclasses.dataclass
 class _Request:
@@ -77,23 +106,32 @@ class _Request:
 
 
 class MinCutServer:
-    """Micro-batched min-cut serving engine (see module docstring).
+    """Continuous-batching min-cut serving engine (see module docstring).
 
-    cfg         — default solver config (per-request override via submit)
-    capacity    — LRU capacity of the Problem/session cache (topologies)
-    max_batch   — flush trigger + padding cap; one micro-batch never
-                  exceeds this many requests
-    max_wait_ms — deadline trigger: max batcher residency of the oldest
-                  pending request
-    max_queue   — admission cap on in-flight requests (backpressure)
-    rounding    — default rounding registry name (None = voltages only)
-    backend     — session backend requests execute on.  "scanned" (default)
-                  runs each micro-batch as ONE vmapped program; "host" and
-                  "sharded" solve the batch's requests one ``solve()`` at a
-                  time through the same cached sessions (parallelism within
-                  a solve — the sharded SPMD program — instead of across
-                  requests).  All backends honor the adaptive early-exit
-                  default below.
+    cfg          — default solver config (per-request override via submit)
+    capacity     — LRU capacity of the Problem/session cache (topologies)
+    max_batch    — flush trigger + padding cap; one micro-batch never
+                   exceeds this many requests
+    max_wait_ms  — deadline trigger: max batcher residency of the oldest
+                   pending request once every worker is busy (under
+                   ``flush_policy="idle"`` an idle worker flushes sooner)
+    max_queue    — admission cap on in-flight requests (backpressure)
+    rounding     — default rounding registry name (None = voltages only)
+    backend      — session backend requests execute on.  "scanned"
+                   (default) runs each micro-batch as ONE vmapped program
+                   with donated weight buffers; "host" and "sharded" solve
+                   the batch's requests one ``solve()`` at a time through
+                   the same cached sessions (parallelism within a solve —
+                   the sharded SPMD program — instead of across requests).
+                   All backends honor the adaptive early-exit default
+                   below.
+    n_workers    — dispatch worker threads pulling ready batches from the
+                   shared admission queue (default: one per device for
+                   "sharded", 4 host threads otherwise — see
+                   ``default_workers``)
+    flush_policy — "idle" (default): a partial batch flushes as soon as
+                   any worker is idle; "deadline": strict size-or-deadline
+                   triggers (the legacy single-worker behavior)
     """
 
     # server default: the adaptive early-exit schedule — converged
@@ -108,15 +146,25 @@ class MinCutServer:
                  max_wait_ms: float = 2.0, max_queue: int = 256,
                  rounding: Optional[str] = "two_level", seed: int = 0,
                  backend: str = "scanned", presolve: bool = False,
-                 warm_capacity: int = 32):
+                 warm_capacity: int = 32, n_workers: Optional[int] = None,
+                 flush_policy: str = "idle"):
         if backend not in MinCutSession.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"known: {MinCutSession.BACKENDS}")
+        if flush_policy not in FLUSH_POLICIES:
+            raise ValueError(f"unknown flush_policy {flush_policy!r}; "
+                             f"known: {FLUSH_POLICIES}")
+        if n_workers is None:
+            n_workers = default_workers(backend)
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         self.cfg = cfg
         self.rounding = rounding
         self.seed = seed
         self.backend = backend
         self.presolve = presolve
+        self.n_workers = int(n_workers)
+        self.flush_policy = flush_policy
         # warm-start store: (tenant, topology fingerprint) -> last converged
         # voltages for that tenant on that topology.  Tenants replay "same
         # topology, drifting weights" traffic, so the previous optimum is an
@@ -125,6 +173,7 @@ class MinCutServer:
         self._warm_capacity = warm_capacity
         self._warm_hits = 0
         self._warm_misses = 0
+        self._warm_lock = threading.Lock()
         self.metrics = ServeMetrics()
         # cross-request solver telemetry (PCG spend, phase walls, early-exit
         # rates) aggregated from every SolveResult.telemetry this server
@@ -134,17 +183,20 @@ class MinCutServer:
         self.admission = AdmissionController(max_queue)
         self._batcher = MicroBatcher(max_batch=max_batch,
                                      max_wait_ms=max_wait_ms)
-        self._inbox: "queue.Queue[_Request]" = queue.Queue()
-        self._stop_event = threading.Event()
-        # makes the stopped-check + enqueue atomic against stop(): without
-        # it a request put between the worker's final drain and its exit
-        # would be accepted but never resolve
-        self._submit_lock = threading.Lock()
+        # ONE lock guards the batcher + lifecycle flags; workers sleep on
+        # the condition and submit wakes exactly one of them per request.
+        # Batch execution always happens OUTSIDE this lock.
+        self._cond = threading.Condition()
+        self._stopping = False
         self._stopped = False
-        self._worker = threading.Thread(target=self._loop,
-                                        name="mincut-serve-worker",
-                                        daemon=True)
-        self._worker.start()
+        self._idle_workers = 0
+        self._busy_s = [0.0] * self.n_workers     # per-worker execute time
+        self._workers = [
+            threading.Thread(target=self._worker_loop, args=(i,),
+                             name=f"mincut-serve-worker-{i}", daemon=True)
+            for i in range(self.n_workers)]
+        for w in self._workers:
+            w.start()
 
     # -- public API -----------------------------------------------------------
     def register(self, instance: STInstance) -> str:
@@ -189,13 +241,19 @@ class MinCutServer:
                        future=Future(), t_submit=now, tenant=tenant,
                        presolve=self.presolve if presolve is None
                        else presolve)
-        with self._submit_lock:
-            if self._stopped or self._stop_event.is_set():
+        # the stopped-check + enqueue are atomic against stop(): a request
+        # admitted under this lock is guaranteed to be drained before the
+        # last worker exits, so it either raises here or resolves
+        with self._cond:
+            if self._stopping:
                 self.admission.release()
                 raise RuntimeError("MinCutServer is stopped")
             self.metrics.record_submit(now)
             get_registry().counter("serve_requests_total").inc()
-            self._inbox.put(req)
+            self._batcher.add(req.group_key, req, now)
+            get_registry().gauge("serve_queue_depth").set(
+                self._batcher.pending)
+            self._cond.notify()
         return req.future
 
     def solve_many(self, topo, weights_list, timeout: Optional[float] = None
@@ -208,17 +266,52 @@ class MinCutServer:
         out = self.metrics.snapshot()
         out["cache"] = self.cache.stats.snapshot()
         out["in_flight"] = self.admission.in_flight
-        out["warm"] = {"entries": len(self._warm), "hits": self._warm_hits,
-                       "misses": self._warm_misses}
+        with self._warm_lock:
+            out["warm"] = {"entries": len(self._warm),
+                           "hits": self._warm_hits,
+                           "misses": self._warm_misses}
         out["telemetry"] = self.telemetry.snapshot()
+        out["workers"] = self.worker_stats()
         return out
 
+    def worker_stats(self) -> Dict[str, object]:
+        """Pool shape + utilization: per-worker busy seconds and the busy
+        share of the pool over the metrics window (submit of the first
+        request → completion of the latest)."""
+        with self._cond:
+            busy = list(self._busy_s)
+            idle = self._idle_workers
+            pending = self._batcher.pending
+        window = self.metrics.window_seconds()
+        return {
+            "n_workers": self.n_workers,
+            "flush_policy": self.flush_policy,
+            "busy_seconds": busy,
+            "utilization": (sum(busy) / (self.n_workers * window)
+                            if window > 0 else 0.0),
+            "idle_now": idle,
+            "queue_depth": pending,
+        }
+
+    def reset_measurement(self) -> None:
+        """Start a fresh measurement window: new ServeMetrics, cleared
+        telemetry AND zeroed per-worker busy clocks — the utilization
+        denominator (the metrics window) and its numerator must restart
+        together, or a warmup pass inflates every later reading."""
+        with self._cond:
+            self.metrics = ServeMetrics()
+            self._busy_s = [0.0] * self.n_workers
+        self.telemetry.clear()
+
     def stop(self, wait: bool = True) -> None:
-        """Drain pending requests, then stop the worker.  Idempotent."""
-        with self._submit_lock:
-            self._stop_event.set()
-        if wait and self._worker.is_alive():
-            self._worker.join()
+        """Drain pending requests, then stop the workers.  Idempotent."""
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        if wait:
+            for w in self._workers:
+                if w.is_alive():
+                    w.join()
         self._stopped = True
 
     def __enter__(self) -> "MinCutServer":
@@ -227,45 +320,57 @@ class MinCutServer:
     def __exit__(self, *exc) -> None:
         self.stop()
 
-    # -- worker ----------------------------------------------------------------
+    # -- workers ---------------------------------------------------------------
     def _build_session(self, instance: STInstance) -> MinCutSession:
         n_blocks = (self.cfg.n_blocks if self.cfg.precond == "block_jacobi"
                     else 1)
         prob = Problem.build(instance, n_blocks=n_blocks, seed=self.seed)
         return MinCutSession(prob, self.cfg, backend=self.backend)
 
-    def _poll_timeout(self) -> float:
-        deadline = self._batcher.next_deadline()
-        if deadline is None:
-            return 0.05
-        return max(0.0, min(deadline - time.perf_counter(), 0.05))
+    def _claim_batch(self) -> Optional[MicroBatch]:
+        """Block until a batch is ready (claimed) or shutdown is complete.
 
-    def _drain_inbox(self, timeout: float) -> int:
-        got = 0
-        try:
-            if timeout > 0:
-                req = self._inbox.get(timeout=timeout)
-            else:
-                req = self._inbox.get_nowait()
+        Runs the engine's flush policy under the condition lock: full
+        groups flush by size, aged groups by deadline, and — under
+        ``flush_policy="idle"`` — any pending group flushes immediately
+        into this (by definition idle) worker.  Returns None only when
+        stopping AND the batcher is fully drained.
+        """
+        with self._cond:
             while True:
-                self._batcher.add(req.group_key, req, time.perf_counter())
-                got += 1
-                req = self._inbox.get_nowait()
-        except queue.Empty:
-            pass
-        return got
+                allow_partial = self._stopping or self.flush_policy == "idle"
+                batch = self._batcher.take(time.perf_counter(),
+                                           allow_partial=allow_partial)
+                if batch is not None:
+                    get_registry().gauge("serve_queue_depth").set(
+                        self._batcher.pending)
+                    return batch
+                if self._stopping:      # nothing left to take: drained
+                    return None
+                deadline = self._batcher.next_deadline()
+                timeout = (None if deadline is None
+                           else max(0.0, deadline - time.perf_counter()))
+                self._idle_workers += 1
+                get_registry().gauge("serve_idle_workers").set(
+                    self._idle_workers)
+                try:
+                    self._cond.wait(timeout)
+                finally:
+                    self._idle_workers -= 1
+                    get_registry().gauge("serve_idle_workers").set(
+                        self._idle_workers)
 
-    def _loop(self) -> None:
+    def _worker_loop(self, wid: int) -> None:
         while True:
-            stopping = self._stop_event.is_set()
-            self._drain_inbox(0.0 if stopping else self._poll_timeout())
-            for batch in self._batcher.ready(time.perf_counter()):
-                self._execute(batch)
-            if stopping and self._inbox.empty():
-                for batch in self._batcher.flush_all():
-                    self._execute(batch)
-                if self._inbox.empty():
-                    return
+            batch = self._claim_batch()
+            if batch is None:
+                return
+            t0 = time.perf_counter()
+            try:
+                self._execute(batch, wid)
+            finally:
+                with self._cond:
+                    self._busy_s[wid] += time.perf_counter() - t0
 
     def _warm_lookup(self, tenant: Optional[str], topo_key: str):
         """Stored voltages for (tenant, topology), None on miss.
@@ -274,36 +379,40 @@ class MinCutServer:
         state is neither consulted nor recorded there."""
         if tenant is None or self.backend == "sharded":
             return None
-        v0 = self._warm.get((tenant, topo_key))
-        if v0 is None:
-            self._warm_misses += 1
-        else:
-            self._warm_hits += 1
-            self._warm.move_to_end((tenant, topo_key))
-        return v0
+        with self._warm_lock:
+            v0 = self._warm.get((tenant, topo_key))
+            if v0 is None:
+                self._warm_misses += 1
+            else:
+                self._warm_hits += 1
+                self._warm.move_to_end((tenant, topo_key))
+            return v0
 
     def _warm_store(self, tenant: Optional[str], topo_key: str,
                     res: SolveResult) -> None:
         if tenant is None or self.backend == "sharded":
             return
-        self._warm[(tenant, topo_key)] = np.asarray(res.voltages)
-        self._warm.move_to_end((tenant, topo_key))
-        while len(self._warm) > self._warm_capacity:
-            self._warm.popitem(last=False)
+        with self._warm_lock:
+            self._warm[(tenant, topo_key)] = np.asarray(res.voltages)
+            self._warm.move_to_end((tenant, topo_key))
+            while len(self._warm) > self._warm_capacity:
+                self._warm.popitem(last=False)
 
-    def _execute(self, batch: MicroBatch) -> None:
+    def _execute(self, batch: MicroBatch, wid: int) -> None:
         reqs: List[_Request] = batch.requests
         topo_key, cfg, rounding, tenant, presolve = batch.key
         t_exec = time.perf_counter()
         get_registry().counter("serve_batches_total").inc()
+        get_registry().gauge("serve_in_flight").set(self.admission.in_flight)
         with trace.span("serve.batch", size=len(reqs), bucket=batch.bucket,
                         reason=batch.reason, backend=self.backend,
-                        topo=topo_key[:8]):
+                        worker=wid, topo=topo_key[:8]):
             try:
                 # assembly: everything between batch pickup and solver
                 # dispatch — session cache lookup (possibly a compile) and
                 # warm-start staging
-                with trace.span("serve.assembly", topo=topo_key[:8]):
+                with trace.span("serve.assembly", topo=topo_key[:8],
+                                worker=wid):
                     sess = self.cache.get(topo_key)
                     v0 = self._warm_lookup(tenant, topo_key)
                 t_dispatch = time.perf_counter()
@@ -340,7 +449,8 @@ class MinCutServer:
                     else:
                         self.metrics.record_cancelled()
                 return
-        self.metrics.record_batch(len(reqs), batch.bucket)
+        self.metrics.record_batch(len(reqs), batch.bucket,
+                                  reason=batch.reason)
         if results:
             self._warm_store(tenant, topo_key, results[-1])
         now = time.perf_counter()
@@ -366,9 +476,11 @@ class MinCutServer:
             if tel is not None:
                 tel = dict(tel)
                 tel["phases"] = timings
+                tel["worker"] = wid
                 if tenant is not None and self.backend != "sharded":
                     tel["warm_start"] = warm_hit
                 self.telemetry.add(tel)
             res = res._replace(timings=timings, telemetry=tel)
             self.metrics.record_request(timings, now)
             r.future.set_result(res)
+        get_registry().gauge("serve_in_flight").set(self.admission.in_flight)

@@ -41,6 +41,9 @@ _SAMPLED = PHASES + ("irls_wall",)
 _COUNTERS = ("submitted", "completed", "failed", "rejected", "cancelled",
              "batches")
 
+#: flush triggers the batcher can report (see ``serve.batcher.MicroBatch``)
+FLUSH_REASONS = ("size", "deadline", "idle", "shutdown")
+
 
 def percentile(samples: List[float], p: float) -> float:
     """p-th percentile of ``samples`` (nan when empty)."""
@@ -112,8 +115,10 @@ class ServeMetrics:
     def record_cancelled(self) -> None:
         self._counter("cancelled").inc()
 
-    def record_batch(self, size: int, bucket: int) -> None:
+    def record_batch(self, size: int, bucket: int,
+                     reason: str = "size") -> None:
         self._counter("batches").inc()
+        self.registry.counter(f"batches_{reason}").inc()
         self._hist("batch_size").observe(int(size))
         self._hist("bucket_size").observe(int(bucket))
 
@@ -138,13 +143,24 @@ class ServeMetrics:
     def latency_ms(self, phase: str, p: float) -> float:
         return self._hist(f"{phase}_seconds").percentile(p) * 1e3
 
+    def window_seconds(self) -> float:
+        """Active window: first submit → latest completion (0 when idle)."""
+        with self._lock:
+            if self._t_first is None or self._t_last is None:
+                return 0.0
+            return max(0.0, self._t_last - self._t_first)
+
     def solves_per_sec(self) -> float:
         completed = self.completed
-        with self._lock:
-            if not completed or self._t_first is None or self._t_last is None:
-                return 0.0
-            window = self._t_last - self._t_first
-        return completed / window if window > 0 else float("inf")
+        window = self.window_seconds()
+        if not completed or window <= 0:
+            return float("inf") if completed else 0.0
+        return completed / window
+
+    def flush_reasons(self) -> Dict[str, int]:
+        """Batches flushed per trigger (size/deadline/idle/shutdown)."""
+        return {r: int(self.registry.counter(f"batches_{r}").value)
+                for r in FLUSH_REASONS}
 
     def mean_batch_size(self) -> float:
         h = self._hist("batch_size")
@@ -175,6 +191,7 @@ class ServeMetrics:
         out["mean_batch_size"] = self.mean_batch_size()
         out["max_batch_size"] = self.max_batch_size()
         out["phase_coverage"] = self.phase_coverage()
+        out["flush_reasons"] = self.flush_reasons()
         for ph in PHASES:
             h = self._hist(f"{ph}_seconds")
             for p in (50, 90, 99):
@@ -195,7 +212,10 @@ class ServeMetrics:
             f"{s['rejected']} rejected, {s['cancelled']} cancelled",
             f"  batches  : {s['batches']} "
             f"(mean size {s['mean_batch_size']:.2f}, "
-            f"max {s['max_batch_size']})",
+            f"max {s['max_batch_size']}; flushed "
+            + ", ".join(f"{v} by {k}"
+                        for k, v in s["flush_reasons"].items() if v)
+            + ")",
             f"  rate     : {s['solves_per_sec']:.1f} solves/sec",
             f"  coverage : {s['phase_coverage']:.3f} of total accounted by "
             f"{'+'.join(COVERAGE_PHASES)}",

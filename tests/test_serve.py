@@ -1,6 +1,7 @@
 """Serving engine: batcher/cache units, engine end-to-end, bench emission."""
 import json
 import os
+import threading
 
 import numpy as np
 import pytest
@@ -57,6 +58,30 @@ def test_batcher_size_trigger_flushes_full_batches():
     assert b.pending == 1
 
 
+def test_batcher_take_size_deadline_idle_precedence():
+    """take() hands out at most ONE batch per call with size > deadline >
+    idle precedence; partial batches move only when allow_partial (an idle
+    worker or shutdown) and carry the flush reason."""
+    b = MicroBatcher(max_batch=4, max_wait_ms=10.0)
+    assert b.take(now=0.0, allow_partial=True) is None       # empty
+    for i in range(5):
+        b.add("g", i, now=0.0)
+    b.add("h", "h0", now=0.001)
+    full = b.take(now=0.0)                                   # size trigger
+    assert full.key == "g" and len(full.requests) == 4
+    assert full.reason == "size"
+    # neither remaining group is full or past deadline → busy workers wait
+    assert b.take(now=0.005) is None
+    # ...but an idle worker drains the OLDEST partial group immediately
+    idle = b.take(now=0.005, allow_partial=True)
+    assert idle.key == "g" and idle.requests == [4]
+    assert idle.reason == "idle" and idle.bucket == 1
+    # deadline expiry beats idle and is reported as such
+    late = b.take(now=0.012, allow_partial=True)
+    assert late.key == "h" and late.reason == "deadline"
+    assert b.pending == 0 and b.take(now=1.0) is None
+
+
 def test_batcher_deadline_trigger_and_grouping():
     b = MicroBatcher(max_batch=8, max_wait_ms=10.0)
     b.add("a", "a0", now=0.0)
@@ -93,6 +118,36 @@ def test_session_cache_lru_eviction_and_rebuild():
     assert cache.stats.rebuilds == 1 and cache.stats.misses == 4
     with pytest.raises(KeyError, match="unknown topology"):
         cache.get("deadbeef")
+
+
+def test_session_cache_compile_race_builds_once():
+    """Two workers hitting the same cold fingerprint must yield exactly ONE
+    build: the loser of the per-fingerprint build lock finds the published
+    session and counts as a hit, never a duplicate build."""
+    inst = tiny_instance(n=8, seed=0)
+    built = []
+    gate = threading.Barrier(2, timeout=30.0)
+
+    def build(i):
+        built.append(i)
+        return object()
+
+    cache = SessionCache(capacity=2, build=build)
+    key = cache.register(inst)
+    got = [None, None]
+
+    def hit(slot):
+        gate.wait()                 # maximize overlap on the cold key
+        got[slot] = cache.get(key)
+
+    ts = [threading.Thread(target=hit, args=(s,)) for s in (0, 1)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=30.0)
+    assert len(built) == 1
+    assert got[0] is got[1] is not None
+    assert cache.stats.misses == 1 and cache.stats.hits == 1
 
 
 # ---------------------------------------------------------------------------
@@ -205,9 +260,120 @@ def test_server_stop_flushes_pending(grid_instance):
         assert np.isfinite(f.result(timeout=1.0).cut_value)
 
 
+def test_multiworker_concurrent_submit_during_stop_no_lost_futures(
+        grid_instance):
+    """Stress the worker pool's shutdown contract: many threads submit
+    concurrently while stop(wait=True) lands in the middle.  Every submit
+    must either raise ("server stopped", atomically with enqueue) or hand
+    back a future that resolves exactly once — no lost or duplicated
+    requests — and accepted results match a single-worker server ≤ 1e-4."""
+    w = _weights(grid_instance)
+    with MinCutServer(cfg=CFG, n_workers=1, max_batch=4,
+                      max_wait_ms=1.0) as ref_srv:
+        key = ref_srv.register(grid_instance)
+        ref_cut = ref_srv.submit(key, w).result(timeout=600.0).cut_value
+
+    srv = MinCutServer(cfg=CFG, n_workers=4, max_batch=4, max_wait_ms=5.0,
+                       max_queue=10_000)
+    key = srv.register(grid_instance)
+    srv.submit(key, w).result(timeout=600.0)     # absorb compiles up front
+    accepted, rejected = [], []
+    lock = threading.Lock()
+    start = threading.Barrier(9, timeout=60.0)   # 8 submitters + stopper
+
+    def submitter():
+        start.wait()
+        for _ in range(10):
+            try:
+                f = srv.submit(key, w)
+            except RuntimeError as e:            # raced past stop()
+                assert "stopped" in str(e)
+                with lock:
+                    rejected.append(e)
+            else:
+                with lock:
+                    accepted.append(f)
+
+    def stopper():
+        start.wait()
+        srv.stop(wait=True)
+
+    threads = [threading.Thread(target=submitter) for _ in range(8)]
+    threads.append(threading.Thread(target=stopper))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600.0)
+    assert not any(t.is_alive() for t in threads)
+    assert len(accepted) + len(rejected) == 80   # every submit accounted for
+    # stop(wait=True) drained the batcher: every accepted future resolves
+    results = [f.result(timeout=60.0) for f in accepted]
+    assert len(results) == len(accepted)
+    for r in results:
+        assert r.cut_value == pytest.approx(ref_cut, rel=1e-4)
+    assert srv.metrics.completed == len(accepted) + 1
+    assert srv.worker_stats()["n_workers"] == 4
+
+
+def test_multiworker_parity_and_worker_stats(grid_instance, road_instance):
+    """A 4-worker idle-flush server returns the same cuts as a single-worker
+    deadline-flush server on identical traffic, and worker_stats()/telemetry
+    attribute the solves across the pool."""
+    insts = [grid_instance, road_instance]
+    ws = [[_weights(inst, 1.0 + 0.15 * i) for i in range(6)]
+          for inst in insts]
+
+    def serve_all(n_workers, flush_policy):
+        with MinCutServer(cfg=CFG, capacity=4, max_batch=4, max_wait_ms=5.0,
+                          n_workers=n_workers,
+                          flush_policy=flush_policy) as srv:
+            keys = [srv.register(inst) for inst in insts]
+            futs = [srv.submit(key, w)
+                    for key, wlist in zip(keys, ws) for w in wlist]
+            out = [f.result(timeout=600.0) for f in futs]
+            stats = srv.worker_stats()
+            tel = srv.telemetry.snapshot()
+        return out, stats, tel
+
+    single, _, _ = serve_all(1, "deadline")
+    multi, stats, tel = serve_all(4, "idle")
+    for a, b in zip(single, multi):
+        assert b.cut_value == pytest.approx(a.cut_value, rel=1e-4)
+    assert stats["n_workers"] == 4 and stats["flush_policy"] == "idle"
+    assert len(stats["busy_seconds"]) == 4
+    assert sum(tel["by_worker"].values()) == tel["solves"] == 12
+
+
 # ---------------------------------------------------------------------------
 # serve benchmark → repo-root BENCH_serve.json
 # ---------------------------------------------------------------------------
+
+def test_write_payloads_strict_json_round_trip(tmp_path):
+    """Regression: BENCH payloads used to ship bare ``NaN`` tokens (invalid
+    JSON).  The writer must rewrite every non-finite number to ``null`` —
+    at any nesting depth, without clobbering bools/ints — so both written
+    files round-trip through a STRICT parser."""
+    from benchmarks import run as bench_run
+
+    row = {"name": "nan_probe", "us_per_call": 1.0, "derived": "d",
+           "early_exit_rate": float("nan"),
+           "nested": {"inf": float("inf"), "ok": 1.5, "flag": True,
+                      "deep": [float("-inf"), 2, None, {"n": float("nan")}]},
+           "tuple_becomes_list": (float("nan"), 0)}
+    path = bench_run.write_payloads(row, root=str(tmp_path),
+                                    out_dir=os.path.join(str(tmp_path), "b"))
+    for p in (path, os.path.join(str(tmp_path), "b", "nan_probe.json")):
+        text = open(p).read()
+        payload = json.loads(text, parse_constant=lambda tok: pytest.fail(
+            f"non-JSON token {tok!r} written to {p}"))
+        assert payload["early_exit_rate"] is None
+        assert payload["nested"]["inf"] is None
+        assert payload["nested"]["ok"] == 1.5
+        assert payload["nested"]["flag"] is True
+        assert payload["nested"]["deep"][:3] == [None, 2, None]
+        assert payload["nested"]["deep"][3]["n"] is None
+        assert payload["tuple_becomes_list"] == [None, 0]
+
 
 def test_serve_benchmark_emits_root_payload(tmp_path):
     from benchmarks import run as bench_run
@@ -224,6 +390,14 @@ def test_serve_benchmark_emits_root_payload(tmp_path):
     assert payload["solves_per_sec"] > 0
     assert payload["p50_ms"] > 0 and payload["p99_ms"] >= payload["p50_ms"]
     assert "timestamp" not in payload
+    # the load sweep carries SLO attainment + REAL adaptive-schedule stats
+    point = payload["load_points"][0]
+    assert set(point["slo_attainment"]) == {"25ms", "50ms", "100ms", "250ms"}
+    assert all(0.0 <= v <= 1.0 for v in point["slo_attainment"].values())
+    assert payload["cfg"]["adaptive_tol"] is True
+    assert point["early_exit_rate"] is not None
+    assert point["mean_irls_iters_per_solve"] <= payload["cfg"]["n_irls"]
+    assert sum(point["flush_reasons"].values()) == point["batches"]
 
 
 def test_server_host_backend_per_request_solves(grid_instance):
