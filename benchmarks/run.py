@@ -5,10 +5,12 @@
 
 Prints ``name,us_per_call,derived`` CSV (one row per benchmark) and persists
 every row through ONE writer (``write_payloads``): the full payload goes to
-``experiments/bench/<name>.json`` (scratch detail, gitignored) and a
+``experiments/bench/<name>.json`` (scratch detail, gitignored), a
 timestamp-free copy to repo-root ``BENCH_<name>.json`` (deliberately
-diffable commit to commit — the cross-PR perf trajectory).  Bench modules
-return their row; they never touch disk themselves.
+diffable commit to commit), and the flattened scalar metrics APPEND to
+repo-root ``BENCH_HISTORY.jsonl`` — the cross-PR perf trajectory the
+``repro.launch.bench_diff`` regression gate reads.  Bench modules return
+their row; they never touch disk themselves.
 """
 from __future__ import annotations
 
@@ -74,8 +76,11 @@ def write_payloads(row: dict, root: str = REPO_ROOT,
     plus span-path aggregates when the bench ran traced.  Non-finite
     numbers are rewritten to ``null`` (``sanitize_json``) and the dump
     runs with ``allow_nan=False``, so every written payload is strict
-    JSON that round-trips through ``json.loads``.  Returns the repo-root
-    path.
+    JSON that round-trips through ``json.loads``.  Finally the payload's
+    flattened scalar metrics append to ``<root>/BENCH_HISTORY.jsonl``
+    (``repro.obs.perf.history``) — the append-only trajectory the
+    ``bench_diff`` comparator estimates noise baselines from.  Returns
+    the repo-root path.
     """
     if "obs" not in row:
         try:
@@ -93,10 +98,18 @@ def write_payloads(row: dict, root: str = REPO_ROOT,
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True, allow_nan=False)
         f.write("\n")
+    try:
+        from repro.obs.perf import history as _history
+        _history.append_history(payload, _history.history_path(root))
+    except Exception:  # pragma: no cover - history must never sink a bench
+        traceback.print_exc()
     return path
 
 
 def main() -> None:
+    # recorded payloads should carry the continuous-profiling figures
+    # (achieved GFLOP/s per solve); sessions check this env at build time
+    os.environ.setdefault("REPRO_PROFILE", "1")
     names = sys.argv[1:] or list(BENCHES)
     print("name,us_per_call,derived")
     failed = []

@@ -109,6 +109,13 @@ class IRLSConfig:
                                       # terminal conductances inflate)
     fuse_edge_sweep: bool = True      # build the per-iteration system in one
                                       # edge sweep (ELL layout only)
+    reweight_clamp: bool = False      # sharded float32 mitigation: cap the
+                                      # reweighted conductances at the
+                                      # float32_divergence_threshold so the
+                                      # Laplacian condition number stays
+                                      # representable (opt-in; biases ε
+                                      # upward on the clamped edges —
+                                      # telemetry reports clamped_reweights)
 
 
 @dataclasses.dataclass

@@ -61,6 +61,7 @@ from .rounding import RoundingResult
 from repro.graphs.structures import EdgeList, STInstance, permute_instance
 from repro.obs import trace
 from repro.obs.metrics import get_registry
+from repro.obs.perf import profile as perf_profile
 from repro.obs.telemetry import TelemetryAggregator, build_solve_telemetry
 
 
@@ -403,7 +404,8 @@ class MinCutSession:
 
     def __init__(self, problem: Union[Problem, STInstance],
                  cfg: IRLSConfig = IRLSConfig(), backend: str = "host",
-                 mesh=None, schedule: str = "halo", precond_bs: int = 128):
+                 mesh=None, schedule: str = "halo", precond_bs: int = 128,
+                 profile: Optional[bool] = None):
         if isinstance(problem, STInstance):
             n_blocks = cfg.n_blocks if cfg.precond == "block_jacobi" else 1
             problem = Problem.build(problem, n_blocks=n_blocks)
@@ -437,6 +439,14 @@ class MinCutSession:
         # per-session fold of every SolveResult.telemetry this session
         # produced (repro.obs.telemetry); see telemetry_snapshot()
         self.telemetry = TelemetryAggregator()
+        # continuous profiling (repro.obs.perf.profile): per-compile-key
+        # FLOP/byte estimates of the cached compiled programs, attached to
+        # SolveResult.telemetry as achieved GFLOP/s.  Costs one extra AOT
+        # compile per program key, so None = auto (on when tracing or
+        # REPRO_PROFILE says so — bench/CLI runs — off in plain tests).
+        self._profile = profile
+        self._program_costs: Dict[tuple, Optional[dict]] = {}
+        self._scanned_raw: Dict[tuple, object] = {}
 
     # -- public API -----------------------------------------------------------
     def solve(self, weights: Optional[WeightsLike] = None,
@@ -508,13 +518,21 @@ class MinCutSession:
                         rounding, self.problem.instance_with(weights), v)
                 timings["rounding"] = time.perf_counter() - t1
             timings["total"] = time.perf_counter() - t0
+        clamped = None
+        if backend == "sharded":
+            solver = self._steppers.get((cfg, "sharded", self.schedule))
+            clamped = getattr(solver, "last_clamped", None)
         tel = build_solve_telemetry(
             cfg, backend, self.problem.instance.n,
             self.problem.instance.graph.m, timings, pcg_iters=pcg_iters,
             residuals=rels, diagnostics=diag,
             warm_start=(None if backend == "sharded"
-                        else warm_from is not None))
+                        else warm_from is not None),
+            cost=self._solve_cost(cfg, backend, warm_from is not None,
+                                  diag, timings),
+            clamped_reweights=clamped)
         self.telemetry.add(tel)
+        self._record_cost_metrics(tel)
         return SolveResult(voltages=v, cut=cut, diagnostics=diag,
                            residuals=rels, timings=timings, backend=backend,
                            pcg_iters=pcg_iters, telemetry=tel)
@@ -621,6 +639,7 @@ class MinCutSession:
             # returns, so the solver wall a request waited behind is the
             # full batch wall minus its own rounding (counted separately)
             t_wall = time.perf_counter() - t0
+            batch_cost = self._program_costs.get((cfg, "scanned", warm))
             for i, j, v, cut, t_round in rounded:
                 timings = {"irls": t_irls / n_real,
                            "irls_wall": t_wall - t_round,
@@ -628,8 +647,11 @@ class MinCutSession:
                 tel = build_solve_telemetry(
                     cfg, "scanned", prob.instance.n, prob.instance.graph.m,
                     timings, pcg_iters=np.asarray(ITERS[j]),
-                    residuals=np.asarray(RELS[j]), warm_start=warm)
+                    residuals=np.asarray(RELS[j]), warm_start=warm,
+                    cost=perf_profile.per_solve_cost(batch_cost,
+                                                     timings["irls"]))
                 self.telemetry.add(tel)
+                self._record_cost_metrics(tel)
                 out[i] = SolveResult(
                     voltages=v, cut=cut, diagnostics=None,
                     residuals=np.asarray(RELS[j]), timings=timings,
@@ -869,6 +891,70 @@ class MinCutSession:
         with self._cache_lock:
             return self._compile_locks.setdefault(key, threading.Lock())
 
+    # -- continuous profiling (repro.obs.perf.profile) -------------------------
+    def _profiling(self) -> bool:
+        return (self._profile if self._profile is not None
+                else perf_profile.default_enabled())
+
+    def program_costs(self) -> Dict[str, Optional[dict]]:
+        """FLOP/byte estimates of every profiled compiled program, keyed
+        ``"<backend>"``-style like the stepper cache (JSON-ready)."""
+        out = {}
+        for key, cost in self._program_costs.items():
+            out["/".join(str(p) for p in key[1:])] = cost
+        return out
+
+    def _cost_into(self, key: tuple, build) -> None:
+        """Compute a program's cost record once per compile key (its own
+        lock — never holds up a concurrent solve on the same program)."""
+        if key in self._program_costs:
+            return
+        with self._compile_lock(("cost",) + key):
+            if key not in self._program_costs:
+                self._program_costs[key] = build()
+
+    def _profile_scanned(self, cfg, dtype, warm: bool) -> None:
+        raw = self._scanned_raw.get((cfg, warm))
+        if raw is None:
+            return
+
+        def build():
+            g0 = self.problem.device_graph(dtype)
+            args = [g0.c, g0.c_s, g0.c_t]
+            if warm:
+                args.append(jnp.zeros_like(g0.c_s))
+            return perf_profile.program_costs(jax.jit(raw), *args)
+
+        self._cost_into((cfg, "scanned", warm), build)
+
+    def _solve_cost(self, cfg, backend: str, warm: bool, diag,
+                    timings) -> Optional[dict]:
+        """Per-solve cost record for telemetry (None when not profiled).
+
+        Host: the compiled program is ONE IRLS step — scale by the steps
+        the loop actually ran.  Scanned/sharded: whole-solve programs.
+        """
+        if backend == "host":
+            cost = self._program_costs.get((cfg, "host"))
+            calls = (len(diag.pcg_iters) if diag is not None
+                     and getattr(diag, "pcg_iters", None) else cfg.n_irls + 1)
+        elif backend == "scanned":
+            cost = self._program_costs.get((cfg, "scanned", warm))
+            calls = 1
+        else:
+            cost = self._program_costs.get((cfg, "sharded", self.schedule))
+            calls = 1
+        return perf_profile.per_solve_cost(cost, timings.get("irls", 0.0),
+                                           calls)
+
+    def _record_cost_metrics(self, tel) -> None:
+        if not tel or not tel.get("flops"):
+            return
+        reg = get_registry()
+        reg.counter("session_flops_total").inc(int(tel["flops"]))
+        if tel.get("achieved_gflops") is not None:
+            reg.gauge("session_achieved_gflops").set(tel["achieved_gflops"])
+
     def _plans_for(self, cfg: IRLSConfig):
         block_plan = None
         if cfg.precond == "block_jacobi":
@@ -908,6 +994,16 @@ class MinCutSession:
             timings["setup"] = time.perf_counter() - t
         else:
             timings["setup"] = 0.0
+        if self._profiling():
+            def build(stepper=stepper):
+                g = stepper.g
+                v = jnp.zeros_like(g.c_s)
+                c_ell = stepper.stage_edge_weights(None)
+                return perf_profile.program_costs(
+                    stepper._jit_step, v, float(cfg.eps),
+                    float(cfg.pcg_tol), g.c, g.c_s, g.c_t, c_ell,
+                    first=False)
+            self._cost_into((cfg, "host"), build)
         v0 = None
         if warm_from is not None:
             w = (warm_from.voltages if isinstance(warm_from, SolveResult)
@@ -931,6 +1027,9 @@ class MinCutSession:
                     raw = make_scanned_program(g0.src, g0.dst, cfg,
                                                block_plan, ell_plan,
                                                warm=warm)
+                    # kept for the profiler: batched programs report the
+                    # per-instance (unvmapped) program's cost estimate
+                    self._scanned_raw[(cfg, warm)] = raw
                     if batched:
                         # the batch path stacks FRESH (C, CS, CT[, V0])
                         # device arrays per call, so weight buffers can be
@@ -947,6 +1046,8 @@ class MinCutSession:
                     else:
                         run = jax.jit(raw)
                     self._steppers[key] = run
+        if self._profiling():
+            self._profile_scanned(cfg, dtype, warm)
         return run
 
     def _solve_scanned(self, cfg, weights, timings, warm_from=None):
@@ -1003,5 +1104,8 @@ class MinCutSession:
                 timings["setup"] = time.perf_counter() - t
             else:
                 timings["setup"] = 0.0
+            if self._profiling():
+                self._cost_into(key, lambda: perf_profile.compiled_costs(
+                    solver.compiled()))
             v, rels, iters = solver.solve()
         return np.asarray(v), None, np.asarray(rels), np.asarray(iters)

@@ -189,6 +189,8 @@ class ShardedSolver:
         # reads the weights); None on the abstract-plans dry-run path
         self._instance = instance
         self._collectives: Optional[List[dict]] = None
+        self._compiled = None  # cached AOT compile (collective stats + profiling)
+        self.last_clamped = 0  # reweight-clamp hits of the latest solve()
         self.mesh = mesh if mesh is not None else flat_mesh()
         self.schedule = schedule
         self.p = int(np.prod(self.mesh.devices.shape))
@@ -264,6 +266,8 @@ class ShardedSolver:
         fused = self.ell is not None
         use_pallas = cfg.use_pallas
         eps_np = eps_schedule_array(cfg)
+        clamp = bool(cfg.reweight_clamp)
+        eps_last = float(eps_np[-1]) if len(eps_np) else float(cfg.eps)
         n_base = 14
 
         def body(*args):
@@ -272,6 +276,22 @@ class ShardedSolver:
              copy_j, copy_id, copy_valid, node_b, node_s) = loc[:n_base]
             if fused:
                 ell_cols, ell_c, copy_row, copy_lane = loc[n_base:]
+
+            if clamp:
+                # float32 mitigation: cap the reweights at the divergence
+                # threshold cap = c_max·thresh(ε_last/c_max) =
+                # √(c_max³/(ε_last·εf32)) so the conductance spread the PCG
+                # quadratic forms see stays representable.  c_max is a
+                # global reduce (one pmax, OUTSIDE the IRLS scan — weights
+                # are loop constants), so every shard caps identically.
+                eps_f32 = float(np.finfo(np.float32).eps)
+                local_max = jnp.maximum(
+                    jnp.max(c, initial=0.0),
+                    jnp.maximum(jnp.max(c_s, initial=0.0),
+                                jnp.max(c_t, initial=0.0)))
+                c_max = jax.lax.pmax(local_max, axis)
+                cap = jnp.sqrt(c_max ** 3 / (eps_last * eps_f32)).astype(
+                    c.dtype)
 
             def local_dot(a, b_):
                 return jnp.vdot(a * valid, b_ * valid)
@@ -313,6 +333,7 @@ class ShardedSolver:
                 passes.  ``ext`` is ``halo_exchange(v)`` (unused when
                 ``initial`` — W⁰ = C needs no voltages).
                 """
+                nclamp = jnp.int32(0)
                 if fused:
                     if initial:
                         r_s, r_t = c_s, c_t
@@ -326,6 +347,19 @@ class ShardedSolver:
                             sweep = lap.fused_ell_sweep
                         vals, diag, r_s, r_t = sweep(ell_cols, ell_c, c_s,
                                                      c_t, ext, eps)
+                        if clamp:
+                            # ELL stores r negated (vals = −r); the sweep
+                            # already folded r into diag, so subtract the
+                            # excess back out instead of re-summing rows
+                            excess = jnp.maximum(-vals - cap, 0.0)
+                            vals = vals + excess
+                            diag = diag - jnp.sum(excess, axis=1)
+                            exc_s = jnp.maximum(r_s - cap, 0.0)
+                            exc_t = jnp.maximum(r_t - cap, 0.0)
+                            r_s, r_t = r_s - exc_s, r_t - exc_t
+                            diag = diag - exc_s - exc_t
+                            nclamp = (jnp.sum(excess > 0) + jnp.sum(exc_s > 0)
+                                      + jnp.sum(exc_t > 0)).astype(jnp.int32)
                     diag = jnp.where(valid > 0, diag, 1.0)
                     # gather-back for the block-Jacobi assembly (one
                     # ml-element read against the sweep's 2m)
@@ -334,7 +368,7 @@ class ShardedSolver:
 
                     def mv(x):
                         return mv_ell(x, exchange(x))
-                    return mv, r_s, r_copies, diag
+                    return mv, r_s, r_copies, diag, nclamp
                 if initial:
                     r, r_s, r_t = c, c_s, c_t
                 else:
@@ -342,6 +376,12 @@ class ShardedSolver:
                                      use_pallas)
                     r_s, r_t = lap.terminal_conductances(c_s, c_t,
                                                          ext[:nl], eps)
+                    if clamp:
+                        nclamp = (jnp.sum(r > cap) + jnp.sum(r_s > cap)
+                                  + jnp.sum(r_t > cap)).astype(jnp.int32)
+                        r = jnp.minimum(r, cap)
+                        r_s = jnp.minimum(r_s, cap)
+                        r_t = jnp.minimum(r_t, cap)
                 deg = jax.ops.segment_sum(r, heads, num_segments=nl)
                 diag = deg + r_s + r_t
                 diag = jnp.where(valid > 0, diag, 1.0)
@@ -349,10 +389,10 @@ class ShardedSolver:
 
                 def mv(x):
                     return mv_halo(exchange(x), heads, tails_ext, r, diag)
-                return mv, r_s, r, diag
+                return mv, r_s, r, diag, nclamp
 
             def solve_wls(v, eps, initial, x0, tol, ext):
-                mv, b, r_copies, diag = system(v, eps, initial, ext)
+                mv, b, r_copies, diag, nclamp = system(v, eps, initial, ext)
                 M = make_precond(r_copies, diag)
                 if adaptive:
                     res = pcg_masked(mv, b, x0=x0, precond=M, tol=tol,
@@ -363,25 +403,29 @@ class ShardedSolver:
                                           n_iters=cfg.pcg_max_iters,
                                           record_history=False,
                                           dot=dot, dot2=dot2)
-                return res.x * valid, res.rel_res, res.iters
+                # clamp hits are a diagnostic: psum only when the clamp is
+                # live so the default program keeps its collective census
+                nc = (jax.lax.psum(nclamp, axis) if clamp
+                      else jnp.int32(0))
+                return res.x * valid, res.rel_res, res.iters, nc
 
             zeros = jnp.zeros((nl,), c.dtype)
             eps_sched = jnp.asarray(eps_np, c.dtype)
             tol0 = (sched.initial_tol(cfg, cfg.pcg_tight_tol) if adaptive
                     else cfg.pcg_tol)
-            v0, _, _ = solve_wls(zeros, cfg.eps, True, zeros, tol0, None)
+            v0, _, _, _ = solve_wls(zeros, cfg.eps, True, zeros, tol0, None)
 
             if not adaptive:
                 def scan_step(v, eps_l):
                     x0 = v if cfg.warm_start else jnp.zeros_like(v)
                     ext = exchange(v)
-                    v2, rel, _ = solve_wls(v, eps_l, False, x0, cfg.pcg_tol,
-                                           ext)
-                    return v2, rel
+                    v2, rel, _, nc = solve_wls(v, eps_l, False, x0,
+                                               cfg.pcg_tol, ext)
+                    return v2, (rel, nc)
 
-                v, rels = jax.lax.scan(scan_step, v0, eps_sched)
+                v, (rels, nclamps) = jax.lax.scan(scan_step, v0, eps_sched)
                 iters = jnp.full((cfg.n_irls,), cfg.pcg_max_iters, jnp.int32)
-                return v[None], rels, iters
+                return v[None], rels, iters, nclamps
 
             # adaptive: the state machine runs on psum-reduced scalars, so
             # every shard takes the SAME early-exit decision.  The exchange
@@ -398,7 +442,7 @@ class ShardedSolver:
                 v, ext, st = carry
                 tol_l = sched.inner_tol(st, c.dtype)
                 x0 = v if cfg.warm_start else jnp.zeros_like(v)
-                v2, rel, it = solve_wls(v, eps_l, False, x0, tol_l, ext)
+                v2, rel, it, nc = solve_wls(v, eps_l, False, x0, tol_l, ext)
                 # a done solve freezes: tol=∞ already parked its PCG at 0
                 # iterations, the where guards the warm_start=False path
                 v2 = jnp.where(st.done, v, v2)
@@ -407,19 +451,20 @@ class ShardedSolver:
                     halo_l1_local(heads, tails_ext, c, c_s, c_t, v2, ext2),
                     axis)
                 spent = jnp.where(st.done, 0, it).astype(jnp.int32)
+                nc = jnp.where(st.done, 0, nc).astype(jnp.int32)
                 st2 = sched.advance(cfg, st, frac, rel, it,
                                     cfg.pcg_tight_tol)
-                return (v2, ext2, st2), (rel, spent)
+                return (v2, ext2, st2), (rel, spent, nc)
 
-            (v, _, _), (rels, iters) = jax.lax.scan(scan_step,
-                                                    (v0, ext0, st0),
-                                                    eps_sched)
-            return v[None], rels, iters
+            (v, _, _), (rels, iters, nclamps) = jax.lax.scan(scan_step,
+                                                             (v0, ext0, st0),
+                                                             eps_sched)
+            return v[None], rels, iters, nclamps
 
         n_in = n_base + (4 if fused else 0)
         fn = shard_map(body, mesh=self.mesh,
                        in_specs=(P(SOLVER_AXIS),) * n_in,
-                       out_specs=(P(SOLVER_AXIS), P(), P()))
+                       out_specs=(P(SOLVER_AXIS), P(), P(), P()))
         self._raw_body = fn
         return jax.jit(fn)
 
@@ -432,6 +477,8 @@ class ShardedSolver:
         adaptive = sched.is_adaptive(cfg)
         use_pallas = cfg.use_pallas
         eps_np = eps_schedule_array(cfg)
+        clamp = bool(cfg.reweight_clamp)
+        eps_last = float(eps_np[-1]) if len(eps_np) else float(cfg.eps)
 
         def body(src, dst, c, c_s, c_t):
             src, dst, c = src[0], dst[0], c[0]
@@ -439,20 +486,43 @@ class ShardedSolver:
             # whole vector — the only collective per PCG step is the
             # matvec's n-float all-reduce (psum_matvec)
 
+            if clamp:
+                # see _build_halo: cap = √(c_max³/(ε_last·εf32)), one pmax
+                # outside the IRLS scan (c is sharded; terminals replicated)
+                eps_f32 = float(np.finfo(np.float32).eps)
+                local_max = jnp.maximum(
+                    jnp.max(c, initial=0.0),
+                    jnp.maximum(jnp.max(c_s, initial=0.0),
+                                jnp.max(c_t, initial=0.0)))
+                c_max = jax.lax.pmax(local_max, axis)
+                cap = jnp.sqrt(c_max ** 3 / (eps_last * eps_f32)).astype(
+                    c.dtype)
+
             def conductances(v, eps, initial):
+                nclamp = jnp.int32(0)
                 if initial:
                     r, r_s, r_t = c, c_s, c_t
                 else:
                     r = coo_reweight(src, dst, c, v, eps, use_pallas)
                     r_s, r_t = lap.terminal_conductances(c_s, c_t, v, eps)
+                    if clamp:
+                        # edges are sharded (psum the count); terminals are
+                        # REPLICATED — count them once, not once per shard
+                        nclamp = (jax.lax.psum(
+                            jnp.sum(r > cap).astype(jnp.int32), axis)
+                            + jnp.sum(r_s > cap) + jnp.sum(r_t > cap)
+                            ).astype(jnp.int32)
+                        r = jnp.minimum(r, cap)
+                        r_s = jnp.minimum(r_s, cap)
+                        r_t = jnp.minimum(r_t, cap)
                 deg = jax.ops.segment_sum(r, src, num_segments=n_pad)
                 deg = deg + jax.ops.segment_sum(r, dst, num_segments=n_pad)
                 deg = jax.lax.psum(deg, axis)
                 diag = jnp.where(deg + r_s + r_t > 0, deg + r_s + r_t, 1.0)
-                return r, r_s, r_t, diag
+                return r, r_s, r_t, diag, nclamp
 
             def solve_wls(v, eps, initial, x0, tol):
-                r, r_s, r_t, diag = conductances(v, eps, initial)
+                r, r_s, r_t, diag, nclamp = conductances(v, eps, initial)
                 mv = lambda x: psum_matvec(x, src, dst, r, r_s + r_t,
                                            n_pad, axis)
                 M = lambda x: x / diag
@@ -463,23 +533,24 @@ class ShardedSolver:
                     res = pcg_fixed_iters(mv, r_s, x0=x0, precond=M,
                                           n_iters=cfg.pcg_max_iters,
                                           record_history=False)
-                return res.x, res.rel_res, res.iters
+                return res.x, res.rel_res, res.iters, nclamp
 
             zeros = jnp.zeros((n_pad,), c.dtype)
             eps_sched = jnp.asarray(eps_np, c.dtype)
             tol0 = (sched.initial_tol(cfg, cfg.pcg_tight_tol) if adaptive
                     else cfg.pcg_tol)
-            v0, _, _ = solve_wls(zeros, cfg.eps, True, zeros, tol0)
+            v0, _, _, _ = solve_wls(zeros, cfg.eps, True, zeros, tol0)
 
             if not adaptive:
                 def scan_step(v_, eps_l):
                     x0 = v_ if cfg.warm_start else jnp.zeros_like(v_)
-                    v2, rel, _ = solve_wls(v_, eps_l, False, x0, cfg.pcg_tol)
-                    return v2, rel
+                    v2, rel, _, nc = solve_wls(v_, eps_l, False, x0,
+                                               cfg.pcg_tol)
+                    return v2, (rel, nc)
 
-                v, rels = jax.lax.scan(scan_step, v0, eps_sched)
+                v, (rels, nclamps) = jax.lax.scan(scan_step, v0, eps_sched)
                 iters = jnp.full((cfg.n_irls,), cfg.pcg_max_iters, jnp.int32)
-                return v, rels, iters
+                return v, rels, iters, nclamps
 
             def l1(v):
                 # edges are sharded (one psum); terminals replicated
@@ -494,21 +565,23 @@ class ShardedSolver:
                 v_, st = carry
                 tol_l = sched.inner_tol(st, c.dtype)
                 x0 = v_ if cfg.warm_start else jnp.zeros_like(v_)
-                v2, rel, it = solve_wls(v_, eps_l, False, x0, tol_l)
+                v2, rel, it, nc = solve_wls(v_, eps_l, False, x0, tol_l)
                 v2 = jnp.where(st.done, v_, v2)
                 spent = jnp.where(st.done, 0, it).astype(jnp.int32)
+                nc = jnp.where(st.done, 0, nc).astype(jnp.int32)
                 st2 = sched.advance(cfg, st, l1(v2), rel, it,
                                     cfg.pcg_tight_tol)
-                return (v2, st2), (rel, spent)
+                return (v2, st2), (rel, spent, nc)
 
-            (v, _), (rels, iters) = jax.lax.scan(scan_step, (v0, st0),
-                                                 eps_sched)
-            return v, rels, iters
+            (v, _), (rels, iters, nclamps) = jax.lax.scan(scan_step,
+                                                          (v0, st0),
+                                                          eps_sched)
+            return v, rels, iters, nclamps
 
         fn = shard_map(body, mesh=self.mesh,
                        in_specs=(P(SOLVER_AXIS), P(SOLVER_AXIS),
                                  P(SOLVER_AXIS), P(), P()),
-                       out_specs=(P(), P(), P()))
+                       out_specs=(P(), P(), P(), P()))
         return jax.jit(fn)
 
     # -- execution --------------------------------------------------------------
@@ -533,6 +606,15 @@ class ShardedSolver:
     def lower(self):
         return self._fn.lower(*self.abstract_inputs())
 
+    def compiled(self):
+        """AOT-compiled solve program, cached.  The first call pays an AOT
+        lower + compile; jax caches repeated AOT compiles of the same jitted
+        object, so ``collective_stats`` and the continuous-profiling hook
+        (``obs.perf.profile.compiled_costs``) share one compile."""
+        if self._compiled is None:
+            self._compiled = self.lower().compile()
+        return self._compiled
+
     def collective_stats(self) -> List[dict]:
         """Per-while-loop direct collective counts of the compiled program
         (``launch.hlo_analysis.while_loop_collectives``), cached.  The
@@ -541,7 +623,7 @@ class ShardedSolver:
         actually enabled."""
         if self._collectives is None:
             from repro.launch.hlo_analysis import while_loop_collectives
-            txt = self.lower().compile().as_text()
+            txt = self.compiled().as_text()
             self._collectives = while_loop_collectives(txt)
         return self._collectives
 
@@ -599,7 +681,14 @@ class ShardedSolver:
         get_registry().counter("sharded_float32_divergence_total").inc()
         trace.event("sharded.float32_divergence", max_conductance=r_max,
                     threshold=thresh, eps=eps, eps_rel=eps_rel,
-                    stalled_iter=stalled_iter, schedule=self.schedule)
+                    stalled_iter=stalled_iter, schedule=self.schedule,
+                    clamped=bool(self.cfg.reweight_clamp))
+        if self.cfg.reweight_clamp:
+            # the mitigation is active: the reweights are capped AT the
+            # threshold, so the spread the PCG sees stays representable —
+            # keep the counter + trace event for the record, skip the
+            # warning (nothing is about to diverge)
+            return r_max
         at_iter = (f"; PCG stalled (rel residual > 1 or non-finite) first "
                    f"at IRLS iteration {stalled_iter}"
                    if stalled_iter is not None else "")
@@ -625,13 +714,19 @@ class ShardedSolver:
         """
         with trace.span("sharded.solve", schedule=self.schedule, p=self.p,
                         n=self.plan.n):
-            out, rels, iters = self._fn(*[jnp.asarray(a)
-                                          for a in self.arrays()])
+            out, rels, iters, nclamps = self._fn(*[jnp.asarray(a)
+                                                   for a in self.arrays()])
             out = np.asarray(out).reshape(-1)
             if self.schedule == "halo":
                 v = out[self.plan.perm]
             else:
                 v = out[: self.plan.n]
+            # total reweight-clamp hits across the IRLS sweep (always 0
+            # when cfg.reweight_clamp is off); session telemetry reads it
+            self.last_clamped = int(np.asarray(nclamps).sum())
+            if self.last_clamped:
+                get_registry().counter(
+                    "sharded_clamped_reweights_total").inc(self.last_clamped)
             self.check_float32_divergence(rels=np.asarray(rels))
             if trace.enabled():
                 self._record_collective_gauges()

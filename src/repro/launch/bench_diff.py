@@ -1,0 +1,150 @@
+"""Bench regression sentinel CLI — record → diff → gate.
+
+  # run the CI smoke benches, append to the trajectory, classify
+  PYTHONPATH=src python -m repro.launch.bench_diff --smoke
+
+  # strict CI gate: machine-independent kinds only, baselines required
+  PYTHONPATH=src python -m repro.launch.bench_diff --smoke --gate
+
+  # classify an existing payload without re-running the bench
+  PYTHONPATH=src python -m repro.launch.bench_diff --from-payload BENCH_irls.json
+
+Each named bench runs through ``benchmarks.run`` (payload snapshots +
+``BENCH_HISTORY.jsonl`` append), then its fresh payload is classified
+against the last K committed history entries of the SAME variant
+(smoke vs full) — per-metric median + MAD, direction-aware thresholds
+(``repro.obs.perf.regress``).  Exits 1 when any selected-kind metric
+classifies regressed, 2 under ``--gate`` when a requested bench has no
+baseline (a silently-green gate is worse than a red one).
+
+``--gate`` also narrows the gated kinds to ``count,quality,bool``
+unless ``--kinds`` says otherwise: iteration counts, cut values and
+ok-flags transfer across machines, wall-clock baselines recorded on one
+host do not — gate on time/throughput only when the baseline was
+recorded on the machine running the diff.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _repo_root() -> str:
+    here = os.path.abspath(os.path.dirname(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def _load_benches():
+    try:
+        from benchmarks import run as bench_run
+    except ImportError:
+        sys.path.insert(0, _repo_root())
+        from benchmarks import run as bench_run
+    return bench_run
+
+
+SMOKE_BENCHES = ("irls", "sharded", "cuttree", "kernel")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("benches", nargs="*",
+                    help="bench names (benchmarks.run registry); default: "
+                         "the smoke set under --smoke, else all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run tiny CI instances (benches without a smoke "
+                         "mode are skipped)")
+    ap.add_argument("--gate", action="store_true",
+                    help="CI mode: machine-independent kinds only (unless "
+                         "--kinds), missing baselines fail with exit 2")
+    ap.add_argument("--kinds", default=None,
+                    help="comma-separated metric kinds to gate on "
+                         "(default: all gateable; --gate: count,quality,bool)")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="run each bench N times (each run appends to the "
+                         "trajectory; the LAST is classified)")
+    ap.add_argument("--from-payload", nargs="*", default=None,
+                    metavar="FILE",
+                    help="classify existing payload file(s) instead of "
+                         "running benches")
+    ap.add_argument("--history", default=None,
+                    help="trajectory file (default <repo>/BENCH_HISTORY.jsonl)")
+    ap.add_argument("--k", type=int, default=8,
+                    help="baseline window: last K matching entries")
+    ap.add_argument("--z", type=float, default=4.0,
+                    help="MAD z-score for the noise term of the threshold")
+    ap.add_argument("--show", choices=("changed", "all", "gated"),
+                    default="changed", help="table verbosity")
+    ap.add_argument("--no-record", action="store_true",
+                    help="don't append this run to the trajectory")
+    args = ap.parse_args(argv)
+
+    from repro.obs.perf import history as hist
+    from repro.obs.perf import regress
+
+    if args.kinds is not None:
+        kinds = tuple(k.strip() for k in args.kinds.split(",") if k.strip())
+    elif args.gate:
+        kinds = ("count", "quality", "bool")
+    else:
+        kinds = None                      # all gateable
+
+    history_file = args.history or hist.history_path(_repo_root())
+    baseline = hist.read_history(history_file)
+
+    payloads = []
+    missing_baseline = []
+    if args.from_payload is not None:
+        for f in args.from_payload:
+            with open(f) as fh:
+                payloads.append(json.load(fh))
+    else:
+        # profile by default: recorded payloads carry achieved GFLOP/s
+        os.environ.setdefault("REPRO_PROFILE", "1")
+        bench_run = _load_benches()
+        names = list(args.benches) or (list(SMOKE_BENCHES) if args.smoke
+                                       else list(bench_run.BENCHES))
+        import inspect
+        for name in names:
+            fn = bench_run.BENCHES[name]
+            takes_smoke = "smoke" in inspect.signature(fn).parameters
+            if args.smoke and not takes_smoke:
+                print(f"{name}: no smoke mode, skipped", file=sys.stderr)
+                continue
+            row = None
+            for _ in range(max(1, args.repeats)):
+                row = fn(smoke=True) if args.smoke and takes_smoke else fn()
+                if args.no_record:
+                    continue
+                bench_run.write_payloads(row)
+            payloads.append(row)
+
+    exit_code = 0
+    for payload in payloads:
+        verdicts = regress.compare_payload(payload, baseline, k=args.k,
+                                           z=args.z)
+        print(regress.render_table(verdicts, show=args.show))
+        bad = regress.gate(verdicts, kinds)
+        if bad:
+            exit_code = 1
+            for v in bad:
+                print(f"  REGRESSED [{v.kind}] {v.bench}:{v.metric} "
+                      f"{v.baseline_median:.6g} -> {v.current:.6g} "
+                      f"(threshold ±{v.threshold:.3g})", file=sys.stderr)
+        if args.gate and verdicts and \
+                all(v.classification == "new" for v in verdicts):
+            missing_baseline.append(payload.get("name", "?"))
+        print()
+    if missing_baseline:
+        print(f"--gate: no committed baseline for "
+              f"{', '.join(missing_baseline)} — seed BENCH_HISTORY.jsonl "
+              f"first (run bench_diff without --gate and commit the file)",
+              file=sys.stderr)
+        return 2
+    return exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

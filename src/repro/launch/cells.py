@@ -405,7 +405,8 @@ def build_solver_cell(arch: str, cell_id: str, mesh: Mesh) -> DryRunProgram:
     return DryRunProgram(
         arch, cell_id, solver._raw_body, args,
         in_shardings=tuple(sh for _ in args),
-        out_shardings=(sh, _replicated(fmesh), _replicated(fmesh)),
+        out_shardings=(sh, _replicated(fmesh), _replicated(fmesh),
+                       _replicated(fmesh)),
         donate_argnums=(), meta=meta)
 
 

@@ -18,7 +18,7 @@ import sys
 import time
 
 
-def _render_all(spans, top: int) -> str:
+def _render_all(spans, top: int, sort=None) -> str:
     from repro.obs import dashboard
 
     agg = dashboard.aggregate(spans)
@@ -28,7 +28,7 @@ def _render_all(spans, top: int) -> str:
             f"root wall: {total * 1e3:.1f}ms")
     subsystems = sorted({n.split(".", 1)[0] for n in names})
     lines = [head, f"subsystems: {', '.join(subsystems)}", ""]
-    lines.append(dashboard.render(agg, top=top))
+    lines.append(dashboard.render(agg, top=top, sort=sort))
     errs = [s for s in spans if s.get("error")]
     if errs:
         lines.append(f"\n{len(errs)} span(s) closed by exception, e.g. "
@@ -45,6 +45,9 @@ def main(argv=None) -> int:
                     help="follow-mode refresh period, seconds")
     ap.add_argument("--top", type=int, default=30,
                     help="max span paths in the tree view")
+    ap.add_argument("--sort", choices=("self", "p99", "count"), default=None,
+                    help="flatten the tree and rank paths by this column "
+                         "(default: tree layout by root total time)")
     args = ap.parse_args(argv)
 
     from repro.obs import dashboard
@@ -60,7 +63,7 @@ def main(argv=None) -> int:
         if not spans:
             print(f"{args.path}: no spans", file=sys.stderr)
             return 1
-        print(_render_all(spans, args.top))
+        print(_render_all(spans, args.top, args.sort))
         return 0
 
     try:
@@ -71,7 +74,7 @@ def main(argv=None) -> int:
             except FileNotFoundError:
                 pass
             sys.stdout.write("\x1b[2J\x1b[H")   # clear + home
-            print(_render_all(spans, args.top) if spans
+            print(_render_all(spans, args.top, args.sort) if spans
                   else f"waiting for spans in {args.path} ...")
             sys.stdout.flush()
             time.sleep(args.interval)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import json
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
-__all__ = ["load_spans", "aggregate", "render", "span_names"]
+__all__ = ["load_spans", "aggregate", "render", "span_names", "percentile"]
 
 
 def load_spans(path: str, offset: int = 0) -> Tuple[List[Dict[str, Any]], int]:
@@ -55,8 +55,19 @@ def span_names(spans: Iterable[Dict[str, Any]]) -> Dict[str, int]:
     return out
 
 
+def percentile(samples: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of a duration sample list."""
+    if not samples:
+        return 0.0
+    xs = sorted(samples)
+    i = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[i]
+
+
 def aggregate(spans: List[Dict[str, Any]]) -> Dict[str, Dict[str, float]]:
-    """Per-PATH aggregates: count, total seconds, self seconds, errors.
+    """Per-PATH aggregates: count, total seconds, self seconds, errors,
+    and the raw duration samples (``durations``) the renderer turns into
+    p50/p99 percentiles — tail latency per call site, not just the mean.
 
     ``self`` subtracts each span's DIRECT children's durations from its
     own, so a path's self time is where the wall clock actually went.
@@ -84,43 +95,65 @@ def aggregate(spans: List[Dict[str, Any]]) -> Dict[str, Dict[str, float]]:
     for s in spans:
         path = path_of(s)
         d = agg.setdefault(path, {"count": 0, "total_s": 0.0, "self_s": 0.0,
-                                  "errors": 0})
+                                  "errors": 0, "durations": []})
         dur = float(s.get("dur_s", 0.0))
         d["count"] += 1
         d["total_s"] += dur
         d["self_s"] += max(0.0, dur - child_time.get(s.get("span_id"), 0.0))
+        d["durations"].append(dur)
         if s.get("error"):
             d["errors"] += 1
     return agg
 
 
 def render(agg: Dict[str, Dict[str, float]], top: int = 30,
-           title: str = "span summary") -> str:
-    """Flamegraph-style text tree, expensive paths first."""
+           title: str = "span summary", sort: Optional[str] = None) -> str:
+    """Flamegraph-style text tree, expensive paths first.
+
+    ``sort=None`` keeps the tree layout (roots by total time, children
+    indented beneath them).  ``sort="self"|"p99"|"count"`` flattens the
+    listing and ranks every path by that column descending — the hunting
+    view ("which call site burns the most self time / has the worst
+    tail") rather than the structural one.
+    """
     if not agg:
         return f"{title}: (no spans)"
-    # order: by root path total desc, then depth-first lexicographic within
-    roots: Dict[str, float] = {}
-    for path, d in agg.items():
-        root = path.split(">", 1)[0]
-        roots[root] = roots.get(root, 0.0) + (d["total_s"]
-                                              if ">" not in path else 0.0)
-    order = sorted(agg, key=lambda p: (-roots.get(p.split(">", 1)[0], 0.0),
-                                       p))
+    if sort is not None:
+        keys = {"self": lambda d: d["self_s"],
+                "p99": lambda d: percentile(d.get("durations", []), 99),
+                "count": lambda d: d["count"]}
+        if sort not in keys:
+            raise ValueError(f"sort must be one of {sorted(keys)}: {sort!r}")
+        order = sorted(agg, key=lambda p: (-keys[sort](agg[p]), p))
+    else:
+        # order: by root path total desc, then depth-first lexicographic
+        roots: Dict[str, float] = {}
+        for path, d in agg.items():
+            root = path.split(">", 1)[0]
+            roots[root] = roots.get(root, 0.0) + (d["total_s"]
+                                                  if ">" not in path else 0.0)
+        order = sorted(agg, key=lambda p: (-roots.get(p.split(">", 1)[0],
+                                                      0.0), p))
     lines = [title,
-             f"  {'path':<52} {'count':>7} {'total':>10} {'self':>10} "
-             f"{'mean':>9}"]
+             f"  {'path':<44} {'count':>7} {'total':>10} {'self':>10} "
+             f"{'mean':>9} {'p50':>9} {'p99':>9}"]
     for path in order[:top]:
         d = agg[path]
-        depth = path.count(">")
-        name = ("  " * depth) + path.rsplit(">", 1)[-1]
-        if len(name) > 52:
-            name = name[:49] + "..."
+        if sort is None:
+            depth = path.count(">")
+            name = ("  " * depth) + path.rsplit(">", 1)[-1]
+        else:
+            name = path
+        if len(name) > 44:
+            name = name[:41] + "..."
         mean = d["total_s"] / d["count"] if d["count"] else 0.0
+        durs = d.get("durations", [])
+        p50, p99 = percentile(durs, 50), percentile(durs, 99)
         err = f"  !{int(d['errors'])}err" if d["errors"] else ""
-        lines.append(f"  {name:<52} {int(d['count']):>7} "
+        lines.append(f"  {name:<44} {int(d['count']):>7} "
                      f"{d['total_s'] * 1e3:>8.1f}ms {d['self_s'] * 1e3:>8.1f}ms "
-                     f"{mean * 1e3:>7.2f}ms{err}")
+                     f"{mean * 1e3:>7.2f}ms {p50 * 1e3:>7.2f}ms "
+                     f"{p99 * 1e3:>7.2f}ms{err}")
     if len(order) > top:
         lines.append(f"  ... {len(order) - top} more paths")
     return "\n".join(lines)

@@ -1,0 +1,41 @@
+"""Performance trajectory + regression detection (the perf sentinel).
+
+Layered on the PR 7 obs stack, three pieces:
+
+``schema``   — flatten a ``BENCH_<name>.json`` payload into comparable
+               scalar metrics with stable dotted paths, each classified
+               into a (kind, direction) pair (time/lower, throughput/
+               higher, count/lower, quality/equal, ...).
+``history``  — the append-only ``BENCH_HISTORY.jsonl`` trajectory store
+               ``benchmarks.run.write_payloads`` feeds: one flattened
+               ``{bench, variant, run, git_sha, metric, value}`` record
+               per metric per bench run, committed alongside the
+               ``BENCH_*.json`` snapshots so the repo carries its own
+               noise baseline.
+``regress``  — the noise-aware comparator: per-metric baseline =
+               median + MAD over the last K matching-variant history
+               entries, direction-aware classification into
+               regressed / improved / flat / new.
+``profile``  — continuous profiling: ``compiled.cost_analysis()``
+               FLOP/byte estimates with ``launch.hlo_analysis``'s
+               while-body-once trip-count correction, attached to every
+               cached compiled program by ``core.session`` so
+               ``SolveResult.telemetry`` reports achieved GFLOP/s and
+               roofline fraction per solve.
+
+CLI: ``python -m repro.launch.bench_diff`` (record → diff → gate).
+"""
+from .history import (HISTORY_FILE, append_history, git_sha, history_path,
+                      history_records, read_history)
+from .profile import (compiled_costs, default_enabled, per_solve_cost,
+                      program_costs)
+from .regress import Verdict, compare_payload, gate, render_table
+from .schema import classify, extract_metrics
+
+__all__ = [
+    "HISTORY_FILE", "append_history", "git_sha", "history_path",
+    "history_records", "read_history",
+    "compiled_costs", "default_enabled", "per_solve_cost", "program_costs",
+    "Verdict", "compare_payload", "gate", "render_table",
+    "classify", "extract_metrics",
+]

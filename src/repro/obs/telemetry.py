@@ -21,6 +21,15 @@ timings alone cannot explain:
                        per-rule fired counts, base) or None
     phases             per-phase wall seconds (setup/presolve/irls/
                        rounding/total; the engine adds queue/assembly)
+    flops, hbm_bytes   device-side static cost estimate of the compiled
+                       program(s) this solve executed (repro.obs.perf.
+                       profile: cost_analysis × while-trip correction);
+                       None when profiling is off
+    achieved_gflops    flops / irls wall seconds / 1e9 (+ achieved_gbps,
+                       roofline_fraction vs the TPU-v5e roofline model)
+    clamped_reweights  sharded reweight-clamp hits this solve (the
+                       cfg.reweight_clamp float32 mitigation); None when
+                       not applicable
     worker             dispatch-worker id (engine-served solves only —
                        the continuous-batching pool attributes each
                        completed request to the worker that executed it)
@@ -60,6 +69,8 @@ def build_solve_telemetry(cfg, backend: str, n: int, m: int,
                           pcg_iters=None, residuals=None, diagnostics=None,
                           warm_start: Optional[bool] = None,
                           presolve: Optional[Dict[str, Any]] = None,
+                          cost: Optional[Dict[str, Any]] = None,
+                          clamped_reweights: Optional[int] = None,
                           ) -> Dict[str, Any]:
     """Assemble the per-solve telemetry dict (see module docstring).
 
@@ -85,10 +96,18 @@ def build_solve_telemetry(cfg, backend: str, n: int, m: int,
         # +1 maps the iteration index to 1-based "exited after iteration k"
         if adaptive and iters and iters[-1] == 0:
             early_exit = (nz[-1] + 1) if nz else 0
+    cost = cost or {}
     return {
         "backend": backend,
         "n": int(n),
         "m": int(m),
+        "flops": cost.get("flops"),
+        "hbm_bytes": cost.get("hbm_bytes"),
+        "achieved_gflops": cost.get("achieved_gflops"),
+        "achieved_gbps": cost.get("achieved_gbps"),
+        "roofline_fraction": cost.get("roofline_fraction"),
+        "clamped_reweights": (int(clamped_reweights)
+                              if clamped_reweights is not None else None),
         "irls_configured": int(cfg.n_irls),
         "irls_executed": executed,
         "pcg_per_iter": iters,
@@ -133,6 +152,10 @@ class TelemetryAggregator:
         self.warm_known = 0
         self.presolve_solves = 0
         self.kernel_node_reduction = Reservoir(self._max_samples)
+        self.flops_total = 0
+        self.profiled_solves = 0
+        self.achieved_gflops = Reservoir(self._max_samples)
+        self.clamped_reweights_total = 0
 
     def clear(self) -> None:
         with self._lock:
@@ -162,6 +185,13 @@ class TelemetryAggregator:
                 self.warm_known += 1
                 if t["warm_start"]:
                     self.warm_hits += 1
+            if t.get("flops"):
+                self.flops_total += int(t["flops"])
+                self.profiled_solves += 1
+                if t.get("achieved_gflops") is not None:
+                    self.achieved_gflops.add(t["achieved_gflops"])
+            if t.get("clamped_reweights"):
+                self.clamped_reweights_total += int(t["clamped_reweights"])
             p = t.get("presolve")
             if p:
                 self.presolve_solves += 1
@@ -191,4 +221,9 @@ class TelemetryAggregator:
                                     if self.warm_known else float("nan")),
                 "presolve_solves": self.presolve_solves,
                 "mean_kernel_node_reduction": self.kernel_node_reduction.mean,
+                "profiled_solves": self.profiled_solves,
+                "total_flops": self.flops_total,
+                "mean_achieved_gflops": self.achieved_gflops.mean,
+                "p90_achieved_gflops": self.achieved_gflops.percentile(90),
+                "clamped_reweights_total": self.clamped_reweights_total,
             }

@@ -480,6 +480,8 @@ class MinCutServer:
                 if tenant is not None and self.backend != "sharded":
                     tel["warm_start"] = warm_hit
                 self.telemetry.add(tel)
+                self.metrics.record_solve_cost(tel.get("flops"),
+                                               tel.get("achieved_gflops"))
             res = res._replace(timings=timings, telemetry=tel)
             self.metrics.record_request(timings, now)
             r.future.set_result(res)

@@ -122,6 +122,17 @@ class ServeMetrics:
         self._hist("batch_size").observe(int(size))
         self._hist("bucket_size").observe(int(bucket))
 
+    def record_solve_cost(self, flops: Optional[float],
+                          achieved_gflops: Optional[float]) -> None:
+        """Continuous-profiling figures of one served solve (present when
+        the session profiles — ``REPRO_PROFILE=1`` or tracing on): total
+        device flops as an exact counter, achieved GFLOP/s as a bounded
+        sample series — both land in ``prometheus_text``."""
+        if flops:
+            self.registry.counter("solve_flops").inc(float(flops))
+        if achieved_gflops is not None:
+            self._hist("achieved_gflops").observe(float(achieved_gflops))
+
     def record_request(self, timings: Dict[str, float], now: float,
                        failed: bool = False) -> None:
         if failed:
