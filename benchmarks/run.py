@@ -20,8 +20,8 @@ import os
 import sys
 import traceback
 
-from . import (cuttree, irls_hotpath, kernel, phases, polarization, quality,
-               roofline, scaling, serve, speedup, warm_start)
+from . import (cuttree, drift, irls_hotpath, kernel, phases, polarization,
+               quality, roofline, scaling, serve, speedup, warm_start)
 
 BENCHES = {
     "fig1": warm_start.run,
@@ -36,6 +36,7 @@ BENCHES = {
     "cuttree": cuttree.run,
     "sharded": scaling.run_sharded,
     "kernel": kernel.run,
+    "drift": drift.run,
 }
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

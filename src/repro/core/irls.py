@@ -269,14 +269,18 @@ class _Stepper:
 
 
 def run_host_loop(stepper: _Stepper, cfg: IRLSConfig, n: int, dtype,
-                  v0=None, collect_voltages: bool = False, weights=None):
+                  v0=None, collect_voltages: bool = False, weights=None,
+                  c_ell=None):
     """Drive a prebuilt ``_Stepper`` through the IRLS loop.
 
     ``v0`` — optional warm-start voltages (REORDERED frame): when given, the
     cold initial WLS with W⁰ = C is skipped and reweighting starts from v0
     (the FlowImprove sequence regime).  ``weights`` — optional device
     ``(c, c_s, c_t)`` triple (REORDERED frame) overriding the stepper's
-    baked-in weights.  Returns (device voltages, diag).
+    baked-in weights.  ``c_ell`` — optional pre-staged slot-major ELL weight
+    matrix (the session's delta-staging path under weight drift — see
+    ``lap.ell_edge_weights_delta``); when absent the loop stages the weights
+    itself, once.  Returns (device voltages, diag).
 
     Adaptive knobs (host flavor of the scanned early exit, driven by the
     SAME state machine — core/adaptive.py — run eagerly on the recorded
@@ -294,7 +298,8 @@ def run_host_loop(stepper: _Stepper, cfg: IRLSConfig, n: int, dtype,
     tol_l = sched.initial_tol(cfg, tight) if adaptive else cfg.pcg_tol
     st = None                    # AdaptiveState, lazily seeded by the first
                                  # fractional-cut reading
-    c_ell = stepper.stage_edge_weights(weights)   # one scatter per SOLVE
+    if c_ell is None:
+        c_ell = stepper.stage_edge_weights(weights)  # one scatter per SOLVE
     if v0 is None:
         v = jnp.zeros((n,), dtype=dtype)
         # x⁰: WLS with W⁰ = C (cold start by definition)
@@ -385,7 +390,7 @@ def _scanned_precond(cfg: IRLSConfig, rw, matvec,
 def make_scanned_program(src, dst, cfg: IRLSConfig,
                          block_plan: Optional[pc.BlockPlan] = None,
                          ell_plan: Optional[lap.EllPlan] = None,
-                         warm: bool = False):
+                         warm: bool = False, ext_stage: bool = False):
     """Build the weight-parameterized scanned IRLS program.
 
     Returns ``run(c, c_s, c_t) → (v, rels, iters)`` with the topology
@@ -401,6 +406,14 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
     in scanned/vmappable form (the serving tier's drifting-weight re-solve
     path).  Under the adaptive schedule the convergence state is seeded
     from the first iteration's reading, exactly as the host loop does.
+
+    ``ext_stage=True`` (fused ELL configs only) moves the once-per-solve
+    slot-major weight staging OUT of the program: the caller passes the
+    staged matrix as an extra traced argument right after the weights —
+    ``run(c, c_s, c_t, c_ell[, v0])``.  This is the delta-staging serving
+    path: under sparse weight drift the session patches the previous
+    staging (``lap.ell_edge_weights_delta``) instead of rescattering all m
+    edges inside the program.
 
     Static shapes end to end; control flow depends on the schedule:
 
@@ -418,14 +431,21 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
     input array, so scanned and host numerics agree.
     """
     adaptive = _adaptive(cfg)
+    if ext_stage and not _fused(cfg, ell_plan):
+        raise ValueError("ext_stage requires the fused ELL path "
+                         "(cfg.layout='ell' + fuse_edge_sweep + an ELL plan)")
 
-    def _run(c, c_s, c_t, v_warm):
+    def _run(c, c_s, c_t, v_warm, c_ell_in):
         g = DeviceGraph(src=src, dst=dst, c=c, c_s=c_s, c_t=c_t)
         eps_sched = jnp.asarray(eps_schedule_array(cfg), dtype=c.dtype)
-        # stage the edge weights slot-major ONCE per solve; every IRLS
+        # stage the edge weights slot-major ONCE per solve (unless the
+        # caller staged them already — the delta path); every IRLS
         # iteration is then a scatter-free fused sweep
-        c_ell = (lap.ell_edge_weights(ell_plan, c)
-                 if _fused(cfg, ell_plan) else None)
+        if c_ell_in is not None:
+            c_ell = c_ell_in
+        else:
+            c_ell = (lap.ell_edge_weights(ell_plan, c)
+                     if _fused(cfg, ell_plan) else None)
 
         if warm:
             v0 = v_warm.astype(c.dtype)
@@ -489,12 +509,18 @@ def make_scanned_program(src, dst, cfg: IRLSConfig,
         (v, _), (rels, iters) = jax.lax.scan(irls_step, carry0, eps_sched)
         return v, rels, iters
 
-    if warm:
+    if ext_stage and warm:
+        def run(c, c_s, c_t, c_ell, v0):
+            return _run(c, c_s, c_t, v0, c_ell)
+    elif ext_stage:
+        def run(c, c_s, c_t, c_ell):
+            return _run(c, c_s, c_t, None, c_ell)
+    elif warm:
         def run(c, c_s, c_t, v0):
-            return _run(c, c_s, c_t, v0)
+            return _run(c, c_s, c_t, v0, None)
     else:
         def run(c, c_s, c_t):
-            return _run(c, c_s, c_t, None)
+            return _run(c, c_s, c_t, None, None)
     return run
 
 

@@ -213,6 +213,57 @@ def ell_edge_weights(plan: EllPlan, c: jax.Array) -> jax.Array:
     return ce.at[plan.slot_rows, plan.slot_cols].set(c[plan.edge_id])
 
 
+class EllDeltaMap(NamedTuple):
+    """Edge-major view of the TWO ELL slots of every undirected edge.
+
+    ``ell_edge_weights`` scatters slot-major (all 2m directed copies); a
+    drift step that touches d ≪ m edges only needs the 2d slots of the
+    changed edges.  ``rows[e]``/``lanes[e]`` are those two (row, lane)
+    destinations for undirected edge ``e`` — the inverse of
+    ``EllPlan.edge_id`` grouped per edge (``edge_row``/``edge_lane`` only
+    name the FIRST slot).  Built once per topology next to the plan.
+    """
+
+    rows: jax.Array   # int32[m, 2]
+    lanes: jax.Array  # int32[m, 2]
+
+
+def build_ell_delta_map(plan: EllPlan) -> EllDeltaMap:
+    """Host-side construction of the per-edge slot map (numpy)."""
+    import numpy as np
+
+    eid = np.asarray(plan.edge_id)
+    m = eid.shape[0] // 2
+    order = np.argsort(eid, kind="stable")
+    return EllDeltaMap(
+        rows=jnp.asarray(np.asarray(plan.slot_rows)[order].reshape(m, 2)),
+        lanes=jnp.asarray(np.asarray(plan.slot_cols)[order].reshape(m, 2)),
+    )
+
+
+def ell_edge_weights_delta(dmap: EllDeltaMap, c_ell_prev: jax.Array,
+                           c: jax.Array, changed) -> jax.Array:
+    """Delta mode of ``ell_edge_weights``: scatter only the slots of the
+    ``changed`` edge ids into the previously staged value matrix.
+
+    Bit-equal to a full restage by construction — the untouched slots ARE
+    the previous staging, and the changed slots receive exactly the values
+    ``ell_edge_weights`` would have written (same gather, same dtype).
+    ``changed`` is a host-side int array (the diff is data-dependent, so
+    this runs eagerly once per solve, like the full stage it replaces).
+    """
+    import numpy as np
+
+    changed = np.asarray(changed)
+    if changed.size == 0:
+        return c_ell_prev
+    rows = dmap.rows[changed]                      # [d, 2]
+    lanes = dmap.lanes[changed]
+    vals = jnp.asarray(c)[changed].astype(c_ell_prev.dtype)
+    return c_ell_prev.at[rows, lanes].set(
+        jnp.broadcast_to(vals[:, None], rows.shape))
+
+
 def fused_ell_sweep(cols: jax.Array, c_ell: jax.Array, c_s: jax.Array,
                     c_t: jax.Array, v: jax.Array, eps):
     """One edge sweep builds the WHOLE per-iteration system (eq. 4 → eq. 8).

@@ -81,6 +81,11 @@ class Weights(NamedTuple):
 
 WeightsLike = Union["Weights", STInstance, tuple]
 
+# delta staging engages only while the diff stays this sparse — beyond it a
+# full restage is both cheaper (one dense scatter vs a large gather/scatter
+# pair) and keeps the staged table from accumulating scatter latency
+DELTA_MAX_FRAC = 0.25
+
 
 def check_weights_for(instance: STInstance, weights: WeightsLike) -> Weights:
     """Coerce + validate a weight assignment against ``instance``'s topology
@@ -200,6 +205,7 @@ class Problem:
         self._graphs: Dict[str, DeviceGraph] = {}
         self._block_plan = None
         self._ell_plan = None
+        self._ell_delta_map = None
         self._fingerprint: Optional[str] = None
         self._components: Optional[np.ndarray] = None
         # lazy plan caches are built at most once even when a pool of
@@ -357,6 +363,15 @@ class Problem:
                 self._ell_plan = lap.build_ell_plan(g.src, g.dst, g.n)
             return self._ell_plan
 
+    def ell_delta_map(self) -> lap.EllDeltaMap:
+        """Per-edge (row, lane) slot pairs of the ELL plan — the scatter
+        targets of the delta-staging path (``lap.ell_edge_weights_delta``).
+        Topology-level like the plan itself; built once, lazily."""
+        with self._plan_lock:
+            if self._ell_delta_map is None:
+                self._ell_delta_map = lap.build_ell_delta_map(self.ell_plan())
+            return self._ell_delta_map
+
     def instance_with(self, weights: Optional[WeightsLike]) -> STInstance:
         """Original-order instance carrying ``weights`` (for rounding /
         oracles); the Problem's own instance when weights is None."""
@@ -436,6 +451,17 @@ class MinCutSession:
         self._kernels: "OrderedDict[str, object]" = OrderedDict()
         self._kernel_max = 16
         self._kernel_sessions: Dict[tuple, MinCutSession] = {}
+        # drift-aware kernel reuse: the most recent (weights, kernel) per
+        # delta key, so a sparse weight change revalidates the recorded
+        # reduction journal and patches the kernel weights through the
+        # contraction map instead of re-running the fixpoint
+        self._kernel_recent: "OrderedDict[str, tuple]" = OrderedDict()
+        self._kernel_outcomes = {"reuse": 0, "patch": 0, "rebuild": 0}
+        # delta-weight staging: per-key previous weights + staged ELL
+        # values, so a solve that drifts few edges scatters only those
+        # slots (lap.ell_edge_weights_delta) instead of restaging all m
+        self._delta: "OrderedDict[str, dict]" = OrderedDict()
+        self._delta_max = 64
         # per-session fold of every SolveResult.telemetry this session
         # produced (repro.obs.telemetry); see telemetry_snapshot()
         self.telemetry = TelemetryAggregator()
@@ -455,7 +481,8 @@ class MinCutSession:
               backend: Optional[str] = None,
               cfg: Optional[IRLSConfig] = None,
               collect_voltages: bool = False,
-              presolve: bool = False) -> SolveResult:
+              presolve: bool = False,
+              delta_key: Optional[str] = None) -> SolveResult:
         """IRLS → rounding → SolveResult.
 
         weights   — same-topology weight override (Weights / STInstance /
@@ -470,6 +497,14 @@ class MinCutSession:
                     lifted back to the original n with an exact cut-value
                     certificate.  Kernels and kernel sessions are cached on
                     this session.
+        delta_key — identity of a weight SEQUENCE (e.g. a serving tenant on
+                    this topology): the session remembers the previous
+                    weights under this key, diffs the new ones against them,
+                    and (a) restages only the changed ELL slots on the fused
+                    host/scanned paths and (b) revalidates + patches the
+                    cached presolve kernel instead of re-kernelizing.
+                    Results are bit-equal to the non-incremental path; see
+                    docs/API.md "Incremental updates".
         """
         backend = backend or self.backend
         cfg = cfg or self.cfg
@@ -478,7 +513,7 @@ class MinCutSession:
                              f"known: {self.BACKENDS}")
         if presolve:
             return self._solve_presolve(weights, warm_from, rounding,
-                                        backend, cfg)
+                                        backend, cfg, delta_key=delta_key)
         if warm_from is not None and backend == "sharded":
             raise ValueError("warm_from is only supported on the host and "
                              "scanned backends (sharded runs a fixed cold "
@@ -486,6 +521,13 @@ class MinCutSession:
         trivial = self._check_connectivity(weights, rounding, backend)
         if trivial is not None:
             return trivial
+        c_ell = delta_tel = None
+        if delta_key is not None:
+            w_chk = (self.problem.check_weights(weights)
+                     if weights is not None
+                     else as_weights(self.problem.instance))
+            c_ell, delta_tel = self._stage_with_delta(w_chk, cfg, backend,
+                                                      delta_key)
         timings: Dict[str, float] = {}
         pcg_iters = None
         get_registry().counter(f"session_solves_{backend}_total").inc()
@@ -496,10 +538,11 @@ class MinCutSession:
                 if backend == "host":
                     v, diag, rels = self._solve_host(cfg, weights, warm_from,
                                                      collect_voltages,
-                                                     timings)
+                                                     timings, c_ell=c_ell)
                 elif backend == "scanned":
                     v, diag, rels, pcg_iters = self._solve_scanned(
-                        cfg, weights, timings, warm_from=warm_from)
+                        cfg, weights, timings, warm_from=warm_from,
+                        c_ell=c_ell)
                 else:
                     v, diag, rels, pcg_iters = self._solve_sharded(cfg,
                                                                    weights,
@@ -519,9 +562,13 @@ class MinCutSession:
                 timings["rounding"] = time.perf_counter() - t1
             timings["total"] = time.perf_counter() - t0
         clamped = None
+        sharded_refill = None
         if backend == "sharded":
             solver = self._steppers.get((cfg, "sharded", self.schedule))
             clamped = getattr(solver, "last_clamped", None)
+            stats = getattr(solver, "delta_stats", None)
+            if stats is not None:
+                sharded_refill = dict(stats)
         tel = build_solve_telemetry(
             cfg, backend, self.problem.instance.n,
             self.problem.instance.graph.m, timings, pcg_iters=pcg_iters,
@@ -531,6 +578,10 @@ class MinCutSession:
             cost=self._solve_cost(cfg, backend, warm_from is not None,
                                   diag, timings),
             clamped_reweights=clamped)
+        if delta_tel is not None:
+            tel["delta"] = delta_tel
+        if sharded_refill is not None:
+            tel["sharded_refill"] = sharded_refill
         self.telemetry.add(tel)
         self._record_cost_metrics(tel)
         return SolveResult(voltages=v, cut=cut, diagnostics=diag,
@@ -542,7 +593,9 @@ class MinCutSession:
                     cfg: Optional[IRLSConfig] = None,
                     pad_to: Optional[int] = None,
                     presolve: bool = False,
-                    warm_from: Optional[Sequence] = None) -> List[SolveResult]:
+                    warm_from: Optional[Sequence] = None,
+                    delta_keys: Optional[Sequence[Optional[str]]] = None,
+                    ) -> List[SolveResult]:
         """Solve MANY same-topology instances in one vmapped scanned program
         — the batched serving path (segmentation frames, FlowImprove
         populations).  One compile per batch length; rounding runs per
@@ -560,19 +613,29 @@ class MinCutSession:
         need two programs).  ``presolve`` kernelizes every entry, groups
         entries whose kernels share a topology, batches each group, and
         lifts the results back; incompatible with ``warm_from``.
+
+        ``delta_keys`` — one weight-sequence identity per entry (or None to
+        opt an entry out): each entry stages through the per-key delta
+        cache of ``solve(delta_key=...)``, so a drifting tenant's ELL table
+        is patched in place instead of restaged (fused-ELL cfg only); under
+        ``presolve`` the keys drive kernel revalidation per entry instead.
         """
         ws = [self.problem.check_weights(w) for w in weights_batch]
         if not ws:
             # empty batch: nothing to stack, nothing to compile
             return []
         cfg = cfg or self.cfg
+        if delta_keys is not None and len(delta_keys) != len(ws):
+            raise ValueError(f"delta_keys has {len(delta_keys)} entries for "
+                             f"a batch of {len(ws)}")
         if presolve:
             if warm_from is not None:
                 raise ValueError("presolve batches run cold (the kernel "
                                  "node set depends on the weights, so a "
                                  "previous voltage vector has no stable "
                                  "projection)")
-            return self._solve_batch_presolve(ws, rounding, cfg)
+            return self._solve_batch_presolve(ws, rounding, cfg,
+                                              delta_keys=delta_keys)
         prob = self.problem
         dtype = jnp.dtype(cfg.dtype)
         warm = warm_from is not None
@@ -592,9 +655,13 @@ class MinCutSession:
         n_real = len(ws_live)
         get_registry().counter("session_solves_scanned_total").inc(n_real)
         t0 = time.perf_counter()
+        ext = (delta_keys is not None and cfg.layout == "ell"
+               and cfg.fuse_edge_sweep)
+        delta_infos: Optional[List[Optional[dict]]] = None
         with trace.span("session.solve_batch", size=n_real,
                         pad_to=pad_to or n_real, warm=warm):
-            run = self._get_scanned(cfg, dtype, batched=True, warm=warm)
+            run = self._get_scanned(cfg, dtype, batched=True, warm=warm,
+                                    ext=ext)
             if pad_to is not None:
                 if pad_to < n_real:
                     raise ValueError(
@@ -604,6 +671,22 @@ class MinCutSession:
             else:
                 pad = 0
             ws_run = ws_live + [ws_live[-1]] * pad
+            C_ELL = None
+            if ext:
+                staged, delta_infos = [], []
+                for j, i in enumerate(live):
+                    k = delta_keys[i]
+                    if k is None:
+                        staged.append(lap.ell_edge_weights(
+                            prob.ell_plan(),
+                            jnp.asarray(ws_live[j].c, dtype=dtype)))
+                        delta_infos.append(None)
+                    else:
+                        ce, inf = self._stage_with_delta(ws_live[j], cfg,
+                                                         "scanned", k)
+                        staged.append(ce)
+                        delta_infos.append(inf)
+                C_ELL = jnp.stack(staged + [staged[-1]] * pad)
             C = jnp.stack([jnp.asarray(w.c, dtype=dtype) for w in ws_run])
             CS = jnp.stack([jnp.asarray(prob.to_reordered(w.c_s), dtype=dtype)
                             for w in ws_run])
@@ -619,7 +702,10 @@ class MinCutSession:
                     V0 = jnp.stack([jnp.asarray(prob.to_reordered(v),
                                                 dtype=dtype)
                                     for v in vs_run])
-                    V, RELS, ITERS = run(C, CS, CT, V0)
+                    V, RELS, ITERS = (run(C, CS, CT, C_ELL, V0) if ext
+                                      else run(C, CS, CT, V0))
+                elif ext:
+                    V, RELS, ITERS = run(C, CS, CT, C_ELL)
                 else:
                     V, RELS, ITERS = run(C, CS, CT)
                 V = np.asarray(V)
@@ -650,6 +736,8 @@ class MinCutSession:
                     residuals=np.asarray(RELS[j]), warm_start=warm,
                     cost=perf_profile.per_solve_cost(batch_cost,
                                                      timings["irls"]))
+                if delta_infos is not None and delta_infos[j] is not None:
+                    tel["delta"] = delta_infos[j]
                 self.telemetry.add(tel)
                 self._record_cost_metrics(tel)
                 out[i] = SolveResult(
@@ -663,7 +751,10 @@ class MinCutSession:
         """Aggregated telemetry over every solve this session ran (PCG
         spend distribution, phase walls, early-exit/warm-start rates,
         kernel reductions) — see ``repro.obs.telemetry``."""
-        return self.telemetry.snapshot()
+        snap = self.telemetry.snapshot()
+        if sum(self._kernel_outcomes.values()):
+            snap["kernel_outcomes"] = dict(self._kernel_outcomes)
+        return snap
 
     # -- presolve (kernelization) ---------------------------------------------
     def _check_connectivity(self, weights, rounding, backend):
@@ -710,32 +801,69 @@ class MinCutSession:
                            timings=timings,
                            backend=backend, pcg_iters=None, telemetry=tel)
 
-    def _kernel_for(self, w: Weights):
-        """Kernelize under ``w`` (LRU-cached on the weight content — the
-        reduction rules read weight values, so the kernel is per-weights
-        even though the session is per-topology)."""
+    def _kernel_for(self, w: Weights, delta_key: Optional[str] = None):
+        """Kernelize under ``w`` — returns ``(kernel, action)``.
+
+        Three outcomes, cheapest first (counted in ``_kernel_outcomes``):
+
+        * ``"reuse"``   — weight-content-hash LRU hit: identical weights
+          were kernelized before.
+        * ``"patch"``   — ``delta_key`` named a weight sequence whose last
+          kernel is on file; the changed edges pass journal revalidation
+          (no reduction decision could flip — see
+          ``repro.presolve.patch_kernel``), so the kernel's weights are
+          patched through the contraction map instead of re-running the
+          fixpoint.  Exact: the patched kernel equals a fresh kernelize of
+          the rules the journal recorded, and the lift-time certificate is
+          re-checked per solve as always.
+        * ``"rebuild"`` — full kernelize fixpoint.
+        """
         h = hashlib.blake2b(digest_size=16)
-        for arr in (w.c, w.c_s, w.c_t):
-            h.update(np.ascontiguousarray(
-                np.asarray(arr, dtype=np.float64)).tobytes())
+        c64 = np.ascontiguousarray(np.asarray(w.c, dtype=np.float64))
+        cs64 = np.ascontiguousarray(np.asarray(w.c_s, dtype=np.float64))
+        ct64 = np.ascontiguousarray(np.asarray(w.c_t, dtype=np.float64))
+        for arr in (c64, cs64, ct64):
+            h.update(arr.tobytes())
         key = h.hexdigest()
         with self._cache_lock:
             kernel = self._kernels.get(key)
             if kernel is not None:
                 self._kernels.move_to_end(key)
-                return kernel
-        # kernelize outside the lock (vectorized but non-trivial on big
-        # graphs); a concurrent duplicate costs a redundant kernelization,
-        # never a wrong result (both kernels are equal by construction)
-        from repro.presolve import kernelize
-        kernel = kernelize(self.problem.instance, c=w.c, c_s=w.c_s,
-                           c_t=w.c_t)
+                self._kernel_outcomes["reuse"] += 1
+                if delta_key is not None:
+                    self._kernel_recent[delta_key] = (c64, cs64, ct64,
+                                                      kernel)
+                    self._kernel_recent.move_to_end(delta_key)
+                return kernel, "reuse"
+            recent = (self._kernel_recent.get(delta_key)
+                      if delta_key is not None else None)
+        # kernelize/patch outside the lock (vectorized but non-trivial on
+        # big graphs); a concurrent duplicate costs a redundant
+        # kernelization, never a wrong result (equal by construction)
+        action, kernel = "rebuild", None
+        if recent is not None:
+            from repro.presolve import patch_kernel
+            kernel = patch_kernel(recent[3], (recent[0], recent[1],
+                                              recent[2]),
+                                  (c64, cs64, ct64))
+            if kernel is not None:
+                action = "patch"
+        if kernel is None:
+            from repro.presolve import kernelize
+            kernel = kernelize(self.problem.instance, c=w.c, c_s=w.c_s,
+                               c_t=w.c_t)
         with self._cache_lock:
+            self._kernel_outcomes[action] += 1
             kernel = self._kernels.setdefault(key, kernel)
             self._kernels.move_to_end(key)
             while len(self._kernels) > self._kernel_max:
                 self._kernels.popitem(last=False)
-        return kernel
+            if delta_key is not None:
+                self._kernel_recent[delta_key] = (c64, cs64, ct64, kernel)
+                self._kernel_recent.move_to_end(delta_key)
+                while len(self._kernel_recent) > self._delta_max:
+                    self._kernel_recent.popitem(last=False)
+        return kernel, action
 
     def _kernel_cfg(self, cfg: IRLSConfig, kernel_n: int) -> IRLSConfig:
         """Config for the kernel solve: block Jacobi needs blocks with a
@@ -768,7 +896,8 @@ class MinCutSession:
         return sess, kcfg
 
     def _lift_result(self, kernel, kres: SolveResult, rounding,
-                     t_presolve: float) -> SolveResult:
+                     t_presolve: float,
+                     action: Optional[str] = None) -> SolveResult:
         """Map a kernel-space SolveResult back to the original vertex set,
         attaching the exact cut certificate."""
         v = kernel.lift_voltages(kres.voltages)
@@ -798,6 +927,8 @@ class MinCutSession:
                 "edge_reduction": kernel.edge_reduction,
                 "base": kernel.base, "stats": kernel.stats,
             }
+            if action is not None:
+                tel["presolve"]["action"] = action
             tel["phases"] = {k: float(x) for k, x in timings.items()}
             self.telemetry.add(tel)
         return SolveResult(voltages=v, cut=cut, diagnostics=kres.diagnostics,
@@ -806,7 +937,8 @@ class MinCutSession:
                            telemetry=tel)
 
     def _trivial_from_kernel(self, kernel, rounding, backend,
-                             t_presolve: float) -> SolveResult:
+                             t_presolve: float,
+                             action: Optional[str] = None) -> SolveResult:
         """The reductions decided the whole cut (kernel_n == 0 — includes
         the s-t-disconnected case, where base == 0)."""
         in_source = kernel.lift_partition(None)
@@ -829,6 +961,8 @@ class MinCutSession:
             "edge_reduction": kernel.edge_reduction,
             "base": kernel.base, "stats": kernel.stats,
         }
+        if action is not None:
+            tel["presolve"]["action"] = action
         self.telemetry.add(tel)
         return SolveResult(voltages=in_source.astype(np.float64), cut=cut,
                            diagnostics=None, residuals=None,
@@ -836,15 +970,17 @@ class MinCutSession:
                            backend=backend, pcg_iters=None, telemetry=tel)
 
     def _solve_presolve(self, weights, warm_from, rounding, backend,
-                        cfg: IRLSConfig) -> SolveResult:
+                        cfg: IRLSConfig,
+                        delta_key: Optional[str] = None) -> SolveResult:
         w = (self.problem.check_weights(weights) if weights is not None
              else as_weights(self.problem.instance))
         t0 = time.perf_counter()
         with trace.span("session.presolve", n=self.problem.instance.n):
-            kernel = self._kernel_for(w)
+            kernel, action = self._kernel_for(w, delta_key=delta_key)
         t_pre = time.perf_counter() - t0
         if kernel.trivial:
-            return self._trivial_from_kernel(kernel, rounding, backend, t_pre)
+            return self._trivial_from_kernel(kernel, rounding, backend,
+                                             t_pre, action=action)
         sess, kcfg = self._kernel_session(kernel, cfg)
         v0 = None
         if warm_from is not None and backend in ("host", "scanned"):
@@ -858,32 +994,38 @@ class MinCutSession:
                 v0 = wv[roots]
         kres = sess.solve(weights=as_weights(kernel.instance),
                           warm_from=v0, rounding=rounding, backend=backend,
-                          cfg=kcfg)
-        return self._lift_result(kernel, kres, rounding, t_pre)
+                          cfg=kcfg, delta_key=delta_key)
+        return self._lift_result(kernel, kres, rounding, t_pre,
+                                 action=action)
 
     def _solve_batch_presolve(self, ws: List[Weights], rounding,
-                              cfg: IRLSConfig) -> List[SolveResult]:
+                              cfg: IRLSConfig,
+                              delta_keys: Optional[Sequence] = None,
+                              ) -> List[SolveResult]:
         out: List[Optional[SolveResult]] = [None] * len(ws)
         groups: Dict[tuple, List[tuple]] = {}
         for i, w in enumerate(ws):
+            dk = delta_keys[i] if delta_keys is not None else None
             t0 = time.perf_counter()
             with trace.span("session.presolve", n=self.problem.instance.n):
-                kernel = self._kernel_for(w)
+                kernel, action = self._kernel_for(w, delta_key=dk)
             t_pre = time.perf_counter() - t0
             if kernel.trivial:
                 out[i] = self._trivial_from_kernel(kernel, rounding,
-                                                   "scanned", t_pre)
+                                                   "scanned", t_pre,
+                                                   action=action)
             else:
                 key = (topology_fingerprint(kernel.instance),)
-                groups.setdefault(key, []).append((i, kernel, t_pre))
+                groups.setdefault(key, []).append((i, kernel, t_pre, action))
         for items in groups.values():
             kernel0 = items[0][1]
             sess, kcfg = self._kernel_session(kernel0, cfg)
             kress = sess.solve_batch(
-                [as_weights(k.instance) for _, k, _ in items],
+                [as_weights(k.instance) for _, k, _, _ in items],
                 rounding=rounding, cfg=kcfg)
-            for (i, kernel, t_pre), kres in zip(items, kress):
-                out[i] = self._lift_result(kernel, kres, rounding, t_pre)
+            for (i, kernel, t_pre, action), kres in zip(items, kress):
+                out[i] = self._lift_result(kernel, kres, rounding, t_pre,
+                                           action=action)
         return [r for r in out if r is not None]
 
     # -- backend drivers ------------------------------------------------------
@@ -977,7 +1119,63 @@ class MinCutSession:
         g = self.problem.device_graph(dtype, weights)
         return (g.c, g.c_s, g.c_t)
 
-    def _solve_host(self, cfg, weights, warm_from, collect_voltages, timings):
+    def _stage_with_delta(self, w: Weights, cfg: IRLSConfig, backend: str,
+                          delta_key: str):
+        """Delta-aware edge-weight staging for a keyed weight SEQUENCE.
+
+        Remembers the previous ``Weights`` under ``delta_key`` and diffs the
+        new vector against them.  On the fused-ELL host/scanned paths the
+        staged (n, k) ELL weight table is carried forward too: a sparse diff
+        scatters only the changed edges' two slots
+        (``lap.ell_edge_weights_delta``) instead of restaging all m — and is
+        bit-equal to a full restage, because both paths round the same
+        float64 inputs to the compute dtype once.
+
+        Returns ``(c_ell, info)`` — the staged table (None off the fused-ELL
+        path) and a telemetry record.  ``info["mode"]`` is ``"cold"`` (no
+        previous entry), ``"delta"`` (sparse diff applied) or ``"full"``
+        (diff too dense / dtype changed — full restage, cache refreshed).
+        """
+        m = int(np.asarray(w.c).shape[0])
+        c64 = np.array(w.c, dtype=np.float64)
+        dtype = jnp.dtype(cfg.dtype)
+        fused_ell = (backend in ("host", "scanned") and cfg.layout == "ell"
+                     and cfg.fuse_edge_sweep)
+        with self._cache_lock:
+            entry = self._delta.get(delta_key)
+        info = {"key": delta_key, "mode": "cold", "changed_edges": None,
+                "edges": m}
+        changed = None
+        if entry is not None:
+            diff = np.flatnonzero(entry["c"] != c64)
+            info["changed_edges"] = int(diff.size)
+            if diff.size <= DELTA_MAX_FRAC * max(1, m):
+                changed = diff
+            info["mode"] = "delta" if changed is not None else "full"
+        c_ell = None
+        if fused_ell:
+            if (changed is not None and entry.get("c_ell") is not None
+                    and entry.get("dtype") == str(dtype)):
+                c_ell = lap.ell_edge_weights_delta(
+                    self.problem.ell_delta_map(), entry["c_ell"], c64,
+                    changed)
+            else:
+                # cold (or unusable) entry: stage everything ONCE eagerly so
+                # the next solve under this key can go sparse
+                if entry is not None:
+                    info["mode"] = "full"
+                c_ell = lap.ell_edge_weights(
+                    self.problem.ell_plan(), jnp.asarray(c64, dtype=dtype))
+        with self._cache_lock:
+            self._delta[delta_key] = {"c": c64, "c_ell": c_ell,
+                                      "dtype": str(dtype)}
+            self._delta.move_to_end(delta_key)
+            while len(self._delta) > self._delta_max:
+                self._delta.popitem(last=False)
+        return c_ell, info
+
+    def _solve_host(self, cfg, weights, warm_from, collect_voltages, timings,
+                    c_ell=None):
         prob = self.problem
         dtype = jnp.dtype(cfg.dtype)
         key = (cfg, "host")
@@ -1011,12 +1209,14 @@ class MinCutSession:
             v0 = prob.to_reordered(np.asarray(w))
         v, diag = run_host_loop(stepper, cfg, prob.instance.n, dtype, v0=v0,
                                 collect_voltages=collect_voltages,
-                                weights=self._device_weights(weights, dtype))
+                                weights=self._device_weights(weights, dtype),
+                                c_ell=c_ell)
         diag.setup_time = timings["setup"]
         return prob.to_original(np.asarray(v)), diag, None
 
-    def _get_scanned(self, cfg, dtype, batched: bool, warm: bool = False):
-        key = (cfg, "scanned", batched, warm)
+    def _get_scanned(self, cfg, dtype, batched: bool, warm: bool = False,
+                     ext: bool = False):
+        key = (cfg, "scanned", batched, warm, ext)
         run = self._steppers.get(key)
         if run is None:
             with self._compile_lock(key):
@@ -1026,10 +1226,11 @@ class MinCutSession:
                     g0 = self.problem.device_graph(dtype)
                     raw = make_scanned_program(g0.src, g0.dst, cfg,
                                                block_plan, ell_plan,
-                                               warm=warm)
-                    # kept for the profiler: batched programs report the
-                    # per-instance (unvmapped) program's cost estimate
-                    self._scanned_raw[(cfg, warm)] = raw
+                                               warm=warm, ext_stage=ext)
+                    if not ext:
+                        # kept for the profiler: batched programs report the
+                        # per-instance (unvmapped) program's cost estimate
+                        self._scanned_raw[(cfg, warm)] = raw
                     if batched:
                         # the batch path stacks FRESH (C, CS, CT[, V0])
                         # device arrays per call, so weight buffers can be
@@ -1050,13 +1251,16 @@ class MinCutSession:
             self._profile_scanned(cfg, dtype, warm)
         return run
 
-    def _solve_scanned(self, cfg, weights, timings, warm_from=None):
+    def _solve_scanned(self, cfg, weights, timings, warm_from=None,
+                       c_ell=None):
         prob = self.problem
         dtype = jnp.dtype(cfg.dtype)
         warm = warm_from is not None
+        ext = c_ell is not None
         t = time.perf_counter()
-        have = (cfg, "scanned", False, warm) in self._steppers
-        run = self._get_scanned(cfg, dtype, batched=False, warm=warm)
+        have = (cfg, "scanned", False, warm, ext) in self._steppers
+        run = self._get_scanned(cfg, dtype, batched=False, warm=warm,
+                                ext=ext)
         timings["setup"] = 0.0 if have else time.perf_counter() - t
         g = prob.device_graph(dtype, weights)
         if warm:
@@ -1064,7 +1268,10 @@ class MinCutSession:
                             if isinstance(warm_from, SolveResult)
                             else warm_from)
             v0 = jnp.asarray(prob.to_reordered(wv), dtype=dtype)
-            v, rels, iters = run(g.c, g.c_s, g.c_t, v0)
+            v, rels, iters = (run(g.c, g.c_s, g.c_t, c_ell, v0) if ext
+                              else run(g.c, g.c_s, g.c_t, v0))
+        elif ext:
+            v, rels, iters = run(g.c, g.c_s, g.c_t, c_ell)
         else:
             v, rels, iters = run(g.c, g.c_s, g.c_t)
         return (prob.to_original(np.asarray(v)), None, np.asarray(rels),

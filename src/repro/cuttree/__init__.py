@@ -10,6 +10,9 @@ change.  This package turns that into an all-pairs workload:
                    driving ``MinCutSession.solve_batch`` (IRLS, batched,
                    pow2-padded) or the exact Dinic oracle; optional exact
                    certify/refine of IRLS-built trees
+    repair.py    — ``repair_cut_tree``: replay the recorded construction
+                   under drifted edge weights, re-solving only the tree
+                   edges whose stored cut can't be proven still optimal
     tree.py      — ``CutTree``: path-minimum pair queries, global min cut,
                    certified partitions, JSON serialization
 
@@ -19,4 +22,5 @@ CLI: ``python -m repro.launch.cut_tree``.  Benchmark: ``benchmarks/cuttree``
 """
 from .gusfield import DEFAULT_CFG, build_cut_tree, build_gomory_hu
 from .pairs import graph_cut_value, pin_pair, pin_pairs
+from .repair import repair_cut_tree
 from .tree import CutTree, pack_side

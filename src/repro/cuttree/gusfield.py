@@ -92,11 +92,17 @@ def _solve_wave_exact(instance: STInstance, deg: np.ndarray,
 
 def _solve_wave_irls(session: MinCutSession, cfg: IRLSConfig, deg: np.ndarray,
                      tasks: List[Tuple[int, int]], rounding: str,
-                     batch: bool, max_batch: int):
+                     batch: bool, max_batch: int,
+                     instance: Optional[STInstance] = None):
     """Batched scanned solves per pair; sides from rounding, values recomputed
     over the graph from the (normalized) side so a misrounded terminal can
-    only cost accuracy, never inject the pin strength into the tree."""
-    instance = session.problem.instance
+    only cost accuracy, never inject the pin strength into the tree.
+
+    ``instance`` overrides the session's instance (same topology, drifted
+    weights — the repair path); per-solve weight overrides carry the new
+    edge weights through the session's compiled plans."""
+    if instance is None:
+        instance = session.problem.instance
     ws = [_pair_weights(instance, deg, t, rep) for t, rep in tasks]
     results = []
     if batch:
@@ -205,6 +211,7 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
     # on the batched path — then replays the splits in member order.
     groups: List[Tuple[int, List[int]]] = \
         [(root, [i for i in range(n) if i != root])]
+    accept_order: List[int] = []     # acceptance sequence (repair replay)
     wave_sizes: List[int] = []
     n_solves = 0
     t_solve = 0.0
@@ -246,6 +253,7 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
                         continue
                     parent[m] = rep
                     weight[m] = value
+                    accept_order.append(int(m))
                     if sides is not None:
                         sides[m] = pack_side(side)
                     stay, moved = [], []
@@ -312,6 +320,9 @@ def build_cut_tree(problem: Union[Problem, STInstance], *,
         "t_refine_s": t_refine,
         "t_build_s": t_total,
         "pairs_per_sec": n_solves / max(t_solve, 1e-12),
+        # acceptance order: replaying it reproduces the exact grouping
+        # history, which is what lets repair_cut_tree reuse stored cuts
+        "order": accept_order,
     }
     reg = get_registry()
     reg.counter("cuttree_builds_total").inc()

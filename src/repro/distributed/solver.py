@@ -197,6 +197,12 @@ class ShardedSolver:
         self._labels = labels
         self._precond_bs = precond_bs
         self.ell = None        # HaloEllPlan when the fused sweep is active
+        # incremental refills: update_weights diffs the new weights against
+        # the previous instance and, when the diff is sparse and support-
+        # stable, patches the affected plan slots (halo c + ELL staging)
+        # instead of re-running the host-side plan fills
+        self.delta_stats = {"delta": 0, "rebuild": 0}
+        self._copy_map = None  # directed copy -> (shard, ml slot), lazy
         if plans is not None:
             if schedule == "halo":
                 if len(plans) == 3:
@@ -229,8 +235,22 @@ class ShardedSolver:
         is redone (identical shapes, so the jit cache hits).  The expensive
         phases (k-way partition, lowering, compile) are skipped entirely;
         this is the session API's sharded serving path.
+
+        The refill itself is INCREMENTAL under weight drift: the new
+        weights are diffed against the previous instance's, and a sparse
+        support-stable diff (every changed edge stays positive, so the
+        preconditioner's structural copy selection cannot move) patches
+        only the affected halo-plan and ELL-staging slots — bit-equal to a
+        full refill, since both write the same float32 values to the same
+        slots.  Dense diffs, support flips and terminal-only topologies
+        fall back to the full plan fill; ``delta_stats`` counts both paths.
         """
+        if self.schedule == "halo" and self._try_delta_refill(instance):
+            self._instance = instance
+            self.delta_stats["delta"] += 1
+            return
         self._instance = instance
+        self.delta_stats["rebuild"] += 1
         if self.schedule == "halo":
             new_plan = build_halo_plan(instance, self.p, labels=self._labels)
             if (new_plan.nl, new_plan.b_sh, new_plan.heads.shape) != \
@@ -252,6 +272,85 @@ class ShardedSolver:
                 raise ValueError("update_weights requires the same topology "
                                  "(plan shapes changed)")
             self.plan = new_plan
+
+    # refills stay incremental while the diff is this sparse; denser drift
+    # amortizes better through the vectorized full plan fill
+    DELTA_MAX_FRAC = 0.25
+
+    def _directed_copy_slots(self):
+        """Directed copy e ∈ [0, 2m) → (shard, ml slot) in the halo plan —
+        the scatter targets of an incremental weight refill.  Replays the
+        owner/selection order of ``build_halo_plan`` once per topology."""
+        if self._copy_map is None:
+            g = self._instance.graph
+            perm, nl, p = self.plan.perm, self.plan.nl, self.p
+            src = perm[np.asarray(g.src, dtype=np.int64)]
+            dst = perm[np.asarray(g.dst, dtype=np.int64)]
+            heads = np.concatenate([src, dst])
+            h_own = np.minimum(heads // nl, p - 1)
+            slot = np.empty(heads.shape[0], dtype=np.int64)
+            for i in range(p):
+                sel = np.nonzero(h_own == i)[0]
+                slot[sel] = np.arange(sel.size)
+            self._copy_map = (h_own.astype(np.int32),
+                              slot.astype(np.int32))
+        return self._copy_map
+
+    def _try_delta_refill(self, instance) -> bool:
+        """Patch the halo plan + ELL staging in place of a full refill.
+
+        Applies when the edge-weight diff vs the previous instance is
+        sparse AND support-stable (changed edges positive before and
+        after — the block-preconditioner copy selection masks on c > 0, so
+        a support flip changes plan STRUCTURE and needs the full path).
+        Terminal weights are refreshed unconditionally (vectorized O(n),
+        same expressions as the full fill).  Bit-equal to a full refill.
+        """
+        prev = self._instance
+        if prev is None:
+            return False
+        plan = self.plan
+        w_old = np.asarray(prev.graph.weight, dtype=np.float32)
+        w_new = np.asarray(instance.graph.weight, dtype=np.float32)
+        if w_old.shape != w_new.shape:
+            return False
+        m = w_new.shape[0]
+        diff = np.flatnonzero(w_old != w_new)
+        if diff.size > self.DELTA_MAX_FRAC * max(1, m):
+            return False
+        if diff.size and (np.any(w_old[diff] <= 0)
+                          or np.any(w_new[diff] <= 0)):
+            return False
+        if diff.size:
+            sh, sl = self._directed_copy_slots()
+            idx = np.concatenate([diff, diff + m])
+            vals = np.concatenate([w_new[diff], w_new[diff]])
+            c = plan.c.copy()
+            c[sh[idx], sl[idx]] = vals
+            plan = plan._replace(c=c)
+            if self.ell is not None:
+                ce = self.ell.c_ell.copy()
+                ce[sh[idx], self.ell.copy_row[sh[idx], sl[idx]],
+                   self.ell.copy_lane[sh[idx], sl[idx]]] = vals
+                self.ell = self.ell._replace(c_ell=ce)
+        cs_new = np.asarray(instance.s_weight, dtype=np.float32)
+        ct_new = np.asarray(instance.t_weight, dtype=np.float32)
+        if (not np.array_equal(np.asarray(prev.s_weight, dtype=np.float32),
+                               cs_new)
+                or not np.array_equal(np.asarray(prev.t_weight,
+                                                 dtype=np.float32),
+                                      ct_new)):
+            n, nl, p = plan.n, plan.nl, plan.p
+            inv = np.empty_like(plan.perm)
+            inv[plan.perm] = np.arange(n)
+            cs = np.zeros(nl * p, dtype=np.float32)
+            ct = np.zeros(nl * p, dtype=np.float32)
+            cs[:n] = cs_new[inv]
+            ct[:n] = ct_new[inv]
+            plan = plan._replace(c_s=cs.reshape(p, nl),
+                                 c_t=ct.reshape(p, nl))
+        self.plan = plan
+        return True
 
     # -- halo schedule --------------------------------------------------------
     def _build_halo(self):

@@ -45,7 +45,7 @@ def _load_benches():
     return bench_run
 
 
-SMOKE_BENCHES = ("irls", "sharded", "cuttree", "kernel")
+SMOKE_BENCHES = ("irls", "sharded", "cuttree", "kernel", "drift")
 
 
 def main(argv=None) -> int:

@@ -48,6 +48,12 @@ def main(argv=None) -> int:
                     help="Poisson arrival rate, requests/sec")
     ap.add_argument("--drift", type=float, default=0.05,
                     help="per-step lognormal weight drift of each tenant")
+    ap.add_argument("--drift-sparsity", type=float, default=1.0,
+                    help="fraction of a tenant's edges drifted per request "
+                         "(1.0 = a global scale walk over all edges; < 1 "
+                         "drifts a random sparse subset per step — pair "
+                         "with --warm so the server's delta-staging path "
+                         "restages only the changed ELL slots)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--workers", type=int, default=None,
@@ -128,16 +134,30 @@ def main(argv=None) -> int:
                 k <<= 1
         server.reset_measurement()          # measure steady state only
 
-    # per-tenant weight sequences: multiplicative random-walk scale
+    # per-tenant weight sequences: a multiplicative random-walk scale over
+    # all edges (--drift-sparsity 1.0, the default), or a sparse per-edge
+    # walk touching only that fraction of edges per request
     scales = np.ones(args.topos)
+    sparse = 0.0 < args.drift_sparsity < 1.0
+    cur = [np.asarray(inst.graph.weight, dtype=np.float64).copy()
+           for inst in instances] if sparse else None
     futures = []
     t0 = time.perf_counter()
     for _ in range(args.requests):
         tenant = int(rng.integers(args.topos))
-        scales[tenant] *= float(np.exp(rng.normal(0.0, args.drift)))
         inst = instances[tenant]
-        w = Weights(np.asarray(inst.graph.weight) * scales[tenant],
-                    np.asarray(inst.s_weight), np.asarray(inst.t_weight))
+        if sparse:
+            c = cur[tenant]
+            k = max(1, int(round(args.drift_sparsity * c.size)))
+            idx = rng.choice(c.size, size=k, replace=False)
+            c[idx] *= np.exp(rng.normal(0.0, args.drift, size=k))
+            w = Weights(c.copy(), np.asarray(inst.s_weight),
+                        np.asarray(inst.t_weight))
+        else:
+            scales[tenant] *= float(np.exp(rng.normal(0.0, args.drift)))
+            w = Weights(np.asarray(inst.graph.weight) * scales[tenant],
+                        np.asarray(inst.s_weight),
+                        np.asarray(inst.t_weight))
         try:
             futures.append(server.submit(
                 keys[tenant], w,

@@ -1,13 +1,16 @@
 """Exact kernelization front-end: s,t-safe reductions, kernel assembly,
-contraction-derived instances, and solution lifting."""
+contraction-derived instances, weight-drift kernel patching, and
+solution lifting."""
 from .rules import RULES, Reduction, reduce_instance
-from .contract import (Kernel, DerivedInstance, kernelize, derive_instance,
-                       contraction_map, MERGED_SOURCE, MERGED_SINK, ELIMINATED)
+from .contract import (Kernel, DerivedInstance, WeightMap, kernelize,
+                       patch_kernel, derive_instance, contraction_map,
+                       MERGED_SOURCE, MERGED_SINK, ELIMINATED)
 from .lift import lift_partition, lift_voltages, cut_certificate
 
 __all__ = [
     "RULES", "Reduction", "reduce_instance",
-    "Kernel", "DerivedInstance", "kernelize", "derive_instance",
-    "contraction_map", "MERGED_SOURCE", "MERGED_SINK", "ELIMINATED",
+    "Kernel", "DerivedInstance", "WeightMap", "kernelize", "patch_kernel",
+    "derive_instance", "contraction_map",
+    "MERGED_SOURCE", "MERGED_SINK", "ELIMINATED",
     "lift_partition", "lift_voltages", "cut_certificate",
 ]

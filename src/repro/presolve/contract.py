@@ -20,12 +20,44 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from ..graphs.structures import EdgeList, STInstance, canonicalize_edges
-from .rules import RULES, Reduction, reduce_instance
+from .rules import (IN_BASE, IN_DROPPED, RULES, Reduction, reduce_instance)
 
 # vertex_map sentinel codes for non-surviving vertices
 MERGED_SOURCE = -1
 MERGED_SINK = -2
 ELIMINATED = -3   # removed by a degree-2 series merge; side from journal
+
+# WeightMap kinds: where an original weight entry's value ends up in the
+# kernel.  Entries whose kind is K_EDGE / K_CS / K_CT / K_BASE / K_DROP
+# contribute *additively* to the indexed kernel quantity, so a pure value
+# change there patches through; K_POISON fed a value-dependent rule
+# decision and K_ABSENT is a terminal entry that was <= 0 at kernelize
+# time (no pseudo-edge existed) — changes to either force a re-kernelize.
+K_EDGE = 0     # idx-th kernel graph edge weight
+K_CS = 1       # kernel source weight of node idx
+K_CT = 2       # kernel sink weight of node idx
+K_BASE = 3     # folded into Kernel.base
+K_DROP = 4     # self-loop after contraction — value-irrelevant
+K_POISON = 5
+K_ABSENT = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightMap:
+    """Additive provenance of original weights in a kernel.
+
+    ``edge_kind``/``edge_idx`` cover the m original graph edges;
+    ``cs_*``/``ct_*`` cover the n terminal weight entries.  See the
+    ``K_*`` kind codes above.  Built by :func:`kernelize` (``track=True``)
+    and consumed by :func:`patch_kernel`.
+    """
+
+    edge_kind: np.ndarray   # int8[m]
+    edge_idx: np.ndarray    # int64[m]
+    cs_kind: np.ndarray     # int8[n]
+    cs_idx: np.ndarray      # int64[n]
+    ct_kind: np.ndarray     # int8[n]
+    ct_idx: np.ndarray      # int64[n]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +83,7 @@ class Kernel:
     removed: np.ndarray              # bool[n+2]
     kernel_of_root: np.ndarray       # int64[n+2]: kernel id per surviving root, else -1
     stats: Dict[str, int]
+    wmap: Optional["WeightMap"] = None   # set when kernelized with track=True
 
     @property
     def n(self) -> int:
@@ -95,6 +128,32 @@ class Kernel:
         return cut_certificate(self, kernel_side)
 
 
+def _weight_map(red: Reduction, skind: np.ndarray,
+                sidx: np.ndarray) -> WeightMap:
+    """Compose input->slot provenance with the slot->kernel split."""
+    slot = red.input_slot
+    kind = np.full(slot.shape[0], K_POISON, dtype=np.int8)
+    idx = np.zeros(slot.shape[0], dtype=np.int64)
+    live = slot >= 0
+    kind[live] = skind[slot[live]]
+    idx[live] = sidx[slot[live]]
+    kind[slot == IN_DROPPED] = K_DROP
+    kind[slot == IN_BASE] = K_BASE
+    ns, nt = red.si.shape[0], red.ti.shape[0]
+    m = slot.shape[0] - ns - nt
+    cs_kind = np.full(red.n, K_ABSENT, dtype=np.int8)
+    cs_idx = np.zeros(red.n, dtype=np.int64)
+    ct_kind = np.full(red.n, K_ABSENT, dtype=np.int8)
+    ct_idx = np.zeros(red.n, dtype=np.int64)
+    cs_kind[red.si] = kind[m:m + ns]
+    cs_idx[red.si] = idx[m:m + ns]
+    ct_kind[red.ti] = kind[m + ns:]
+    ct_idx[red.ti] = idx[m + ns:]
+    return WeightMap(edge_kind=kind[:m], edge_idx=idx[:m],
+                     cs_kind=cs_kind, cs_idx=cs_idx,
+                     ct_kind=ct_kind, ct_idx=ct_idx)
+
+
 def _assemble(instance: STInstance, red: Reduction) -> Kernel:
     n = red.n
     S, T = n, n + 1
@@ -131,11 +190,19 @@ def _assemble(instance: STInstance, red: Reduction) -> Kernel:
     vm[red.removed[r]] = ELIMINATED
 
     if kn == 0:
+        wmap = None
+        if red.input_slot is not None:
+            # No kernel slots exist; any still-live slot (impossible in
+            # practice once every non-terminal root is merged) maps to
+            # poison, sentinel entries keep their additive meaning.
+            wmap = _weight_map(
+                red, np.full(red.eu.shape[0], K_POISON, dtype=np.int8),
+                np.zeros(red.eu.shape[0], dtype=np.int64))
         return Kernel(original=instance, instance=None, vertex_map=vm,
                       base=red.base, st_connected=red.st_connected,
                       journal=red.journal, parent=parent,
                       removed=red.removed, kernel_of_root=kernel_of_root,
-                      stats=stats)
+                      stats=stats, wmap=wmap)
 
     # Split surviving canonical edges into kernel edges / terminal weights.
     # Canonical orientation is lo < hi, so a terminal endpoint is always
@@ -155,10 +222,22 @@ def _assemble(instance: STInstance, red: Reduction) -> Kernel:
                  weight=kw.astype(np.float64), n=kn)
     kinst = STInstance(graph=g, s_weight=c_s, t_weight=c_t)
     stats["kernel_m"] = g.m
+    wmap = None
+    if red.input_slot is not None:
+        n_slots = red.eu.shape[0]
+        skind = np.empty(n_slots, dtype=np.int8)
+        sidx = np.empty(n_slots, dtype=np.int64)
+        skind[plain] = K_EDGE
+        sidx[plain] = np.arange(int(plain.sum()), dtype=np.int64)
+        skind[to_s] = K_CS
+        sidx[to_s] = kernel_of_root[red.eu[to_s]]
+        skind[to_t] = K_CT
+        sidx[to_t] = kernel_of_root[red.eu[to_t]]
+        wmap = _weight_map(red, skind, sidx)
     return Kernel(original=instance, instance=kinst, vertex_map=vm,
                   base=red.base, st_connected=red.st_connected,
                   journal=red.journal, parent=parent, removed=red.removed,
-                  kernel_of_root=kernel_of_root, stats=stats)
+                  kernel_of_root=kernel_of_root, stats=stats, wmap=wmap)
 
 
 def kernelize(instance: STInstance,
@@ -166,10 +245,16 @@ def kernelize(instance: STInstance,
               c_s: Optional[np.ndarray] = None,
               c_t: Optional[np.ndarray] = None,
               rules: Sequence[str] = RULES,
-              max_cycles: int = 200) -> Kernel:
+              max_cycles: int = 200,
+              track: bool = True) -> Kernel:
     """Reduce ``instance`` (optionally with override weights) to an exact
     kernel.  The kernel preserves the min s-t cut value exactly:
-    ``min_cut(kernel) + base == min_cut(original)``."""
+    ``min_cut(kernel) + base == min_cut(original)``.
+
+    ``track=True`` (default) additionally records a :class:`WeightMap`
+    on the kernel so that later weight drift can be applied through
+    :func:`patch_kernel` without re-running the reduction fixpoint; the
+    tracking overhead is a few extra int64 arrays per pass."""
     if c is not None or c_s is not None or c_t is not None:
         # Bake the overrides into the instance the Kernel keeps as
         # "original": lifting and certificates must be evaluated against
@@ -188,7 +273,8 @@ def kernelize(instance: STInstance,
     from repro.obs.metrics import get_registry
     with trace.span("presolve.kernelize", n=instance.n,
                     m=instance.graph.m) as sp:
-        red = reduce_instance(instance, rules=rules, max_cycles=max_cycles)
+        red = reduce_instance(instance, rules=rules, max_cycles=max_cycles,
+                              track=track)
         kernel = _assemble(instance, red)
         sp.set(kernel_n=kernel.stats.get("kernel_n"),
                kernel_m=kernel.stats.get("kernel_m", 0),
@@ -201,6 +287,98 @@ def kernelize(instance: STInstance,
     if kernel.trivial:
         reg.counter("presolve_trivial_total").inc()
     return kernel
+
+
+def patch_kernel(kernel: Kernel,
+                 old: Tuple[np.ndarray, np.ndarray, np.ndarray],
+                 new: Tuple[np.ndarray, np.ndarray, np.ndarray]
+                 ) -> Optional[Kernel]:
+    """Revalidate ``kernel`` (built under ``old = (c, c_s, c_t)``) against
+    ``new`` weights and return a patched exact kernel, or ``None`` when
+    the drift could have changed a reduction decision.
+
+    Soundness rests on two observations.  First, stopping the fixpoint
+    early is always exact, so the patched kernel need not match what a
+    fresh ``kernelize(new)`` would produce — only the *applied*
+    reductions must remain valid.  Second, every applied reduction is
+    either purely structural (components, degree-0/1 — valid for any
+    nonnegative weights on the same topology) or value-dependent exactly
+    on the inputs the tracker poisoned (degree-2 min + journal side,
+    heavy-edge condition, terminal cancellation).  Hence a diff patches
+    through iff no changed entry is ``K_POISON``, no changed terminal
+    entry crosses the support boundary (``K_ABSENT`` becoming positive,
+    or a tracked pseudo-edge dropping to zero — either would change the
+    terminal edge set the rules saw), and no new weight is negative.
+    Everything else applies additively via the :class:`WeightMap`.
+
+    The certificate stays honest automatically: the patched kernel's
+    ``original`` carries the new weights, so ``cut_certificate``
+    recomputes the lifted cut against them on every solve.
+    """
+    wm = kernel.wmap
+    if wm is None:
+        return None
+    c_o, cs_o, ct_o = (np.asarray(a, dtype=np.float64) for a in old)
+    c_n, cs_n, ct_n = (np.asarray(a, dtype=np.float64) for a in new)
+    if (c_o.shape != c_n.shape or cs_o.shape != cs_n.shape
+            or ct_o.shape != ct_n.shape
+            or c_n.shape[0] != wm.edge_kind.shape[0]
+            or cs_n.shape[0] != wm.cs_kind.shape[0]):
+        return None
+    if kernel.instance is not None:
+        kw = np.array(kernel.instance.graph.weight, dtype=np.float64)
+        kcs = np.array(kernel.instance.s_weight, dtype=np.float64)
+        kct = np.array(kernel.instance.t_weight, dtype=np.float64)
+    else:
+        kw = kcs = kct = None
+    base = float(kernel.base)
+
+    def apply(kind, idx, o, nv, terminal):
+        nonlocal base
+        chg = np.flatnonzero(o != nv)
+        if chg.size == 0:
+            return True
+        if np.any(nv[chg] < 0):
+            return False
+        k = kind[chg]
+        if np.any(k == K_POISON) or np.any(k == K_ABSENT):
+            return False
+        if terminal and np.any(nv[chg] <= 0):
+            # A tracked pseudo-edge dropping to zero shrinks the terminal
+            # edge set the rules reasoned over; re-kernelize.  (Graph
+            # edges participate in the reduction regardless of weight,
+            # so they have no such support boundary.)
+            return False
+        d = (nv - o)[chg]
+        for code, tgt in ((K_EDGE, kw), (K_CS, kcs), (K_CT, kct)):
+            sel = k == code
+            if sel.any():
+                if tgt is None:
+                    return False
+                np.add.at(tgt, idx[chg[sel]], d[sel])
+        b = k == K_BASE
+        if b.any():
+            base += float(d[b].sum())
+        return True
+
+    if not (apply(wm.edge_kind, wm.edge_idx, c_o, c_n, False)
+            and apply(wm.cs_kind, wm.cs_idx, cs_o, cs_n, True)
+            and apply(wm.ct_kind, wm.ct_idx, ct_o, ct_n, True)):
+        return None
+    og = kernel.original.graph
+    original = STInstance(
+        graph=EdgeList(src=og.src, dst=og.dst, weight=c_n, n=og.n),
+        s_weight=cs_n, t_weight=ct_n)
+    kinst = kernel.instance
+    if kinst is not None:
+        kinst = STInstance(
+            graph=EdgeList(src=kinst.graph.src, dst=kinst.graph.dst,
+                           weight=kw, n=kinst.graph.n),
+            s_weight=kcs, t_weight=kct)
+    stats = dict(kernel.stats)
+    stats["patched"] = stats.get("patched", 0) + 1
+    return dataclasses.replace(kernel, original=original, instance=kinst,
+                               base=base, stats=stats)
 
 
 # ---------------------------------------------------------------------------

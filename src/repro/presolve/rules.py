@@ -23,6 +23,14 @@ Rule catalogue (each exact; safety argument in docs/API.md):
     rule: an isolated node or a stray component contains neither
     terminal and merges into S with zero cut contribution.
 
+``terminal_cancel``
+    A node u with both a source edge (u,S,ws) and a sink edge (u,T,wt)
+    pays min(ws, wt) in every s-t cut — whichever side u takes, the
+    opposite terminal's edge is cut.  The minimum moves into ``base``
+    and only |ws - wt| survives on the heavier terminal's side.  On
+    dense-terminal instances this strips most terminal edges before the
+    degree rules run.
+
 ``degree1``
     A non-terminal node u with a single incident edge (u, x, w) can
     always sit on x's side of the cut (moving it there removes w from
@@ -65,8 +73,20 @@ import numpy as np
 from ..graphs.structures import STInstance, canonicalize_edges
 
 #: Default rule order; ``components`` first so later rules never see a
-#: graph where S or T is unreachable.
-RULES: Tuple[str, ...] = ("components", "degree1", "degree2", "heavy")
+#: graph where S or T is unreachable; ``terminal_cancel`` early so
+#: dense-terminal instances shed their terminal edges before the
+#: degree rules count incident edges.
+RULES: Tuple[str, ...] = ("components", "terminal_cancel", "degree1",
+                          "degree2", "heavy")
+
+#: ``input_slot`` sentinels (weight-provenance tracking, ``track=True``):
+#: where an input edge's weight currently lives when it no longer maps to
+#: a canonical edge slot.
+IN_DROPPED = -1   # became a self-loop — weight is irrelevant to any cut
+IN_BASE = -2      # folded into ``base`` (S-T edge)
+IN_POISON = -3    # fed a value-dependent rule decision (degree2 min /
+                  # journal, heavy condition, terminal_cancel min) — a
+                  # later weight change here invalidates kernel patching
 
 
 @dataclasses.dataclass
@@ -90,6 +110,13 @@ class Reduction:
     base: float               # direct S-T weight (constant cut offset)
     st_connected: bool
     stats: Dict[str, int]
+    #: With ``track=True``: for each input edge (m graph edges, then the
+    #: ``si`` source pseudo-edges, then the ``ti`` sink pseudo-edges) the
+    #: surviving canonical slot its weight flowed into, or one of the
+    #: IN_* sentinels.  ``None`` when tracking was off.
+    input_slot: Optional[np.ndarray] = None   # int64[m + |si| + |ti|]
+    si: Optional[np.ndarray] = None           # int64 — nodes with c_s > 0
+    ti: Optional[np.ndarray] = None           # int64 — nodes with c_t > 0
 
     @property
     def n_total(self) -> int:
@@ -146,7 +173,7 @@ def _canonicalize(parent: np.ndarray, eu: np.ndarray, ev: np.ndarray,
 class _State:
     """Mutable reduction state shared by the rule passes."""
 
-    def __init__(self, n: int, eu, ev, ew):
+    def __init__(self, n: int, eu, ev, ew, track: bool = False):
         self.n = n
         self.S, self.T = n, n + 1
         self.parent = np.arange(n + 2, dtype=np.int64)
@@ -155,15 +182,50 @@ class _State:
         self.eu, self.ev, self.ew = eu, ev, ew
         self.base = 0.0
         self.st_connected = True
+        # input-edge -> current canonical slot (weight provenance)
+        self.slot: Optional[np.ndarray] = (
+            np.arange(eu.shape[0], dtype=np.int64) if track else None)
         self.stats: Dict[str, int] = {
-            "components": 0, "degree1": 0, "degree2": 0,
-            "heavy": 0, "cycles": 0,
+            "components": 0, "terminal_cancel": 0, "degree1": 0,
+            "degree2": 0, "heavy": 0, "cycles": 0,
         }
 
+    def apply_slot_code(self, code: np.ndarray) -> None:
+        """Remap live slot references through ``code`` (old slot -> new
+        slot or sentinel); sentinel entries are left untouched."""
+        live = self.slot >= 0
+        self.slot[live] = code[self.slot[live]]
+
+    def poison_slots(self, slot_mask: np.ndarray) -> None:
+        """Mark inputs whose weight currently sits in a masked slot as
+        having fed a value-dependent decision."""
+        live = self.slot >= 0
+        hit = np.zeros(self.slot.shape[0], dtype=bool)
+        hit[live] = slot_mask[self.slot[live]]
+        self.slot[hit] = IN_POISON
+
     def canonicalize(self) -> None:
-        self.eu, self.ev, self.ew, badd = _canonicalize(
-            self.parent, self.eu, self.ev, self.ew, self.S, self.T)
-        self.base += badd
+        if self.slot is None:
+            self.eu, self.ev, self.ew, badd = _canonicalize(
+                self.parent, self.eu, self.ev, self.ew, self.S, self.T)
+            self.base += badd
+            return
+        _compress(self.parent)
+        ru, rv = self.parent[self.eu], self.parent[self.ev]
+        lo = np.minimum(ru, rv)
+        hi = np.maximum(ru, rv)
+        stm = (lo == self.S) & (hi == self.T)
+        if stm.any():
+            self.base += float(self.ew[stm].sum())
+        keep = ~stm
+        lo2, hi2, w2, emap = canonicalize_edges(
+            lo[keep], hi[keep], self.ew[keep], self.T + 1,
+            merge="sum", return_map=True)
+        code = np.empty(self.eu.shape[0], dtype=np.int64)
+        code[stm] = IN_BASE
+        code[keep] = np.where(emap >= 0, emap, IN_DROPPED)
+        self.apply_slot_code(code)
+        self.eu, self.ev, self.ew = lo2, hi2, w2
 
     def degrees(self) -> np.ndarray:
         n_total = self.n + 2
@@ -258,6 +320,12 @@ def _rule_degree2(st: _State) -> bool:
     gone = np.zeros(n + 2, dtype=bool)
     gone[u2] = True
     emask = ~(gone[st.eu] | gone[st.ev])
+    if st.slot is not None:
+        # Both incident weights feed min(wa, wb) and the lift-time
+        # journal comparison — value-dependent, so poison them.
+        code = np.full(st.eu.shape[0], IN_POISON, dtype=np.int64)
+        code[emask] = np.arange(int(emask.sum()), dtype=np.int64)
+        st.apply_slot_code(code)
     st.eu = np.concatenate([st.eu[emask], np.minimum(a, b)])
     st.ev = np.concatenate([st.ev[emask], np.maximum(a, b)])
     st.ew = np.concatenate([st.ew[emask], np.minimum(wa, wb)])
@@ -298,14 +366,66 @@ def _rule_heavy(st: _State) -> bool:
     ok = (claim[mov] == rank) & (claim[oth] == rank)
     if not ok.any():
         return False
+    if st.slot is not None:
+        # The 2w >= wdeg(mov) test reads every weight incident to the
+        # moved endpoint at firing time — poison all of them.
+        movset = np.zeros(n_total, dtype=bool)
+        movset[mov[ok]] = True
+        st.poison_slots(movset[st.eu] | movset[st.ev])
     st.parent[mov[ok]] = oth[ok]
     st.stats["heavy"] += int(ok.sum())
     st.canonicalize()
     return True
 
 
+def _rule_terminal_cancel(st: _State) -> bool:
+    """Cancel paired terminal edges per node (dense-terminal rule).
+
+    A node u carrying both a source edge (u,S,ws) and a sink edge
+    (u,T,wt) pays at least min(ws, wt) in *every* s-t cut: whichever
+    side u lands on, the edge to the opposite terminal is cut.  That
+    minimum moves into ``base`` and only the difference ``|ws - wt|``
+    survives, on the heavier terminal's side.  Exact, and the lift is
+    unaffected (no node merges or removals).
+    """
+    S, T, n = st.S, st.T, st.n
+    n_total = n + 2
+    to_s = st.ev == S
+    to_t = st.ev == T
+    ws = np.zeros(n_total)
+    wt = np.zeros(n_total)
+    # Canonical edges are unique per (lo, hi) pair, so plain assignment
+    # is safe — at most one S slot and one T slot per node.
+    ws[st.eu[to_s]] = st.ew[to_s]
+    wt[st.eu[to_t]] = st.ew[to_t]
+    both = (ws > 0) & (wt > 0)
+    if not both.any():
+        return False
+    st.base += float(np.minimum(ws, wt)[both].sum())
+    drop = (to_s | to_t) & both[st.eu]
+    keep = ~drop
+    if st.slot is not None:
+        # min(ws, wt) and the surviving side both depend on the two
+        # terminal weights — poison the dropped slots, reindex the rest.
+        code = np.full(st.eu.shape[0], IN_POISON, dtype=np.int64)
+        code[keep] = np.arange(int(keep.sum()), dtype=np.int64)
+        st.apply_slot_code(code)
+    fired = np.nonzero(both)[0]
+    diff = ws[fired] - wt[fired]
+    nz = diff != 0
+    new_u = fired[nz]
+    new_v = np.where(diff[nz] > 0, S, T).astype(np.int64)
+    st.eu = np.concatenate([st.eu[keep], new_u])
+    st.ev = np.concatenate([st.ev[keep], new_v])
+    st.ew = np.concatenate([st.ew[keep], np.abs(diff[nz])])
+    st.stats["terminal_cancel"] += int(fired.size)
+    st.canonicalize()
+    return True
+
+
 _RULE_FNS = {
     "components": _rule_components,
+    "terminal_cancel": _rule_terminal_cancel,
     "degree1": _rule_degree1,
     "degree2": _rule_degree2,
     "heavy": _rule_heavy,
@@ -317,12 +437,22 @@ def reduce_instance(instance: STInstance,
                     c_s: Optional[np.ndarray] = None,
                     c_t: Optional[np.ndarray] = None,
                     rules: Sequence[str] = RULES,
-                    max_cycles: int = 200) -> Reduction:
+                    max_cycles: int = 200,
+                    track: bool = False) -> Reduction:
     """Run the enabled reduction ``rules`` to fixpoint (or ``max_cycles``).
 
     ``c``/``c_s``/``c_t`` override the instance's weights (same shapes);
     by default the instance's own weights are reduced.  Zero-weight
     terminal entries simply produce no terminal edge.
+
+    ``track=True`` records weight provenance: ``Reduction.input_slot``
+    maps every input edge (graph edges, then source pseudo-edges for the
+    ``si`` nodes, then sink pseudo-edges for ``ti``) to the surviving
+    canonical slot its weight flowed into, or an ``IN_*`` sentinel.
+    This is what makes kernels patchable under weight drift — an input
+    whose slot is not ``IN_POISON`` never influenced a value-dependent
+    rule decision, so its weight can change freely without invalidating
+    any applied reduction.
     """
     for r in rules:
         if r not in _RULE_FNS:
@@ -342,7 +472,7 @@ def reduce_instance(instance: STInstance,
                          np.full(ti.size, T, dtype=np.int64)])
     ew = np.concatenate([c, c_s[si], c_t[ti]])
 
-    st = _State(n, eu, ev, ew)
+    st = _State(n, eu, ev, ew, track=track)
     st.canonicalize()
     fns = [_RULE_FNS[r] for r in rules]
     idle = 0
@@ -361,4 +491,5 @@ def reduce_instance(instance: STInstance,
     return Reduction(n=n, parent=st.parent, removed=st.removed,
                      journal=journal, eu=st.eu, ev=st.ev, ew=st.ew,
                      base=st.base, st_connected=st.st_connected,
-                     stats=dict(st.stats))
+                     stats=dict(st.stats), input_slot=st.slot,
+                     si=si, ti=ti)

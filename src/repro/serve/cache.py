@@ -79,6 +79,21 @@ class SessionCache:
             self._instances.setdefault(key, instance)
         return key
 
+    def update_instance(self, key: str, instance: STInstance) -> None:
+        """Replace ``key``'s stored instance with a same-topology,
+        new-weights one and drop any cached session, so the next ``get``
+        stages the new weights.  Raises if the topology actually changed
+        (different fingerprint) — that is a new key, not an update."""
+        if topology_fingerprint(instance) != key:
+            raise ValueError("update_instance got an instance whose topology "
+                             "does not match the key; register() it instead")
+        with self._lock:
+            if key not in self._instances:
+                raise KeyError(f"unknown topology key {key!r}; register the "
+                               f"instance first")
+            self._instances[key] = instance
+            self._sessions.pop(key, None)
+
     def known(self, key: str) -> bool:
         with self._lock:
             return key in self._instances

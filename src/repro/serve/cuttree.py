@@ -14,6 +14,8 @@ stays, so an evicted topology rebuilds (at build cost) on its next query.
     key = svc.register(instance)
     svc.min_cut(key, u, v)          # ~µs after the first call built the tree
     svc.global_min_cut(key)         # (value, certified side)
+    svc.update_weights(key, c_new)  # drift: repair the cached tree in
+                                    # place, else invalidate for rebuild
     svc.stats()                     # build/query counters + latency p50/p99
 
 Thread-safety matches the rest of ``repro.serve``: callers may query from
@@ -30,9 +32,9 @@ import numpy as np
 
 from repro.core.irls import IRLSConfig
 from repro.core.session import MinCutSession, Problem
-from repro.cuttree import CutTree, build_cut_tree
+from repro.cuttree import CutTree, build_cut_tree, repair_cut_tree
 from repro.cuttree.gusfield import DEFAULT_CFG
-from repro.graphs.structures import STInstance
+from repro.graphs.structures import EdgeList, STInstance
 
 from .cache import CacheStats, SessionCache
 from .metrics import percentile
@@ -74,6 +76,13 @@ class CutTreeService:
         self._queries = 0
         self._pair_solves = 0
         self._build_s_total = 0.0
+        # weight-drift accounting: update_weights() repairs cached trees
+        # when the reuse proofs go through, else invalidates them
+        self._weight_updates = 0
+        self._repairs = 0
+        self._invalidations = 0
+        self._repair_reused = 0
+        self._repair_solved = 0
 
     # -- topology lifecycle ----------------------------------------------------
     def register(self, instance: STInstance) -> str:
@@ -131,6 +140,65 @@ class CutTreeService:
                 self.tree_stats.evictions += 1
             return t
 
+    def update_weights(self, topo: Union[str, STInstance],
+                       weights) -> str:
+        """New edge weights for a registered topology (same edges/nodes).
+
+        Returns what happened to the cached tree:
+
+        * ``"repaired"``    — the cached tree was repaired in place
+          (``repair_cut_tree``: reuse-proven edges keep their stored cuts,
+          the rest re-solve exactly), so queries stay warm
+        * ``"invalidated"`` — no cached tree, or it could not be repaired
+          (no stored sides / order, or approximate values) — the next
+          query rebuilds at full cost from the new weights
+        * ``"unchanged"``   — the weights are bit-identical to the stored
+          ones; nothing to do
+
+        Either way the registered instance (and its cached session) is
+        switched to the new weights, so later builds see them too.
+        """
+        key = self._resolve(topo)
+        inst = self.sessions.instance(key)
+        c_old = np.asarray(inst.graph.weight, dtype=np.float64)
+        c_new = np.asarray(weights, dtype=np.float64)
+        if c_new.shape != c_old.shape:
+            raise ValueError(f"weights have shape {c_new.shape}, topology "
+                             f"has {c_old.shape[0]} edges")
+        if np.array_equal(c_old, c_new):
+            return "unchanged"
+        inst_new = STInstance(
+            graph=EdgeList(src=inst.graph.src, dst=inst.graph.dst,
+                           weight=c_new, n=inst.n),
+            s_weight=inst.s_weight, t_weight=inst.t_weight)
+        with self._lock:
+            self._weight_updates += 1
+            t = self._trees.get(key)
+        repaired: Optional[CutTree] = None
+        if t is not None:
+            try:
+                # exact re-solves regardless of the build solver: there are
+                # few of them (that's the point of repair) and they keep the
+                # tree's values exact, so the NEXT drift can repair again
+                repaired = repair_cut_tree(inst_new, t, c_old, c_new,
+                                           solver="exact")
+            except ValueError:
+                repaired = None
+        self.sessions.update_instance(key, inst_new)
+        with self._lock:
+            if repaired is not None:
+                self._trees[key] = repaired
+                self._trees.move_to_end(key)
+                self._repairs += 1
+                self._repair_reused += int(repaired.meta["n_reused"])
+                self._repair_solved += int(repaired.meta["n_solves"])
+                self._pair_solves += int(repaired.meta["n_solves"])
+                self._build_s_total += float(repaired.meta["t_repair_s"])
+                return "repaired"
+            self._trees.pop(key, None)
+            self._invalidations += 1
+            return "invalidated"
+
     # -- queries ---------------------------------------------------------------
     def _timed(self, fn, *args):
         t = self.tree(args[0])
@@ -171,6 +239,11 @@ class CutTreeService:
                 "queries": self._queries,
                 "pair_solves": self._pair_solves,
                 "build_s_total": self._build_s_total,
+                "weight_updates": self._weight_updates,
+                "repairs": self._repairs,
+                "invalidations": self._invalidations,
+                "repair_reused": self._repair_reused,
+                "repair_solved": self._repair_solved,
             }
         for p in (50, 99):
             out[f"query_p{p}_us"] = percentile(samples, p) * 1e6

@@ -173,6 +173,10 @@ class MinCutServer:
         self._warm_capacity = warm_capacity
         self._warm_hits = 0
         self._warm_misses = 0
+        # sharded sessions run a fixed cold schedule, so tenant warm-start
+        # state is deliberately not kept there; count the exclusions so the
+        # gap shows up in stats()["warm"] instead of reading as misses
+        self._warm_sharded_skips = 0
         self._warm_lock = threading.Lock()
         self.metrics = ServeMetrics()
         # cross-request solver telemetry (PCG spend, phase walls, early-exit
@@ -269,7 +273,8 @@ class MinCutServer:
         with self._warm_lock:
             out["warm"] = {"entries": len(self._warm),
                            "hits": self._warm_hits,
-                           "misses": self._warm_misses}
+                           "misses": self._warm_misses,
+                           "sharded_excluded": self._warm_sharded_skips}
         out["telemetry"] = self.telemetry.snapshot()
         out["workers"] = self.worker_stats()
         return out
@@ -376,8 +381,14 @@ class MinCutServer:
         """Stored voltages for (tenant, topology), None on miss.
 
         The sharded backend runs a fixed cold schedule only, so warm
-        state is neither consulted nor recorded there."""
-        if tenant is None or self.backend == "sharded":
+        state is neither consulted nor recorded there — tenants still get
+        the delta-staging fast path, just not warm voltages.  Counted as
+        ``sharded_excluded`` (not a miss) in ``stats()["warm"]``."""
+        if tenant is None:
+            return None
+        if self.backend == "sharded":
+            with self._warm_lock:
+                self._warm_sharded_skips += 1
             return None
         with self._warm_lock:
             v0 = self._warm.get((tenant, topo_key))
@@ -416,11 +427,17 @@ class MinCutServer:
                     sess = self.cache.get(topo_key)
                     v0 = self._warm_lookup(tenant, topo_key)
                 t_dispatch = time.perf_counter()
+                # tenant doubles as the weight-sequence identity for the
+                # session's delta-staging cache: a tenant replaying "same
+                # topology, drifting weights" restages only changed ELL
+                # slots (and patches presolve kernels) between its solves
+                dks = None if tenant is None else [tenant] * len(reqs)
                 if self.backend == "scanned" and not presolve:
                     results = sess.solve_batch(
                         [r.weights for r in reqs], rounding=rounding, cfg=cfg,
                         pad_to=batch.bucket,
-                        warm_from=None if v0 is None else [v0] * len(reqs))
+                        warm_from=None if v0 is None else [v0] * len(reqs),
+                        delta_keys=dks)
                 elif self.backend == "scanned":
                     # presolve batches group by kernel topology inside the
                     # session (and run cold: the kernel basis shifts per
@@ -428,14 +445,15 @@ class MinCutServer:
                     # batch API)
                     results = sess.solve_batch([r.weights for r in reqs],
                                                rounding=rounding, cfg=cfg,
-                                               presolve=True)
+                                               presolve=True, delta_keys=dks)
                 else:
                     # host/sharded: no vmapped batch program — the batch
                     # still amortizes the cached session, one solve/request
                     results = [sess.solve(weights=r.weights,
                                           rounding=rounding,
                                           cfg=cfg, presolve=presolve,
-                                          warm_from=v0) for r in reqs]
+                                          warm_from=v0, delta_key=tenant)
+                               for r in reqs]
             except Exception as e:
                 now = time.perf_counter()
                 for r in reqs:

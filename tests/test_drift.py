@@ -1,0 +1,277 @@
+"""Incremental pipeline under weight drift: delta ELL staging, kernel
+patching, cut-tree repair, and the serving wiring on top of them.
+
+The contract everywhere is "incremental == from-scratch": delta-staged
+ELL tables must be BIT-equal to a full restage, patched kernels must
+price cuts exactly like re-kernelizing, and repaired cut trees must
+answer every pair like a fresh build.
+"""
+import numpy as np
+import pytest
+
+import repro.core.laplacian as lap
+from repro.core import IRLSConfig, MinCutSession, Problem, max_flow
+from repro.core.session import as_weights
+from repro.cuttree import build_cut_tree, repair_cut_tree
+from repro.graphs import generators as gen
+from repro.graphs.structures import EdgeList, STInstance
+
+ELL_CFG = IRLSConfig(n_irls=4, pcg_max_iters=15, precond="jacobi",
+                     n_blocks=1, layout="ell", fuse_edge_sweep=True)
+
+
+def _grid(side, seed=0):
+    g = gen.grid_2d(side, side, seed=seed)
+    return gen.segmentation_instance(g, (side, side), seed=seed + 1)
+
+
+def _with_weights(inst, c):
+    return STInstance(graph=EdgeList(src=inst.graph.src, dst=inst.graph.dst,
+                                     weight=c, n=inst.n),
+                      s_weight=inst.s_weight, t_weight=inst.t_weight)
+
+
+def _drift(rng, c, k, upward=False):
+    c2 = c.copy()
+    idx = rng.choice(c2.size, size=k, replace=False)
+    z = rng.normal(0.0, 0.3, size=k)
+    c2[idx] *= np.exp(np.abs(z) if upward else z)
+    return c2
+
+
+# ---------------------------------------------------------------------------
+# delta ELL staging: bit-equality vs full restage
+# ---------------------------------------------------------------------------
+
+def test_ell_delta_staging_bit_equal_random_sparse_diffs():
+    """ell_edge_weights_delta over random sparse edge diffs reproduces the
+    full restage bit for bit, chained across many steps."""
+    inst = _grid(8, seed=0)
+    prob = Problem.build(inst, n_blocks=1)
+    plan = prob.ell_plan()
+    dmap = prob.ell_delta_map()
+    rng = np.random.default_rng(0)
+    c = np.asarray(inst.graph.weight, dtype=np.float64).copy()
+    staged = lap.ell_edge_weights(plan, np.asarray(c, dtype=np.float32))
+    for step in range(10):
+        c_new = _drift(rng, c, k=int(rng.integers(1, 12)))
+        changed = np.flatnonzero(c != c_new)
+        staged = lap.ell_edge_weights_delta(dmap, staged, c_new, changed)
+        full = lap.ell_edge_weights(plan, np.asarray(c_new,
+                                                     dtype=np.float32))
+        assert np.array_equal(np.asarray(staged), np.asarray(full)), step
+        c = c_new
+
+
+@pytest.mark.parametrize("backend", ["host", "scanned"])
+def test_session_delta_key_solves_bit_equal(backend):
+    """solve(delta_key=...) must return bit-identical voltages and cuts to
+    the same solve without a key, across a drift sequence."""
+    inst = _grid(6, seed=1)
+    sess = MinCutSession(Problem.build(inst, n_blocks=1), ELL_CFG,
+                         backend=backend)
+    w0 = as_weights(inst)
+    rng = np.random.default_rng(1)
+    c = np.asarray(inst.graph.weight, dtype=np.float64).copy()
+    for step in range(4):
+        c = _drift(rng, c, k=3)
+        w = (c.copy(), w0.c_s, w0.c_t)
+        rf = sess.solve(weights=w, rounding="sweep")
+        rd = sess.solve(weights=w, rounding="sweep", delta_key="tenant")
+        assert np.array_equal(rf.voltages, rd.voltages), step
+        assert rf.cut.cut_value == rd.cut.cut_value, step
+    # the delta path actually engaged (first solve cold, rest sparse)
+    assert rd.telemetry["delta"]["mode"] == "delta"
+
+
+def test_sharded_delta_refill_matches_full():
+    """Sharded sessions with delta_key restage only changed halo slots;
+    cuts must match the fresh-session answer on the same weights."""
+    inst = _grid(6, seed=2)
+    cfg = IRLSConfig(n_irls=8, pcg_max_iters=30, precond="jacobi",
+                     n_blocks=1)
+    sess = MinCutSession(Problem.build(inst, n_blocks=1), cfg,
+                         backend="sharded")
+    w0 = as_weights(inst)
+    rng = np.random.default_rng(2)
+    c = np.asarray(inst.graph.weight, dtype=np.float64).copy()
+    for step in range(3):
+        c = _drift(rng, c, k=4)
+        w = (c.copy(), w0.c_s, w0.c_t)
+        rd = sess.solve(weights=w, delta_key="tenant", rounding="sweep")
+        rf = sess.solve(weights=w, rounding="sweep")
+        assert rf.cut.cut_value == pytest.approx(rd.cut.cut_value,
+                                                 rel=1e-6), step
+
+
+# ---------------------------------------------------------------------------
+# kernel patching: exactness + outcome telemetry
+# ---------------------------------------------------------------------------
+
+def test_presolve_delta_key_patches_and_stays_exact():
+    """Drift-aware kernel reuse: patched kernels price cuts exactly like
+    the Dinic oracle, and the session's outcome telemetry records
+    reuse/patch/rebuild."""
+    inst = _grid(12, seed=3)
+    cfg = IRLSConfig(n_irls=25, pcg_max_iters=80, precond="jacobi",
+                     n_blocks=1, pcg_tol=1e-8, eps=1e-6)
+    sess = MinCutSession(Problem.build(inst, n_blocks=1), cfg,
+                         backend="host")
+    w0 = as_weights(inst)
+    rng = np.random.default_rng(3)
+    c = np.asarray(inst.graph.weight, dtype=np.float64).copy()
+    for step in range(6):
+        if step:
+            c = _drift(rng, c, k=2)
+        w = (c.copy(), w0.c_s, w0.c_t)
+        res = sess.solve(weights=w, presolve=True, delta_key="tenant")
+        if step == 0:                 # unchanged weights => "reuse"
+            r2 = sess.solve(weights=w, presolve=True, delta_key="tenant")
+            assert r2.telemetry["presolve"]["action"] == "reuse"
+        oracle = max_flow(_with_weights(inst, c)).value
+        assert res.cut.cut_value == pytest.approx(oracle, rel=1e-7), step
+        assert res.telemetry["presolve"]["action"] in ("reuse", "patch",
+                                                       "rebuild")
+    outcomes = sess.telemetry_snapshot()["kernel_outcomes"]
+    assert outcomes["reuse"] >= 1                 # the repeated step 0
+    assert outcomes["patch"] >= 1                 # sparse drift patched
+    assert sum(outcomes.values()) == 7
+
+
+# ---------------------------------------------------------------------------
+# cut-tree repair: all-pairs equality vs from-scratch builds
+# ---------------------------------------------------------------------------
+
+def _assert_trees_match(repaired, fresh, n):
+    a, b = repaired.min_cut_matrix(), fresh.min_cut_matrix()
+    off = ~np.eye(n, dtype=bool)
+    assert np.allclose(a[off], b[off], rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("upward", [True, False])
+def test_repair_matches_fresh_build_over_drift_sequence(upward):
+    """repair_cut_tree == build_cut_tree on ALL pairs after every step of
+    a seeded drift sequence, chaining repairs (each repaired tree is the
+    base for the next step)."""
+    inst = _grid(7, seed=4)
+    n = inst.n
+    c = np.asarray(inst.graph.weight, dtype=np.float64).copy()
+    tree = build_cut_tree(inst, solver="exact")
+    rng = np.random.default_rng(4 + upward)
+    for step in range(4):
+        c_new = _drift(rng, c, k=max(1, inst.graph.m // 30), upward=upward)
+        inst_new = _with_weights(inst, c_new)
+        tree = repair_cut_tree(inst_new, tree, c, c_new, solver="exact")
+        _assert_trees_match(tree, build_cut_tree(inst_new, solver="exact"),
+                            n)
+        c, inst = c_new, inst_new
+    assert tree.meta["repaired"] and tree.meta["n_reused"] > 0
+
+
+def test_repair_rejects_unrepairable_trees():
+    inst = _grid(5, seed=5)
+    c = np.asarray(inst.graph.weight, dtype=np.float64)
+    c2 = c * 1.1
+    no_sides = build_cut_tree(inst, solver="exact", store_sides=False)
+    with pytest.raises(ValueError, match="store_sides"):
+        repair_cut_tree(_with_weights(inst, c2), no_sides, c, c2)
+    approx = build_cut_tree(inst, solver="irls", refine=False)
+    with pytest.raises(ValueError, match="approximate"):
+        repair_cut_tree(_with_weights(inst, c2), approx, c, c2)
+
+
+def test_repair_irls_resolves_match_exact_values():
+    """solver="irls" repair re-solves through the batched wave machinery;
+    with a strong schedule the repaired tree still matches the exact
+    rebuild."""
+    inst = _grid(5, seed=6)
+    n = inst.n
+    cfg = IRLSConfig(n_irls=40, pcg_max_iters=120, precond="jacobi",
+                     n_blocks=1, pcg_tol=1e-8, eps=1e-6)
+    c = np.asarray(inst.graph.weight, dtype=np.float64).copy()
+    tree = build_cut_tree(inst, solver="exact")
+    rng = np.random.default_rng(6)
+    c_new = _drift(rng, c, k=2, upward=True)
+    inst_new = _with_weights(inst, c_new)
+    rep = repair_cut_tree(inst_new, tree, c, c_new, solver="irls", cfg=cfg,
+                          rounding="sweep")
+    fresh = build_cut_tree(inst_new, solver="exact")
+    a, b = rep.min_cut_matrix(), fresh.min_cut_matrix()
+    off = ~np.eye(n, dtype=bool)
+    assert np.allclose(a[off], b[off], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# serving wiring
+# ---------------------------------------------------------------------------
+
+def test_cut_tree_service_update_weights_repairs_and_invalidates():
+    from repro.serve import CutTreeService
+
+    inst = _grid(6, seed=7)
+    svc = CutTreeService(solver="exact")
+    key = svc.register(inst)
+    svc.min_cut(key, 0, inst.n - 1)               # builds the tree
+    rng = np.random.default_rng(7)
+    c = np.asarray(inst.graph.weight, dtype=np.float64).copy()
+    c2 = _drift(rng, c, k=4, upward=True)
+    assert svc.update_weights(key, c2) == "repaired"
+    fresh = build_cut_tree(_with_weights(inst, c2), solver="exact")
+    _assert_trees_match(svc.tree(key), fresh, inst.n)
+    assert svc.update_weights(key, c2) == "unchanged"
+    st = svc.stats()
+    assert st["repairs"] == 1 and st["weight_updates"] == 1
+    # a topology with no cached tree invalidates instead
+    key2 = svc.register(_grid(5, seed=8))
+    inst2 = svc.sessions.instance(key2)
+    assert svc.update_weights(
+        key2, np.asarray(inst2.graph.weight) * 2.0) == "invalidated"
+
+
+def test_server_tenant_requests_use_delta_staging():
+    """MinCutServer threads tenant identity through as the session's
+    delta_key: a drifting tenant's later solves restage sparsely, and the
+    results match an identical no-tenant request bit for bit."""
+    from repro.serve import MinCutServer
+
+    inst = _grid(6, seed=9)
+    cfg = IRLSConfig(n_irls=4, pcg_max_iters=15, precond="jacobi",
+                     n_blocks=1, layout="ell", fuse_edge_sweep=True)
+    rng = np.random.default_rng(9)
+    c = np.asarray(inst.graph.weight, dtype=np.float64).copy()
+    # warm_capacity=0: tenant requests also warm-start from their previous
+    # solution, which changes the iteration trajectory — evicting warm
+    # state immediately isolates the delta-staging path, which must be
+    # bit-equal to the no-tenant full restage
+    with MinCutServer(cfg=cfg, max_batch=1, n_workers=1,
+                      warm_capacity=0) as server:
+        key = server.register(inst)
+        for step in range(3):
+            c = _drift(rng, c, k=3)
+            w = (c.copy(), np.asarray(inst.s_weight),
+                 np.asarray(inst.t_weight))
+            rt = server.submit(key, w, tenant="t0").result(timeout=120)
+            rp = server.submit(key, w).result(timeout=120)
+            assert np.array_equal(rt.voltages, rp.voltages), step
+        tel = rt.telemetry
+    assert tel["delta"]["mode"] == "delta"
+
+
+def test_server_warm_stats_count_sharded_exclusion():
+    """The warm-start LRU deliberately excludes the sharded backend; the
+    exclusion must be visible in stats()["warm"], not silent."""
+    from repro.serve import MinCutServer
+
+    inst = _grid(5, seed=10)
+    cfg = IRLSConfig(n_irls=4, pcg_max_iters=15, precond="jacobi",
+                     n_blocks=1)
+    with MinCutServer(cfg=cfg, backend="sharded", max_batch=1,
+                      n_workers=1) as server:
+        key = server.register(inst)
+        w = (np.asarray(inst.graph.weight, dtype=np.float64),
+             np.asarray(inst.s_weight), np.asarray(inst.t_weight))
+        server.submit(key, w, tenant="t0").result(timeout=300)
+        server.submit(key, w, tenant="t0").result(timeout=300)
+        st = server.stats()["warm"]
+    assert st["sharded_excluded"] == 2
+    assert st["entries"] == 0 and st["hits"] == 0
